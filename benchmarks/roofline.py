@@ -1,0 +1,96 @@
+"""Roofline analysis (deliverable g): the three terms per (arch x shape).
+
+Reads the dry-run JSON (launch/dryrun.py --out) and derives, per cell:
+
+    compute term    = HLO_FLOPs / (chips x 197 TF/s bf16)
+    memory term     = HLO_bytes / (chips x 819 GB/s)
+    collective term = collective_bytes / (chips x 50 GB/s/link)
+
+cost_analysis and the HLO collective scan are PER-DEVICE quantities after
+SPMD partitioning, so 'chips' is already divided out — the terms below use
+the per-device numbers against per-chip peaks directly.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.roofline dryrun_results.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import Dict, List
+
+from repro.launch.mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
+
+COLL_KEYS = ("coll_all-gather", "coll_all-reduce", "coll_reduce-scatter",
+             "coll_all-to-all", "coll_collective-permute")
+
+
+def analyze(records: List[Dict]) -> List[Dict]:
+    out = []
+    for r in records:
+        if r.get("status") != "OK":
+            out.append({"arch": r["arch"], "shape": r["shape"],
+                        "mesh": r["mesh"], "status": r.get("status"),
+                        "note": r.get("reason", r.get("error", ""))[:80]})
+            continue
+        cost = r.get("cost") or r["cost_raw"]
+        flops = cost.get("flops", 0.0)
+        byts = cost.get("bytes_accessed", 0.0)
+        coll = sum(cost.get(k, 0.0) for k in COLL_KEYS)
+
+        t_compute = flops / PEAK_FLOPS_BF16
+        t_memory = byts / HBM_BW
+        t_coll = coll / ICI_BW_PER_LINK
+        terms = {"compute": t_compute, "memory": t_memory,
+                 "collective": t_coll}
+        dominant = max(terms, key=terms.get)
+        bound = max(terms.values())
+        # roofline fraction: how much of the bound step is useful compute
+        frac = t_compute / bound if bound > 0 else 0.0
+
+        meta = r.get("meta", {})
+        model_flops = None
+        if "model_active_params" in meta and "tokens" in meta:
+            fwd_mult = 2 if meta.get("step_kind") == "train" else 0
+            # 6*N*D for train (fwd+bwd), 2*N*D for inference
+            model_flops = (6 if meta.get("step_kind") == "train" else 2) \
+                * meta["model_active_params"] * meta["tokens"]
+        elif "model_flops_fwd" in meta:
+            model_flops = meta["model_flops_fwd"] * (
+                3 if meta.get("step_kind") == "train" else 1)
+
+        chips = 512 if r["mesh"] == "2x16x16" else 256
+        useful_ratio = (model_flops / chips / flops
+                        if model_flops and flops else None)
+
+        out.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "status": "OK",
+            "t_compute_s": round(t_compute, 6),
+            "t_memory_s": round(t_memory, 6),
+            "t_collective_s": round(t_coll, 6),
+            "dominant": dominant,
+            "roofline_fraction": round(frac, 4),
+            "useful_flops_ratio": (round(useful_ratio, 4)
+                                   if useful_ratio else ""),
+            "hbm_peak_GB": round(r["memory"]["peak_bytes"] / 1e9, 2),
+            "fits_16GB": r["memory"]["peak_bytes"] <= 16e9,
+        })
+    return out
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.json"
+    with open(path) as f:
+        records = json.load(f)
+    rows = analyze(records)
+    cols = ["arch", "shape", "mesh", "status", "t_compute_s", "t_memory_s",
+            "t_collective_s", "dominant", "roofline_fraction",
+            "useful_flops_ratio", "hbm_peak_GB", "fits_16GB"]
+    print(",".join(cols))
+    for row in rows:
+        print(",".join(str(row.get(c, "")) for c in cols))
+
+
+if __name__ == "__main__":
+    main()

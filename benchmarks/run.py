@@ -1,0 +1,58 @@
+"""Benchmark runner: one harness per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig1a,fig3,...]
+
+Prints CSV per figure.  The roofline table is separate
+(benchmarks/roofline.py — it consumes the dry-run JSON).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import paper_figures as pf
+
+HARNESSES = {
+    "fig1a": pf.fig1a_async_vs_sync_convergence,
+    "fig1b": pf.fig1b_update_distribution,
+    "fig1d": pf.fig1d_serializable_vs_racing,
+    "fig3": pf.fig3_pipeline_sweep,
+    "fig4": pf.fig4_snapshot_overhead,
+    "fig6": pf.fig6_scaling_and_intensity,
+    "fig9a": pf.fig9a_dynamic_vs_static_als,
+    "table2": pf.table2_throughput,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated harness names")
+    args = ap.parse_args()
+    names = (args.only.split(",") if args.only else list(HARNESSES))
+
+    failures = 0
+    for name in names:
+        fn = HARNESSES[name]
+        print(f"\n===== {name}: {fn.__doc__.splitlines()[0]} =====",
+              flush=True)
+        t0 = time.time()
+        try:
+            records = fn()
+        except Exception as e:  # pragma: no cover
+            failures += 1
+            print(f"FAILED: {type(e).__name__}: {e}")
+            continue
+        if records:
+            cols = sorted({k for r in records for k in r})
+            print(",".join(cols))
+            for r in records:
+                print(",".join(str(r.get(c, "")) for c in cols))
+        print(f"({time.time() - t0:.1f}s)")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

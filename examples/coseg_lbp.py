@@ -1,0 +1,46 @@
+"""CoSeg-style loopy BP on the paper's 3D grid MRF (Secs. 4.2.2, 5.2).
+
+    PYTHONPATH=src python examples/coseg_lbp.py
+
+A (scaled-down) version of the paper's 300^3 26-connected synthetic mesh:
+prioritized dynamic LBP with pipeline-length sweep, plus the asynchronous
+Chandy-Lamport snapshot running mid-computation.
+"""
+import numpy as np
+
+from repro.apps.lbp import LoopyBPProgram, lbp_map_labels, make_mrf_graph
+from repro.core import DynamicEngine
+from repro.core.snapshot import AsyncSnapshotDriver, restore_engine_state
+from repro.graphs.generators import grid3d_graph
+
+if __name__ == "__main__":
+    st = grid3d_graph(8, 8, 8, connectivity=26)
+    graph = make_mrf_graph(st, n_states=3, seed=0)
+    print(f"3D MRF: {st.n_vertices} vertices, {st.n_edges} directed edges")
+
+    for pipeline in (64, 256, 1024):
+        prog = LoopyBPProgram(n_states=3, smoothing=1.0)
+        eng = DynamicEngine(prog, graph, pipeline_length=pipeline,
+                            tolerance=1e-3)
+        state = eng.init(graph)
+        state, _ = eng.run(state, max_steps=2000)
+        print(f"pipeline={pipeline:5d}: steps={int(state.step_index):5d} "
+              f"updates={int(state.total_updates):6d}  (Fig. 3(b) knee)")
+
+    # async snapshot mid-run, then restart from it and verify convergence
+    prog = LoopyBPProgram(n_states=3, smoothing=1.0)
+    eng = DynamicEngine(prog, graph, pipeline_length=512, tolerance=1e-3)
+    state = eng.init(graph)
+    driver = AsyncSnapshotDriver(eng)
+    state, snap, trace = driver.run(state, max_steps=2000,
+                                    snapshot_at_step=3)
+    labels_direct = lbp_map_labels(state.graph)
+    assert snap is not None and bool(snap.complete)
+
+    restored = restore_engine_state(eng, graph, snap)
+    restored, _ = eng.run(restored, max_steps=2000)
+    labels_restart = lbp_map_labels(restored.graph)
+    agree = (labels_direct == labels_restart).mean()
+    print(f"async snapshot completed at "
+          f"{next(t['step'] for t in trace if t['snapshot_done_frac'] >= 1)}"
+          f" steps; restart-from-snapshot label agreement: {agree:.1%}")

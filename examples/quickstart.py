@@ -1,0 +1,45 @@
+"""Quickstart: PageRank on a power-law web graph under all three engines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Reproduces the paper's core observation (Fig. 1(a)/(b)): the asynchronous
+engines converge in far fewer vertex updates than synchronous BSP, and most
+vertices converge after a single update.
+"""
+import numpy as np
+
+from repro.apps.pagerank import (PageRankProgram, exact_pagerank,
+                                 make_pagerank_graph)
+from repro.core import BSPEngine, ChromaticEngine, DynamicEngine
+from repro.graphs.generators import power_law_graph
+
+TOL = 1e-6
+
+
+def run(engine_cls, name, graph, prog, **kw):
+    eng = engine_cls(prog, graph, tolerance=TOL, **kw)
+    state = eng.init(graph)
+    state, _ = eng.run(state, max_steps=5000)
+    err = np.abs(np.asarray(state.graph.vertex_data["rank"])
+                 - exact).sum()
+    counts = np.asarray(state.update_count)
+    print(f"{name:28s} updates={int(state.total_updates):7d} "
+          f"L1err={err:.2e}  one-update vertices="
+          f"{(counts <= counts.min() + 1).mean():.0%}")
+    return counts
+
+
+if __name__ == "__main__":
+    st = power_law_graph(2000, avg_degree=8, seed=0)
+    graph = make_pagerank_graph(st)
+    prog = PageRankProgram(alpha=0.15, n_vertices=st.n_vertices)
+    exact = exact_pagerank(st, 0.15, 500)
+
+    print(f"web graph: {st.n_vertices} vertices, {st.n_edges} edges")
+    run(BSPEngine, "BSP (Pregel-style, sync)", graph, prog)
+    run(ChromaticEngine, "Chromatic (async colors)", graph, prog)
+    counts = run(DynamicEngine, "Dynamic (locking-engine)", graph, prog,
+                 pipeline_length=256)
+    hist, _ = np.histogram(counts, bins=[0, 1, 2, 3, 5, 10, 100])
+    print("update-count distribution (Fig. 1(b)):",
+          dict(zip(["0", "1", "2", "3-4", "5-9", "10+"], hist.tolist())))

@@ -1,0 +1,14 @@
+"""The paper's three evaluation applications + the PageRank running example
+(paper Sec. 5), each as a GraphLab VertexProgram."""
+from repro.apps.pagerank import PageRankProgram, make_pagerank_graph
+
+__all__ = ["PageRankProgram", "make_pagerank_graph"]
+
+try:  # optional until all apps land
+    from repro.apps.als import ALSProgram, make_als_graph  # noqa: F401
+    from repro.apps.lbp import LoopyBPProgram, make_mrf_graph  # noqa: F401
+    from repro.apps.coem import CoEMProgram, make_coem_graph  # noqa: F401
+    __all__ += ["ALSProgram", "CoEMProgram", "LoopyBPProgram",
+                "make_als_graph", "make_coem_graph", "make_mrf_graph"]
+except ImportError:
+    pass

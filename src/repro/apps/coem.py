@@ -1,0 +1,119 @@
+"""CoEM for Named Entity Recognition (paper Sec. 5.3).
+
+Bipartite graph: noun-phrases <-> contexts, edge weight = co-occurrence
+count.  Starting from a small labeled seed set, CoEM alternates between
+estimating each noun-phrase's type distribution from its contexts and each
+context's distribution from its noun-phrases:
+
+    p_v = normalize( sum_{u in N(v)} w_uv * p_u )        (v not a seed)
+
+Vertex data: type distribution [K] + seed flag (seeds never change — in the
+paper they anchor the labels).  The paper stresses this app's profile:
+**very light compute per byte** (5.7x fewer cycles/byte than ALS at d=5),
+large vertex data (816 B = 204 f32 types), dense bipartite structure, random
+partitioning — the communication-bound worst case of Fig. 6(b).  The
+per-update FLOP count here is O(deg * K), matching that profile.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.consistency import Consistency
+from repro.core.graph import DataGraph, GraphStructure
+from repro.core.update import ApplyOut, EdgeCtx, VertexProgram
+from repro.graphs.generators import bipartite_graph
+
+
+class CoEMProgram(VertexProgram):
+    combiner = "sum"
+    consistency = Consistency.EDGE
+    schedule_neighbors = True
+
+    def __init__(self, n_types: int):
+        self.k = int(n_types)
+
+    def gather(self, ctx: EdgeCtx):
+        return ctx.edata["w"][:, None] * ctx.src["p"]  # [E, K]
+
+    def apply(self, vertex_data, acc, glob=None) -> ApplyOut:
+        total = jnp.sum(acc, axis=-1, keepdims=True)
+        new_p = acc / jnp.maximum(total, 1e-12)
+        seed = vertex_data["seed"][:, None]
+        new_p = jnp.where(seed > 0.5, vertex_data["p"], new_p)
+        residual = jnp.sum(jnp.abs(new_p - vertex_data["p"]), axis=-1)
+        return ApplyOut({"p": new_p, "seed": vertex_data["seed"]}, residual)
+
+
+def make_coem_graph(
+    n_nps: int,
+    n_contexts: int,
+    n_cooccurrences: int,
+    n_types: int,
+    n_seeds_per_type: int = 5,
+    seed: int = 0,
+    dtype=jnp.float32,
+) -> Tuple[DataGraph, dict]:
+    """Synthetic NELL-like corpus with planted type clusters: noun-phrases
+    of type t co-occur mostly with contexts of type t, so CoEM's propagated
+    labels can be scored against ground truth."""
+    rng = np.random.default_rng(seed)
+    true_np = rng.integers(0, n_types, size=n_nps)
+    true_ctx = rng.integers(0, n_types, size=n_contexts)
+
+    # biased co-occurrence sampling: 80% within-type
+    n_within = int(0.8 * n_cooccurrences)
+    us, vs = [], []
+    by_type_ctx = [np.nonzero(true_ctx == t)[0] for t in range(n_types)]
+    u_all = rng.integers(0, n_nps, size=n_cooccurrences)
+    for i, u in enumerate(u_all):
+        if i < n_within:
+            pool = by_type_ctx[true_np[u]]
+            v = pool[rng.integers(0, pool.size)] if pool.size else rng.integers(0, n_contexts)
+        else:
+            v = rng.integers(0, n_contexts)
+        us.append(u)
+        vs.append(int(v))
+    us, vs = np.asarray(us), np.asarray(vs)
+    key = us.astype(np.int64) * n_contexts + vs
+    uniq, counts = np.unique(key, return_counts=True)
+    us, vs, w_pair = uniq // n_contexts, uniq % n_contexts, counts
+
+    st, _ = GraphStructure.undirected(us, vs + n_nps, n_nps + n_contexts)
+    # per-directed-edge weight from the pair counts
+    s, r = st.senders, st.receivers
+    np_of = np.where(s < n_nps, s, r)
+    ctx_of = np.where(s < n_nps, r, s) - n_nps
+    pair_key = np_of.astype(np.int64) * n_contexts + ctx_of
+    w = w_pair[np.searchsorted(uniq, pair_key)].astype(np.float32)
+
+    n = st.n_vertices
+    p = np.full((n, n_types), 1.0 / n_types, np.float32)
+    seeds = np.zeros(n, np.float32)
+    for t in range(n_types):
+        pool = np.nonzero(true_np == t)[0]
+        chosen = pool[rng.permutation(pool.size)[:n_seeds_per_type]]
+        seeds[chosen] = 1.0
+        p[chosen] = 0.0
+        p[chosen, t] = 1.0
+
+    g = DataGraph.build(
+        st,
+        {"p": jnp.asarray(p), "seed": jnp.asarray(seeds)},
+        {"w": jnp.asarray(w)},
+    )
+    info = {"true_np": true_np, "true_ctx": true_ctx, "n_nps": n_nps}
+    return g, info
+
+
+def coem_accuracy(graph: DataGraph, info: dict) -> float:
+    """Fraction of non-seed noun-phrases whose argmax type is correct."""
+    n_nps = info["n_nps"]
+    p = np.asarray(graph.vertex_data["p"])[:n_nps]
+    seeds = np.asarray(graph.vertex_data["seed"])[:n_nps] > 0.5
+    pred = p.argmax(1)
+    mask = ~seeds
+    return float((pred[mask] == info["true_np"][mask]).mean())

@@ -1,0 +1,3 @@
+from repro.checkpoint.manager import (CheckpointManager, young_interval)
+
+__all__ = ["CheckpointManager", "young_interval"]

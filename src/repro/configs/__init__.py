@@ -1,0 +1,6 @@
+from repro.configs.registry import ARCH_IDS, ArchSpec, all_cells, get_arch
+from repro.configs.shapes import (GNN_SHAPES, LM_SHAPES, RECSYS_SHAPES,
+                                  shapes_for)
+
+__all__ = ["ARCH_IDS", "ArchSpec", "GNN_SHAPES", "LM_SHAPES",
+           "RECSYS_SHAPES", "all_cells", "get_arch", "shapes_for"]

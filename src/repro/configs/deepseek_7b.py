@@ -1,0 +1,33 @@
+"""deepseek-7b [arXiv:2401.02954; hf:deepseek-ai/deepseek-llm-7b-base]
+30L d_model=4096 32H (GQA kv=32, i.e. MHA) d_ff=11008 vocab=102400 —
+llama architecture: RMSNorm, SwiGLU, RoPE.
+
+Full attention -> long_500k cell is skipped (DESIGN.md §4 shape-cell notes).
+"""
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.models.transformer import TransformerConfig
+
+KIND = "lm"
+SKIP_CELLS = {"long_500k": "pure full-attention arch (O(S) KV at 524k "
+                           "exceeds scope per instructions; see DESIGN.md)"}
+
+
+def full_config(**over) -> TransformerConfig:
+    cfg = TransformerConfig(
+        name="deepseek-7b",
+        n_layers=30, d_model=4096, n_heads=32, n_kv_heads=32, head_dim=128,
+        d_ff=11008, vocab_size=102400,
+        norm="rmsnorm", mlp="swiglu", rope_theta=1e4,
+        dtype=jnp.bfloat16)
+    return dataclasses.replace(cfg, **over)
+
+
+def smoke_config() -> TransformerConfig:
+    return TransformerConfig(
+        name="deepseek-7b-smoke",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+        d_ff=176, vocab_size=512, norm="rmsnorm", mlp="swiglu",
+        dtype=jnp.float32)

@@ -1,0 +1,32 @@
+"""equiformer-v2 [arXiv:2306.12059]
+12 layers, d_hidden=128, l_max=6, m_max=2, 8 heads — equivariant graph
+attention via eSCN SO(2) convolutions (edge-aligned Wigner rotation, m
+truncation).  The heaviest assigned GNN: 49 irrep components per channel.
+"""
+import dataclasses
+
+from repro.models.gnn.api import GNNConfig
+from repro.configs.shapes import GNNShape
+
+KIND = "gnn"
+SKIP_CELLS = {}
+
+
+def full_config(shape: GNNShape = None, **over) -> GNNConfig:
+    cfg = GNNConfig(
+        name="equiformer-v2", kind="equiformer",
+        n_layers=12, d_hidden=128, lmax=6, m_max=2, n_heads=8, n_rbf=8,
+        cutoff=5.0,
+        d_feat=shape.d_feat if shape else 16,
+        n_classes=shape.n_classes if shape else 16,
+        task=shape.task if shape else "node_class",
+        n_graphs=shape.n_graphs if shape else 1,
+        # 49-component messages on 62M edges force aggressive chunking
+        edge_chunks=(shape.edge_chunks if shape else 1))
+    return dataclasses.replace(cfg, **over)
+
+
+def smoke_config() -> GNNConfig:
+    return GNNConfig(name="eqv2-smoke", kind="equiformer", n_layers=2,
+                     d_hidden=8, lmax=3, m_max=2, n_heads=2, n_rbf=4,
+                     d_feat=16, n_classes=5, edge_chunks=2)

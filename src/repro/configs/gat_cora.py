@@ -1,0 +1,28 @@
+"""gat-cora [arXiv:1710.10903]
+2 layers, d_hidden=8, 8 heads, attention aggregator — the Cora reference
+GAT (layer 1: 8x8 concat; layer 2: 1 head -> classes).
+"""
+import dataclasses
+
+from repro.models.gnn.api import GNNConfig
+from repro.configs.shapes import GNNShape
+
+KIND = "gnn"
+SKIP_CELLS = {}
+
+
+def full_config(shape: GNNShape = None, **over) -> GNNConfig:
+    cfg = GNNConfig(
+        name="gat-cora", kind="gat",
+        n_layers=2, d_hidden=8, n_heads=8,
+        d_feat=shape.d_feat if shape else 1433,
+        n_classes=shape.n_classes if shape else 7,
+        task=shape.task if shape else "node_class",
+        n_graphs=shape.n_graphs if shape else 1,
+        edge_chunks=shape.edge_chunks if shape else 1)
+    return dataclasses.replace(cfg, **over)
+
+
+def smoke_config() -> GNNConfig:
+    return GNNConfig(name="gat-smoke", kind="gat", n_layers=2, d_hidden=4,
+                     n_heads=2, d_feat=16, n_classes=5)

@@ -1,0 +1,28 @@
+"""mace [arXiv:2206.07697]
+2 layers, d_hidden=128, l_max=2, correlation_order=3, n_rbf=8 —
+higher-order E(3)-equivariant (ACE product basis) message passing.
+"""
+import dataclasses
+
+from repro.models.gnn.api import GNNConfig
+from repro.configs.shapes import GNNShape
+
+KIND = "gnn"
+SKIP_CELLS = {}
+
+
+def full_config(shape: GNNShape = None, **over) -> GNNConfig:
+    cfg = GNNConfig(
+        name="mace", kind="mace",
+        n_layers=2, d_hidden=128, lmax=2, correlation=3, n_rbf=8, cutoff=5.0,
+        d_feat=shape.d_feat if shape else 16,
+        n_classes=shape.n_classes if shape else 16,
+        task=shape.task if shape else "node_class",
+        n_graphs=shape.n_graphs if shape else 1,
+        edge_chunks=shape.edge_chunks if shape else 1)
+    return dataclasses.replace(cfg, **over)
+
+
+def smoke_config() -> GNNConfig:
+    return GNNConfig(name="mace-smoke", kind="mace", n_layers=2, d_hidden=8,
+                     lmax=2, correlation=3, n_rbf=4, d_feat=16, n_classes=5)

@@ -1,0 +1,35 @@
+"""moonshot-v1-16b-a3b [hf:moonshotai/Moonlight-16B-A3B]
+48L d_model=2048 16H (GQA kv=16) d_ff=1408 vocab=163840, MoE 64 experts
+top-6 — kimi/moonlight family.  Fine-grained experts (small d_ff) — the EP
+sharding choice (expert axis on 'model', d_ff unsharded) is napkin-math
+driven: 1408/16 = 88-wide MXU tiles would waste the 128-lane systolic array.
+
+Full attention -> long_500k skipped.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.models.transformer import TransformerConfig
+
+KIND = "moe"
+SKIP_CELLS = {"long_500k": "pure full-attention arch (see DESIGN.md)"}
+
+
+def full_config(**over) -> TransformerConfig:
+    cfg = TransformerConfig(
+        name="moonshot-v1-16b-a3b",
+        n_layers=48, d_model=2048, n_heads=16, n_kv_heads=16, head_dim=128,
+        d_ff=1408, vocab_size=163840,
+        norm="rmsnorm", mlp="swiglu", rope_theta=5e4,
+        n_experts=64, top_k=6, capacity_factor=1.25,
+        dtype=jnp.bfloat16)
+    return dataclasses.replace(cfg, **over)
+
+
+def smoke_config() -> TransformerConfig:
+    return TransformerConfig(
+        name="moonshot-smoke",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+        d_ff=32, vocab_size=512, norm="rmsnorm", mlp="swiglu",
+        n_experts=8, top_k=2, dtype=jnp.float32)

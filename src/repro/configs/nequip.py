@@ -1,0 +1,28 @@
+"""nequip [arXiv:2101.03164]
+5 layers, d_hidden=32, l_max=2, n_rbf=8, cutoff=5 — E(3)-equivariant
+tensor-product message passing.
+"""
+import dataclasses
+
+from repro.models.gnn.api import GNNConfig
+from repro.configs.shapes import GNNShape
+
+KIND = "gnn"
+SKIP_CELLS = {}
+
+
+def full_config(shape: GNNShape = None, **over) -> GNNConfig:
+    cfg = GNNConfig(
+        name="nequip", kind="nequip",
+        n_layers=5, d_hidden=32, lmax=2, n_rbf=8, cutoff=5.0,
+        d_feat=shape.d_feat if shape else 16,
+        n_classes=shape.n_classes if shape else 16,
+        task=shape.task if shape else "node_class",
+        n_graphs=shape.n_graphs if shape else 1,
+        edge_chunks=shape.edge_chunks if shape else 1)
+    return dataclasses.replace(cfg, **over)
+
+
+def smoke_config() -> GNNConfig:
+    return GNNConfig(name="nequip-smoke", kind="nequip", n_layers=2,
+                     d_hidden=8, lmax=2, n_rbf=4, d_feat=16, n_classes=5)

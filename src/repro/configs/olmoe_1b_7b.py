@@ -1,0 +1,33 @@
+"""olmoe-1b-7b [arXiv:2409.02060; hf:allenai/OLMoE-1B-7B-0924]
+16L d_model=2048 16H (GQA kv=16) d_ff=1024, MoE 64 experts top-8,
+vocab=50304 — qk-norm is used by OLMoE; RMSNorm, SwiGLU experts.
+
+Full attention -> long_500k skipped.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.models.transformer import TransformerConfig
+
+KIND = "moe"
+SKIP_CELLS = {"long_500k": "pure full-attention arch (see DESIGN.md)"}
+
+
+def full_config(**over) -> TransformerConfig:
+    cfg = TransformerConfig(
+        name="olmoe-1b-7b",
+        n_layers=16, d_model=2048, n_heads=16, n_kv_heads=16, head_dim=128,
+        d_ff=1024, vocab_size=50304,
+        norm="rmsnorm", mlp="swiglu", qk_norm=True, rope_theta=1e4,
+        n_experts=64, top_k=8, capacity_factor=1.25,
+        dtype=jnp.bfloat16)
+    return dataclasses.replace(cfg, **over)
+
+
+def smoke_config() -> TransformerConfig:
+    return TransformerConfig(
+        name="olmoe-smoke",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+        d_ff=32, vocab_size=512, norm="rmsnorm", mlp="swiglu", qk_norm=True,
+        n_experts=8, top_k=2, dtype=jnp.float32)

@@ -1,0 +1,32 @@
+"""qwen3-32b [hf:Qwen/Qwen3-32B, scaled per hf:Qwen/Qwen3-8B family]
+64L d_model=5120 64H (GQA kv=8) d_ff=25600 vocab=151936 — qk_norm
+(per-head RMSNorm on q/k), GQA, RMSNorm, SwiGLU.
+
+Full attention -> long_500k skipped.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.models.transformer import TransformerConfig
+
+KIND = "lm"
+SKIP_CELLS = {"long_500k": "pure full-attention arch (see DESIGN.md)"}
+
+
+def full_config(**over) -> TransformerConfig:
+    cfg = TransformerConfig(
+        name="qwen3-32b",
+        n_layers=64, d_model=5120, n_heads=64, n_kv_heads=8, head_dim=128,
+        d_ff=25600, vocab_size=151936,
+        norm="rmsnorm", mlp="swiglu", qk_norm=True, rope_theta=1e6,
+        dtype=jnp.bfloat16)
+    return dataclasses.replace(cfg, **over)
+
+
+def smoke_config() -> TransformerConfig:
+    return TransformerConfig(
+        name="qwen3-32b-smoke",
+        n_layers=2, d_model=64, n_heads=8, n_kv_heads=2, head_dim=16,
+        d_ff=320, vocab_size=512, norm="rmsnorm", mlp="swiglu", qk_norm=True,
+        dtype=jnp.float32)

@@ -1,0 +1,71 @@
+"""Architecture registry: ``--arch <id>`` resolves here.
+
+Each entry: family kind, full (published) config, reduced smoke config, and
+the shape set it pairs with.  Sources are cited per-arch in the config files.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Callable, Dict, List
+
+ARCH_IDS: List[str] = [
+    # LM-family (5)
+    "starcoder2-3b", "deepseek-7b", "qwen3-32b",
+    "moonshot-v1-16b-a3b", "olmoe-1b-7b",
+    # GNN (4)
+    "mace", "gat-cora", "equiformer-v2", "nequip",
+    # recsys (1)
+    "dlrm-rm2",
+]
+
+_MODULE_OF = {
+    "starcoder2-3b": "repro.configs.starcoder2_3b",
+    "deepseek-7b": "repro.configs.deepseek_7b",
+    "qwen3-32b": "repro.configs.qwen3_32b",
+    "moonshot-v1-16b-a3b": "repro.configs.moonshot_v1_16b_a3b",
+    "olmoe-1b-7b": "repro.configs.olmoe_1b_7b",
+    "mace": "repro.configs.mace",
+    "gat-cora": "repro.configs.gat_cora",
+    "equiformer-v2": "repro.configs.equiformer_v2",
+    "nequip": "repro.configs.nequip",
+    "dlrm-rm2": "repro.configs.dlrm_rm2",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    arch_id: str
+    kind: str                       # 'lm' | 'moe' | 'gnn' | 'recsys'
+    full_config: Callable[..., Any]
+    smoke_config: Callable[[], Any]
+    # cells this arch skips, with the reason (e.g. long_500k on full attn)
+    skip_cells: Dict[str, str]
+
+
+def get_arch(arch_id: str) -> ArchSpec:
+    if arch_id not in _MODULE_OF:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    mod = importlib.import_module(_MODULE_OF[arch_id])
+    return ArchSpec(
+        arch_id=arch_id,
+        kind=mod.KIND,
+        full_config=mod.full_config,
+        smoke_config=mod.smoke_config,
+        skip_cells=getattr(mod, "SKIP_CELLS", {}),
+    )
+
+
+def all_cells() -> List[Dict[str, str]]:
+    """The 40 (arch x shape) baseline cells, with skip annotations."""
+    from repro.configs.shapes import shapes_for
+    cells = []
+    for arch_id in ARCH_IDS:
+        spec = get_arch(arch_id)
+        for shape_name in shapes_for(spec.kind):
+            cells.append({
+                "arch": arch_id,
+                "shape": shape_name,
+                "skip": spec.skip_cells.get(shape_name, ""),
+            })
+    return cells

@@ -1,0 +1,24 @@
+"""Distributed GraphLab core abstraction in JAX (paper Secs. 3-4)."""
+from repro.core.bsp import BSPEngine
+from repro.core.chromatic import ChromaticEngine
+from repro.core.consistency import Consistency
+from repro.core.distributed import ClusterModel, SimulatedCluster
+from repro.core.dynamic import DynamicEngine
+from repro.core.engine_base import Engine, EngineState, init_state
+from repro.core.graph import (DataGraph, GraphStructure, gather_scope,
+                              scatter_to_neighbors, segment_combine)
+from repro.core.sequential import SequentialEngine
+from repro.core.snapshot import (AsyncSnapshotDriver, SnapshotState,
+                                 SyncSnapshotDriver, init_snapshot,
+                                 restore_engine_state)
+from repro.core.sync_op import FnSyncOp, SyncOp
+from repro.core.update import ApplyOut, EdgeCtx, VertexProgram
+
+__all__ = [
+    "ApplyOut", "AsyncSnapshotDriver", "BSPEngine", "ChromaticEngine",
+    "ClusterModel", "Consistency", "DataGraph", "DynamicEngine", "EdgeCtx",
+    "Engine", "EngineState", "FnSyncOp", "GraphStructure", "SequentialEngine",
+    "SimulatedCluster", "SnapshotState", "SyncOp", "SyncSnapshotDriver",
+    "VertexProgram", "gather_scope", "init_snapshot", "init_state",
+    "restore_engine_state", "scatter_to_neighbors", "segment_combine",
+]

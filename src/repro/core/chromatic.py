@@ -1,0 +1,74 @@
+"""The Chromatic Engine (paper Sec. 4.2.1).
+
+Given a proper coloring of the data graph, executing all scheduled vertices
+of one color simultaneously satisfies the edge consistency model; the sweep
+over colors is a sequence of **color-steps** (the paper's analogy to BSP
+super-steps).  Full consistency uses a distance-2 coloring, vertex
+consistency a single color — we obtain all three by "simply changing how the
+vertices are colored".
+
+On TPU a color-step is a masked dense update of the vertex array; the
+communication barrier between color-steps is XLA program order (ghost
+exchange is the sharded all-gather XLA inserts — see launch/spmd path).
+Within a color-step, updates read the freshest data (Gauss-Seidel across
+colors), which is what buys the asynchronous convergence behaviour of
+Fig. 1(a) relative to the Jacobi BSP engine.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.coloring import coloring_for, verify_coloring
+from repro.core.consistency import Consistency
+from repro.core.engine_base import (Engine, EngineState, apply_phase,
+                                    schedule_phase)
+from repro.core.graph import DataGraph
+from repro.core.sync_op import SyncOp
+from repro.core.update import VertexProgram
+
+
+class ChromaticEngine(Engine):
+    def __init__(
+        self,
+        program: VertexProgram,
+        graph: DataGraph,
+        colors: Optional[np.ndarray] = None,
+        tolerance: float = 1e-3,
+        sync_ops: Sequence[SyncOp] = (),
+    ):
+        super().__init__(program, graph, tolerance, sync_ops)
+        if colors is None:
+            colors = coloring_for(graph.structure, program.consistency)
+        colors = np.asarray(colors, dtype=np.int32)
+        radius = program.consistency.exclusion_radius
+        if radius >= 1 and not verify_coloring(graph.structure, colors, radius):
+            raise ValueError(
+                f"coloring does not satisfy {program.consistency} "
+                f"(radius {radius})")
+        self.colors = jnp.asarray(colors)
+        self.num_colors = int(colors.max()) + 1 if colors.size else 1
+
+    def _step(self, state: EngineState) -> EngineState:
+        """One sweep = one color-step per color (paper: T is drained color by
+        color; the sync operation runs safely between color-steps)."""
+        graph, prio = state.graph, state.prio
+        count, total = state.update_count, state.total_updates
+        prev_vdata = graph.vertex_data
+        glob = state.globals_
+
+        for c in range(self.num_colors):  # unrolled: num_colors is small
+            mask = jnp.logical_and(self.colors == c, prio > self.tolerance)
+            graph, residual = apply_phase(self.program, graph, mask, glob)
+            prio = schedule_phase(self.program, self.structure, prio, mask,
+                                  residual)
+            count = count + mask.astype(jnp.int32)
+            total = total + jnp.sum(mask.astype(jnp.int32))
+
+        state = state.replace(
+            graph=graph, prio=prio, update_count=count, total_updates=total,
+            step_index=state.step_index + 1)
+        return self._run_syncs(state, prev_vdata)

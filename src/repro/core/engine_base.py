@@ -1,0 +1,182 @@
+"""Shared engine machinery (paper Sec. 3.3 execution model, Sec. 4.2 engines).
+
+``EngineState`` is the distributed program state: the data graph, the
+scheduler T (a priority array — active ⇔ prio > tolerance), per-vertex
+update counts (Fig. 1(b)) and the sync operation's global values.
+
+Engines implement ``step(state) -> state`` (jitted) and share ``run`` — a
+host loop with convergence tracing — plus ``run_while`` — a fully-jitted
+``lax.while_loop`` used by the dry-run path ("all vertices in T are
+eventually executed" is the only ordering requirement the paper imposes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import DataGraph, segment_combine, scatter_to_neighbors
+from repro.core.sync_op import SyncOp, run_syncs
+from repro.core.update import VertexProgram, edge_ctx, masked_update
+
+Pytree = Any
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class EngineState:
+    graph: DataGraph
+    prio: jnp.ndarray          # [N] f32 — the scheduler T with priorities
+    update_count: jnp.ndarray  # [N] i32 — paper Fig. 1(b) statistic
+    step_index: jnp.ndarray    # scalar i32
+    total_updates: jnp.ndarray  # scalar i64-ish (i32 fine for tests)
+    globals_: Pytree           # sync-op outputs readable by update fns
+
+    def replace(self, **kw) -> "EngineState":
+        return dataclasses.replace(self, **kw)
+
+
+def init_state(
+    program: VertexProgram,
+    graph: DataGraph,
+    initial_prio: Optional[jnp.ndarray] = None,
+    sync_ops: Sequence[SyncOp] = (),
+) -> EngineState:
+    n = graph.n_vertices
+    prio = (jnp.asarray(initial_prio, jnp.float32) if initial_prio is not None
+            else program.initial_priority(n).astype(jnp.float32))
+    globals_ = run_syncs(sync_ops, graph.vertex_data, graph.vertex_data, n)
+    return EngineState(
+        graph=graph,
+        prio=prio,
+        update_count=jnp.zeros(n, jnp.int32),
+        step_index=jnp.zeros((), jnp.int32),
+        total_updates=jnp.zeros((), jnp.int32),
+        globals_=globals_,
+    )
+
+
+def apply_phase(
+    program: VertexProgram,
+    graph: DataGraph,
+    mask: jnp.ndarray,
+    glob: Pytree,
+) -> Tuple[DataGraph, jnp.ndarray]:
+    """Executes ``f(v, S_v)`` for every vertex in ``mask`` simultaneously.
+
+    Gather → ⊕-combine → apply (masked write-back) → edge_out (masked to
+    out-edges of updated vertices).  Returns (new graph, residual·mask).
+    """
+    st = graph.structure
+    receivers = jnp.asarray(st.receivers)
+    senders = jnp.asarray(st.senders)
+
+    ctx = edge_ctx(graph)
+    msgs = program.gather(ctx)
+    acc = segment_combine(msgs, receivers, st.n_vertices, program.combiner)
+
+    new_v, residual = program.apply(graph.vertex_data, acc, glob)
+    vdata = masked_update(graph.vertex_data, new_v, mask)
+    graph = graph.replace(vertex_data=vdata)
+
+    if program.has_edge_out:
+        # The update at v owns its adjacent edges (edge consistency): we
+        # rewrite out-edges of updated vertices, reading freshly applied
+        # vertex data (Gauss-Seidel within the step).
+        ctx2 = edge_ctx(graph)
+        new_src = jax.tree.map(lambda x: x[senders], vdata)
+        src_acc = jax.tree.map(lambda a: a[senders], acc)
+        new_e = program.edge_out(ctx2, new_src, src_acc)
+        edata = masked_update(graph.edge_data, new_e, mask[senders])
+        graph = graph.replace(edge_data=edata)
+
+    residual = jnp.where(mask, residual.astype(jnp.float32), 0.0)
+    return graph, residual
+
+
+def schedule_phase(
+    program: VertexProgram,
+    structure,
+    prio: jnp.ndarray,
+    mask: jnp.ndarray,
+    residual: jnp.ndarray,
+) -> jnp.ndarray:
+    """T ← (T \\ executed) ∪ T' — executed vertices consume their priority;
+    their priority contribution is scattered to neighbors (Alg. 1 pattern)."""
+    prio = jnp.where(mask, 0.0, prio)
+    if program.schedule_neighbors:
+        contrib = jnp.where(mask, program.priority(residual), 0.0)
+        prio = prio + scatter_to_neighbors(contrib, structure, "out")
+    return prio
+
+
+class Engine:
+    """Base: subclasses define ``_step``; ``step`` is its jitted form."""
+
+    def __init__(
+        self,
+        program: VertexProgram,
+        graph: DataGraph,
+        tolerance: float = 1e-3,
+        sync_ops: Sequence[SyncOp] = (),
+    ):
+        self.program = program
+        self.structure = graph.structure
+        self.tolerance = float(tolerance)
+        self.sync_ops = tuple(sync_ops)
+        self._jit_step = jax.jit(self._step)
+
+    # -- to be provided by subclasses ---------------------------------------
+    def _step(self, state: EngineState) -> EngineState:
+        raise NotImplementedError
+
+    # -- shared driver --------------------------------------------------------
+    def init(self, graph: DataGraph, initial_prio=None) -> EngineState:
+        return init_state(self.program, graph, initial_prio, self.sync_ops)
+
+    def step(self, state: EngineState) -> EngineState:
+        return self._jit_step(state)
+
+    def _run_syncs(self, state: EngineState, prev_vdata) -> EngineState:
+        if not self.sync_ops:
+            return state
+        g = run_syncs(self.sync_ops, state.graph.vertex_data, prev_vdata,
+                      self.structure.n_vertices)
+        return state.replace(globals_=g)
+
+    def run(
+        self,
+        state: EngineState,
+        max_steps: int = 100,
+        trace_fn: Optional[Callable[[EngineState], Dict[str, float]]] = None,
+    ) -> Tuple[EngineState, List[Dict[str, float]]]:
+        """Host loop: step until the scheduler empties (max prio ≤ tol).
+
+        Termination here is the bulk-synchronous collapse of the paper's
+        distributed consensus algorithm [26]: "all schedulers empty" is a
+        global reduction evaluated at the step barrier (DESIGN.md §3.7).
+        """
+        trace: List[Dict[str, float]] = []
+        for _ in range(max_steps):
+            if float(jnp.max(state.prio)) <= self.tolerance:
+                break
+            state = self.step(state)
+            if trace_fn is not None:
+                rec = dict(trace_fn(state))
+                rec.setdefault("step", int(state.step_index))
+                rec.setdefault("total_updates", int(state.total_updates))
+                trace.append(rec)
+        return state, trace
+
+    def run_while(self, state: EngineState, max_steps: int = 100) -> EngineState:
+        """Fully-jitted driver (used for lowering / production runs)."""
+
+        def cond(s):
+            return jnp.logical_and(
+                s.step_index < max_steps, jnp.max(s.prio) > self.tolerance)
+
+        return jax.lax.while_loop(cond, self._step, state)

@@ -1,0 +1,165 @@
+"""Sequential reference execution of the GraphLab model (paper Alg. 2).
+
+This is the *definition* of serializability: "there exists a corresponding
+serial schedule of update functions that when executed by Alg. 2 produces
+the same values in the data-graph".  The engines' property tests execute a
+candidate serial schedule here (one vertex at a time, numpy-on-host, exact
+scope semantics) and assert the parallel engines reproduce it.
+"""
+from __future__ import annotations
+
+from typing import Any, Iterable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import DataGraph
+from repro.core.update import ApplyOut, EdgeCtx, VertexProgram
+
+Pytree = Any
+
+
+def _np_tree(t):
+    return jax.tree.map(lambda x: np.asarray(x).copy(), t)
+
+
+class SequentialEngine:
+    """Executes Alg. 2 one vertex at a time in a caller-supplied order."""
+
+    def __init__(self, program: VertexProgram, graph: DataGraph,
+                 tolerance: float = 1e-3):
+        self.program = program
+        self.tolerance = float(tolerance)
+        st = graph.structure
+        self.st = st
+        self.vdata = _np_tree(graph.vertex_data)
+        self.edata = _np_tree(graph.edge_data)
+        self.prio = np.asarray(
+            program.initial_priority(st.n_vertices), np.float32).copy()
+        self.update_count = np.zeros(st.n_vertices, np.int32)
+        # in-edges of v: contiguous receiver-sorted block
+        self.offsets = st.receiver_offsets()
+        # out-edges of v: indices into the receiver-sorted array
+        order = np.argsort(st.senders, kind="stable")
+        self.out_edges = order
+        self.out_offsets = np.concatenate(
+            [[0], np.cumsum(np.bincount(st.senders, minlength=st.n_vertices))])
+
+    # -- single vertex --------------------------------------------------------
+    def _edge_ctx(self, eidx: np.ndarray) -> EdgeCtx:
+        st = self.st
+        s, r = st.senders[eidx], st.receivers[eidx]
+        rp = st.reverse_perm[eidx]
+        rp_safe = np.maximum(rp, 0)
+
+        def _rev(x):
+            y = np.asarray(x)[rp_safe]
+            m = (rp >= 0).reshape((-1,) + (1,) * (y.ndim - 1))
+            return np.where(m, y, np.zeros_like(y))
+
+        return EdgeCtx(
+            edata=jax.tree.map(lambda x: np.asarray(x)[eidx], self.edata),
+            rev_edata=jax.tree.map(_rev, self.edata),
+            src=jax.tree.map(lambda x: np.asarray(x)[s], self.vdata),
+            dst=jax.tree.map(lambda x: np.asarray(x)[r], self.vdata),
+            src_deg=st.out_degree[s],
+            dst_deg=st.in_degree[r],
+        )
+
+    def _combine(self, msgs, n_in: int):
+        comb = self.program.combiner
+
+        def _one(m):
+            m = np.asarray(m)
+            if n_in == 0:
+                if comb in ("sum", "mean"):
+                    return np.zeros(m.shape[1:], m.dtype)
+                return np.full(m.shape[1:],
+                               -np.inf if comb == "max" else np.inf, m.dtype)
+            if comb == "sum":
+                return m.sum(axis=0)
+            if comb == "mean":
+                return m.mean(axis=0)
+            if comb == "max":
+                return m.max(axis=0)
+            if comb == "min":
+                return m.min(axis=0)
+            raise ValueError(comb)
+
+        return jax.tree.map(_one, msgs)
+
+    def execute_vertex(self, v: int) -> float:
+        """Runs f(v, S_v); returns the residual.  Mirrors apply_phase exactly
+        but for one vertex."""
+        st, prog = self.st, self.program
+        in_e = np.arange(self.offsets[v], self.offsets[v + 1])
+        ctx = self._edge_ctx(in_e)
+        msgs = prog.gather(ctx)
+        acc = self._combine(msgs, in_e.size)
+
+        v_in = jax.tree.map(lambda x: np.asarray(x)[v][None], self.vdata)
+        acc_b = jax.tree.map(lambda a: np.asarray(a)[None], acc)
+        out = prog.apply(v_in, acc_b, None)
+        new_v, residual = out.vertex_data, float(np.asarray(out.residual)[0])
+
+        def _setv(x, n):
+            x = np.asarray(x)
+            x[v] = np.asarray(n)[0]
+            return x
+
+        self.vdata = jax.tree.map(_setv, self.vdata, new_v)
+
+        out_e = self.out_edges[self.out_offsets[v]:self.out_offsets[v + 1]]
+        if prog.has_edge_out and out_e.size:
+            ctx2 = self._edge_ctx(out_e)
+            new_src = jax.tree.map(lambda x: np.asarray(x)[v][None].repeat(
+                out_e.size, axis=0), self.vdata)
+            src_acc = jax.tree.map(
+                lambda a: np.asarray(a)[None].repeat(out_e.size, axis=0), acc)
+            new_e = prog.edge_out(ctx2, new_src, src_acc)
+
+            def _sete(x, n):
+                x = np.asarray(x)
+                x[out_e] = np.asarray(n)
+                return x
+
+            self.edata = jax.tree.map(_sete, self.edata, new_e)
+
+        # scheduling (Alg. 1 pattern): consume own priority, bump out-neighbors
+        self.prio[v] = 0.0
+        if prog.schedule_neighbors:
+            contrib = float(np.asarray(prog.priority(
+                jnp.asarray([residual], jnp.float32)))[0])
+            dsts = st.receivers[out_e]
+            np.add.at(self.prio, dsts, contrib)
+        self.update_count[v] += 1
+        return residual
+
+    # -- schedules -------------------------------------------------------------
+    def execute_schedule(self, schedule: Iterable[int]) -> None:
+        for v in schedule:
+            self.execute_vertex(int(v))
+
+    def run_round_robin(self, max_sweeps: int = 100,
+                        order: Optional[Sequence[int]] = None) -> int:
+        """Sweeps vertices in a fixed order until the scheduler is empty."""
+        n = self.st.n_vertices
+        order = np.arange(n) if order is None else np.asarray(order)
+        sweeps = 0
+        for _ in range(max_sweeps):
+            if self.prio.max() <= self.tolerance:
+                break
+            for v in order:
+                if self.prio[v] > self.tolerance:
+                    self.execute_vertex(int(v))
+            sweeps += 1
+        return sweeps
+
+    def run_priority(self, max_updates: int = 100000) -> int:
+        """Exact serial priority order (= locking engine with pipeline 1)."""
+        updates = 0
+        while updates < max_updates and self.prio.max() > self.tolerance:
+            self.execute_vertex(int(np.argmax(self.prio)))
+            updates += 1
+        return updates

@@ -1,0 +1,126 @@
+"""Update functions (paper Sec. 3.2) in gather/apply/scatter form.
+
+A GraphLab update function ``f(v, S_v) -> (S_v, T)`` reads the scope of a
+vertex, writes its own vertex data and adjacent edge data, and schedules
+future work.  On TPU we decompose ``f`` structurally (DESIGN.md §3.1):
+
+  gather   : per-edge message from (edge data, src vertex, dst vertex)
+  combine  : ⊕ over in-edges (segment op)
+  apply    : new vertex data + a scalar *residual* from (vertex, accumulator)
+  edge_out : optional — new data for adjacent edges (LBP messages live here)
+  priority : residual -> priority contribution scattered to neighbors (T')
+
+The decomposition *enforces* the edge consistency model: writes are limited
+to the central vertex and adjacent edges, reads to the scope.  Programs that
+need full consistency declare it via ``consistency`` and the engines run
+them under a distance-2 coloring / distance-2 exclusion instead.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.consistency import Consistency
+
+Pytree = Any
+
+
+class EdgeCtx(NamedTuple):
+    """Per-edge context handed to ``gather`` / ``edge_out``."""
+
+    edata: Pytree          # this directed edge's data
+    rev_edata: Pytree      # reverse edge's data (or zeros if absent)
+    src: Pytree            # source vertex data
+    dst: Pytree            # destination vertex data
+    src_deg: jnp.ndarray   # [E] out-degree of source
+    dst_deg: jnp.ndarray   # [E] in-degree of destination
+
+
+class ApplyOut(NamedTuple):
+    vertex_data: Pytree     # new data for the central vertex
+    residual: jnp.ndarray   # [N] — drives adaptive scheduling (|ΔR| etc.)
+
+
+class VertexProgram:
+    """Base class for GraphLab programs.  All methods are batched over arrays.
+
+    Subclasses override the pieces they need; the defaults give an identity
+    program.  ``combiner`` is the ⊕ of the paper's sync/gather semantics.
+    """
+
+    combiner: str = "sum"
+    consistency: Consistency = Consistency.EDGE
+    # When True the engines scatter each vertex's residual to its neighbors'
+    # priorities (the adaptive "schedule neighbors on big change" pattern of
+    # Alg. 1).  Programs can instead override ``schedule`` for custom T'.
+    schedule_neighbors: bool = True
+
+    # -- gather ---------------------------------------------------------------
+    def gather(self, ctx: EdgeCtx) -> Pytree:
+        """Per-edge message; combined with ``combiner`` into acc[dst]."""
+        raise NotImplementedError
+
+    def zero_acc(self, vertex_data: Pytree) -> Pytree:
+        """Accumulator for isolated vertices (segment_sum default: zeros)."""
+        return None  # None -> engines use segment-op natural zero
+
+    # -- apply ---------------------------------------------------------------
+    def apply(self, vertex_data: Pytree, acc: Pytree,
+              glob: Pytree = None) -> ApplyOut:
+        """``glob`` carries the sync operation's global values (Sec. 3.5):
+        update functions may *read* globals; only sync ops write them."""
+        raise NotImplementedError
+
+    # -- optional edge writes (adjacent-edge mutation, e.g. BP messages) -----
+    has_edge_out: bool = False
+
+    def edge_out(self, ctx: EdgeCtx, new_src: Pytree, src_acc: Pytree) -> Pytree:
+        """New data for edge (src -> dst), given src's freshly applied data
+        and src's accumulator.  Only edges whose *source* vertex was updated
+        are written back (the update at v owns its adjacent edges)."""
+        raise NotImplementedError
+
+    # -- scheduling -----------------------------------------------------------
+    def priority(self, residual: jnp.ndarray) -> jnp.ndarray:
+        """Priority contribution scattered to neighbors of updated vertices."""
+        return residual
+
+    # -- init -----------------------------------------------------------------
+    def initial_priority(self, n_vertices: int) -> jnp.ndarray:
+        return jnp.ones(n_vertices, jnp.float32)
+
+
+def edge_ctx(graph) -> EdgeCtx:
+    """Builds the per-edge context from a DataGraph (reads only)."""
+    st = graph.structure
+    s = jnp.asarray(st.senders)
+    r = jnp.asarray(st.receivers)
+    rp = jnp.asarray(st.reverse_perm)
+    rp_safe = jnp.maximum(rp, 0)
+    has_rev = (rp >= 0)
+
+    def _rev(x):
+        y = x[rp_safe]
+        mask = has_rev.reshape((-1,) + (1,) * (y.ndim - 1))
+        return jnp.where(mask, y, jnp.zeros_like(y))
+
+    return EdgeCtx(
+        edata=graph.edge_data,
+        rev_edata=jax.tree.map(_rev, graph.edge_data),
+        src=jax.tree.map(lambda x: x[s], graph.vertex_data),
+        dst=jax.tree.map(lambda x: x[r], graph.vertex_data),
+        src_deg=jnp.asarray(st.out_degree)[s],
+        dst_deg=jnp.asarray(st.in_degree)[r],
+    )
+
+
+def masked_update(old: Pytree, new: Pytree, mask: jnp.ndarray) -> Pytree:
+    """where(mask, new, old) broadcast over trailing dims of each leaf."""
+
+    def _one(o, n):
+        m = mask.reshape((-1,) + (1,) * (o.ndim - 1))
+        return jnp.where(m, n.astype(o.dtype), o)
+
+    return jax.tree.map(_one, old, new)

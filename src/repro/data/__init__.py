@@ -1,0 +1,3 @@
+from repro.data.pipeline import dlrm_batches, gnn_batch, lm_batches
+
+__all__ = ["dlrm_batches", "gnn_batch", "lm_batches"]

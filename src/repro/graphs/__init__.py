@@ -1,0 +1,6 @@
+from repro.graphs.generators import (bipartite_graph, cora_like, grid3d_graph,
+                                     molecule_batch, power_law_graph)
+from repro.graphs.sampling import NeighborSampler
+
+__all__ = ["NeighborSampler", "bipartite_graph", "cora_like", "grid3d_graph",
+           "molecule_batch", "power_law_graph"]

@@ -1,0 +1,147 @@
+"""Synthetic graph generators, shape/distribution-faithful to the paper's
+and the assigned architectures' datasets (DESIGN.md §8.5).
+
+  power_law_graph : natural web graphs (paper Sec. 2: "power-law degree
+                    distributions ... highly skewed running times")
+  grid3d_graph    : the paper's 300³ 26-connected synthetic MRF (Sec. 4.2.2)
+  bipartite_graph : Netflix users×movies (Sec. 5.1) / NER noun-phrase×context
+  cora_like       : citation graph at Cora scale (gat-cora full_graph_sm)
+  molecule_batch  : batched small radius graphs (molecule shape cell)
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core.graph import GraphStructure
+
+
+def power_law_graph(
+    n: int, avg_degree: float = 8.0, alpha: float = 2.1, seed: int = 0,
+    symmetric: bool = True,
+) -> GraphStructure:
+    """Chung-Lu style power-law graph: P(deg = d) ∝ d^-alpha."""
+    rng = np.random.default_rng(seed)
+    w = rng.pareto(alpha - 1, size=n) + 1.0
+    w *= avg_degree * n / w.sum()
+    m = int(avg_degree * n / 2)
+    p = w / w.sum()
+    u = rng.choice(n, size=m, p=p)
+    v = rng.choice(n, size=m, p=p)
+    keep = u != v
+    u, v = u[keep], v[keep]
+    # dedupe on the canonical undirected pair (else symmetrizing (u,v) and
+    # (v,u) draws would create duplicate directed edges — a multigraph)
+    key = (np.minimum(u, v).astype(np.int64) * n + np.maximum(u, v))
+    _, idx = np.unique(key, return_index=True)
+    u, v = u[idx], v[idx]
+    if symmetric:
+        st, _ = GraphStructure.undirected(u, v, n)
+    else:
+        st, _ = GraphStructure.from_edges(u, v, n)
+    return st
+
+
+def grid3d_graph(nx: int, ny: int, nz: int,
+                 connectivity: int = 26) -> GraphStructure:
+    """The paper's synthetic mesh: nx×ny×nz vertices, 6- or 26-connected."""
+    assert connectivity in (6, 26)
+    idx = np.arange(nx * ny * nz).reshape(nx, ny, nz)
+    us, vs = [], []
+    if connectivity == 6:
+        offsets = [(1, 0, 0), (0, 1, 0), (0, 0, 1)]
+    else:
+        offsets = [(dx, dy, dz)
+                   for dx in (-1, 0, 1) for dy in (-1, 0, 1)
+                   for dz in (-1, 0, 1)
+                   if (dx, dy, dz) > (0, 0, 0)]  # half-space: dedupe pairs
+    for dx, dy, dz in offsets:
+        sl_a = idx[max(0, -dx):nx - max(0, dx) or None,
+                   max(0, -dy):ny - max(0, dy) or None,
+                   max(0, -dz):nz - max(0, dz) or None]
+        sl_b = idx[max(0, dx):nx - max(0, -dx) or None,
+                   max(0, dy):ny - max(0, -dy) or None,
+                   max(0, dz):nz - max(0, -dz) or None]
+        us.append(sl_a.ravel())
+        vs.append(sl_b.ravel())
+    u = np.concatenate(us)
+    v = np.concatenate(vs)
+    st, _ = GraphStructure.undirected(u, v, nx * ny * nz)
+    return st
+
+
+def bipartite_graph(
+    n_left: int, n_right: int, n_ratings: int, seed: int = 0,
+    right_popularity_alpha: float = 1.8,
+) -> Tuple[GraphStructure, np.ndarray]:
+    """Netflix/NER-style bipartite graph (left = users/noun-phrases, right =
+    movies/contexts; right endpoints power-law popular — "Harry Potter
+    connects to a very large number of users").
+
+    Vertices [0, n_left) are left, [n_left, n_left+n_right) right.
+    Returns (symmetric structure, pair perm) — edge data built over the
+    (u→m ; m→u) concatenated order should be permuted with the perm.
+    """
+    rng = np.random.default_rng(seed)
+    wr = rng.pareto(right_popularity_alpha, size=n_right) + 1.0
+    pr = wr / wr.sum()
+    users = rng.integers(0, n_left, size=n_ratings)
+    movies = rng.choice(n_right, size=n_ratings, p=pr)
+    key = users.astype(np.int64) * n_right + movies
+    _, idx = np.unique(key, return_index=True)
+    users, movies = users[idx], movies[idx]
+    st, perm = GraphStructure.undirected(
+        users, movies + n_left, n_left + n_right)
+    return st, perm
+
+
+def cora_like(
+    n: int = 2708, n_edges_undirected: int = 5278, seed: int = 0,
+) -> GraphStructure:
+    """Citation-graph shape (Cora: 2708 vertices / 10556 directed edges)."""
+    rng = np.random.default_rng(seed)
+    # preferential attachment gives the citation degree profile
+    u = np.zeros(n_edges_undirected, np.int64)
+    v = np.zeros(n_edges_undirected, np.int64)
+    targets = rng.integers(0, 16, size=16)
+    for i in range(n_edges_undirected):
+        a = rng.integers(0, n)
+        b = targets[rng.integers(0, targets.size)]
+        while b == a:
+            b = rng.integers(0, n)
+        u[i], v[i] = a, b
+        targets[rng.integers(0, targets.size)] = a
+    key = np.minimum(u, v) * n + np.maximum(u, v)
+    _, idx = np.unique(key, return_index=True)
+    st, _ = GraphStructure.undirected(u[idx], v[idx], n)
+    return st
+
+
+def molecule_batch(
+    batch: int = 128, n_nodes: int = 30, n_edges_per: int = 64, seed: int = 0,
+) -> Tuple[GraphStructure, np.ndarray, np.ndarray]:
+    """Block-diagonal batch of small molecular radius graphs.
+
+    Returns (structure, graph_id[N_total], positions[N_total, 3]).
+    Edges are built by 3D proximity (radius graph), symmetric, approximately
+    ``n_edges_per`` *directed* edges per molecule.
+    """
+    rng = np.random.default_rng(seed)
+    all_u, all_v = [], []
+    positions = rng.normal(0, 1.5, size=(batch, n_nodes, 3))
+    for b in range(batch):
+        pos = positions[b]
+        d = np.linalg.norm(pos[:, None] - pos[None, :], axis=-1)
+        np.fill_diagonal(d, np.inf)
+        # pick radius so each molecule has ~n_edges_per directed edges
+        kth = np.partition(d.ravel(), n_edges_per)[n_edges_per]
+        uu, vv = np.nonzero(d <= kth)
+        keep = uu < vv
+        all_u.append(uu[keep] + b * n_nodes)
+        all_v.append(vv[keep] + b * n_nodes)
+    u = np.concatenate(all_u)
+    v = np.concatenate(all_v)
+    st, _ = GraphStructure.undirected(u, v, batch * n_nodes)
+    graph_id = np.repeat(np.arange(batch, dtype=np.int32), n_nodes)
+    return st, graph_id, positions.reshape(-1, 3)

@@ -1,0 +1,122 @@
+"""Neighbor sampling for minibatch GNN training (minibatch_lg shape cell).
+
+GraphSAGE-style fanout sampling over a CSR neighbor list, host-side numpy
+(sampling is data-pipeline work; the compiled train step consumes the padded
+subgraph with static shapes).  In GraphLab terms the sampled seeds are a
+dynamically scheduled vertex set T and the sampled subgraph is their
+(multi-hop) scope — the sampler is the dynamic engine's RemoveNext for
+sampled training.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.graph import GraphStructure
+
+
+@dataclasses.dataclass
+class SampledSubgraph:
+    """Padded, statically-shaped subgraph batch.
+
+    nodes:     [max_nodes] global ids (padded with -1, mapped to row 0 data)
+    node_mask: [max_nodes] bool
+    senders/receivers: [max_edges] LOCAL indices into ``nodes``
+    edge_mask: [max_edges] bool
+    seeds:     [batch] local indices of the seed nodes (first rows)
+    """
+
+    nodes: np.ndarray
+    node_mask: np.ndarray
+    senders: np.ndarray
+    receivers: np.ndarray
+    edge_mask: np.ndarray
+    seeds: np.ndarray
+
+    @property
+    def max_nodes(self) -> int:
+        return int(self.nodes.shape[0])
+
+    @property
+    def max_edges(self) -> int:
+        return int(self.senders.shape[0])
+
+
+class NeighborSampler:
+    """Uniform fanout sampler: for each hop h, sample ``fanout[h]`` in-
+    neighbors of the frontier."""
+
+    def __init__(self, structure: GraphStructure, fanout: Sequence[int],
+                 seed: int = 0):
+        self.fanout = tuple(int(f) for f in fanout)
+        self.rng = np.random.default_rng(seed)
+        # CSR over in-edges (receiver-sorted already)
+        self.offsets = structure.receiver_offsets()
+        self.nbrs = structure.senders
+        self.n = structure.n_vertices
+        # static padded sizes
+        self._max_nodes_per_seed = 1
+        acc = 1
+        for f in self.fanout:
+            acc *= f
+            self._max_nodes_per_seed += acc
+
+    def padded_sizes(self, batch: int) -> Tuple[int, int]:
+        max_nodes = batch * self._max_nodes_per_seed
+        max_edges = max_nodes - batch  # tree bound: one in-edge per sample
+        return max_nodes, max_edges
+
+    def sample(self, seeds: np.ndarray) -> SampledSubgraph:
+        seeds = np.asarray(seeds, np.int64)
+        batch = seeds.size
+        max_nodes, max_edges = self.padded_sizes(batch)
+
+        nodes: List[int] = list(seeds)
+        local_of = {int(g): i for i, g in enumerate(seeds)}
+        edges_src: List[int] = []
+        edges_dst: List[int] = []
+        frontier = list(range(batch))  # local ids
+        for f in self.fanout:
+            next_frontier: List[int] = []
+            for lv in frontier:
+                g = nodes[lv]
+                lo, hi = self.offsets[g], self.offsets[g + 1]
+                deg = hi - lo
+                if deg == 0:
+                    continue
+                take = min(f, deg)
+                picks = self.rng.choice(deg, size=take, replace=False)
+                for p in picks:
+                    ng = int(self.nbrs[lo + p])
+                    if ng in local_of:
+                        lu = local_of[ng]
+                    else:
+                        lu = len(nodes)
+                        local_of[ng] = lu
+                        nodes.append(ng)
+                        next_frontier.append(lu)
+                    # message flows neighbor -> frontier vertex
+                    edges_src.append(lu)
+                    edges_dst.append(lv)
+            frontier = next_frontier
+
+        n_nodes, n_edges = len(nodes), len(edges_src)
+        assert n_nodes <= max_nodes and n_edges <= max_edges
+        out_nodes = np.full(max_nodes, -1, np.int64)
+        out_nodes[:n_nodes] = nodes
+        node_mask = np.zeros(max_nodes, bool)
+        node_mask[:n_nodes] = True
+        s = np.zeros(max_edges, np.int32)
+        r = np.zeros(max_edges, np.int32)
+        emask = np.zeros(max_edges, bool)
+        s[:n_edges] = edges_src
+        r[:n_edges] = edges_dst
+        emask[:n_edges] = True
+        # sort by receiver for segment ops
+        order = np.lexsort((s, np.where(emask, r, max_nodes)))
+        return SampledSubgraph(
+            nodes=out_nodes, node_mask=node_mask,
+            senders=s[order], receivers=r[order], edge_mask=emask[order],
+            seeds=np.arange(batch, dtype=np.int32))

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+  segsum          receiver-sorted segment-sum (the GraphLab/GNN ⊕-combine)
+  flash_attention streaming-softmax attention (LM train/prefill hot loop)
+  embedding_bag   gather+reduce over huge tables (DLRM hot path)
+
+Each package: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper with CPU fallback to the oracle), ref.py (pure-jnp oracle).
+Kernels target TPU; correctness is validated in interpret=True mode
+(tests/test_kernels.py sweeps shapes/dtypes vs the oracles).
+"""

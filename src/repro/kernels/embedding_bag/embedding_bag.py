@@ -1,0 +1,101 @@
+"""Pallas TPU kernel: embedding bag (gather + bag-sum) over a huge table.
+
+DLRM's hot path: B bags of H ids each gather rows from a [V, D] table that
+lives in HBM (10^6+ rows — never blockable into VMEM by value).  Design:
+
+  - the table stays in HBM (memory_space=ANY); rows move to a VMEM
+    scratch via explicit ``pltpu.make_async_copy`` DMAs — the TPU-idiomatic
+    dynamic gather (cf. paged-attention kernels' block-table indirection);
+  - ids are scalar-prefetched (SMEM) so the DMA source index is known to
+    the DMA engine without a VMEM round-trip;
+  - grid over batch blocks; each step issues BB*H row DMAs, double-buffered
+    two-deep (issue row r+1's copy while summing row r) to hide DMA latency
+    behind the VPU adds;
+  - rows accumulate into a [BB, D] VMEM accumulator written once per step.
+
+VMEM/step: 2 row buffers (2*D*4) + acc BB*D*4 ~= 133 KB at (BB, D) =
+(128, 64) f32.  The bag-sum is VPU-bound; the roofline term is HBM: exactly
+D*4 bytes per id — the kernel moves no row twice (vs take+reshape XLA
+gathers which materialize [B, H, D]).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BATCH_BLOCK = 128
+
+
+def _kernel(ids_ref,                    # scalar prefetch [B*H]
+            table_ref,                  # HBM [V, D]
+            out_ref,                    # VMEM block [BB, D]
+            row_buf, acc_ref, sem,      # scratch
+            *, bag: int):
+    b = pl.program_id(0)
+    D = out_ref.shape[-1]
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    n_rows = BATCH_BLOCK * bag
+
+    def issue(slot, r):
+        idx = ids_ref[b * n_rows + r]
+        return pltpu.make_async_copy(
+            table_ref.at[pl.ds(idx, 1), :],
+            row_buf.at[slot],
+            sem.at[slot])
+
+    # prime the two-deep pipeline
+    issue(0, 0).start()
+
+    def body(r, _):
+        slot = jax.lax.rem(r, 2)
+        nxt = jax.lax.rem(r + 1, 2)
+
+        @pl.when(r + 1 < n_rows)
+        def _prefetch():
+            issue(nxt, r + 1).start()
+
+        issue(slot, r).wait()  # reconstructs the same sem to wait on
+        row = row_buf[slot, 0, :].astype(jnp.float32)
+        sample = r // bag
+        acc_ref[pl.ds(sample, 1), :] += row[None, :]
+        return ()
+
+    jax.lax.fori_loop(0, n_rows, body, (), unroll=False)
+    out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+
+
+def embedding_bag_pallas(
+    table: jnp.ndarray,        # [V, D]
+    ids: jnp.ndarray,          # [B, H]
+    interpret: bool = False,
+) -> jnp.ndarray:
+    V, D = table.shape
+    B, H = ids.shape
+    b_pad = pl.cdiv(B, BATCH_BLOCK) * BATCH_BLOCK
+    if b_pad != B:
+        ids = jnp.pad(ids, ((0, b_pad - B), (0, 0)))  # pad bags gather row 0
+    flat_ids = ids.reshape(-1).astype(jnp.int32)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, bag=H),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(b_pad // BATCH_BLOCK,),
+            in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],  # table in HBM
+            out_specs=pl.BlockSpec((BATCH_BLOCK, D), lambda b, ids: (b, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((2, 1, D), table.dtype),      # row double-buffer
+                pltpu.VMEM((BATCH_BLOCK, D), jnp.float32),
+                pltpu.SemaphoreType.DMA((2,)),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b_pad, D), table.dtype),
+        interpret=interpret,
+    )(flat_ids, table)
+    return out[:B]

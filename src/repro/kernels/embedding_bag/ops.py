@@ -1,0 +1,18 @@
+"""jit'd wrapper for embedding bag: Pallas on TPU, oracle elsewhere."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.embedding_bag.embedding_bag import embedding_bag_pallas
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+
+
+def embedding_bag(table: jnp.ndarray, ids: jnp.ndarray,
+                  interpret: Optional[bool] = None) -> jnp.ndarray:
+    """table [V, D], ids [B, H] -> sum-bags [B, D]."""
+    if interpret is None and jax.default_backend() != "tpu":
+        return embedding_bag_ref(table, ids)
+    return embedding_bag_pallas(table, ids, interpret=bool(interpret))

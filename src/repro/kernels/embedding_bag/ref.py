@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for the embedding-bag kernel."""
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    """table [V, D], ids [B, H] (H-hot bags) -> [B, D] (sum-reduced)."""
+    return table[ids].sum(axis=1)

@@ -1,0 +1,29 @@
+"""jit'd wrapper for flash attention: Pallas on TPU, oracle elsewhere."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import \
+    flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    causal: bool = True,
+    sliding_window: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """[B, S, H, d] x [B, T, KV, d]^2 -> [B, S, H, d] (GQA when KV < H)."""
+    if interpret is None and jax.default_backend() != "tpu":
+        # CPU production path: the pure-jnp oracle (interpret mode is for
+        # kernel-correctness tests only — it is slow)
+        return attention_ref(q, k, v, causal, sliding_window)
+    return flash_attention_pallas(
+        q, k, v, causal=causal, sliding_window=sliding_window,
+        interpret=bool(interpret))

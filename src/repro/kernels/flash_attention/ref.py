@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for flash attention (GQA + causal + sliding window)."""
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(
+    q: jnp.ndarray,            # [B, S, H, d]
+    k: jnp.ndarray,            # [B, T, KV, d]
+    v: jnp.ndarray,            # [B, T, KV, d]
+    causal: bool = True,
+    sliding_window: Optional[int] = None,
+) -> jnp.ndarray:
+    B, S, H, d = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, d)
+    scores = jnp.einsum("bsgjk,btgk->bgjst", qg, k).astype(jnp.float32)
+    scores = scores / np.sqrt(d)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((S, k.shape[1]), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if sliding_window is not None:
+        mask &= kpos > qpos - sliding_window
+    scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)  # fully-masked rows
+    out = jnp.einsum("bgjst,btgk->bsgjk", probs.astype(v.dtype), v)
+    return out.reshape(B, S, H, d)

@@ -1,0 +1,3 @@
+from repro.kernels.segsum.ops import segment_sum_sorted
+
+__all__ = ["segment_sum_sorted"]

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the sorted segment-sum kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def segment_sum_sorted_ref(msgs: jnp.ndarray, receivers: jnp.ndarray,
+                           n_rows: int) -> jnp.ndarray:
+    """msgs [E, D], receivers [E] sorted int32 (entries >= n_rows are
+    padding and dropped) -> [n_rows, D]."""
+    return jax.ops.segment_sum(
+        msgs, receivers, num_segments=n_rows + 1,
+        indices_are_sorted=True)[:n_rows]

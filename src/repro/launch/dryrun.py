@@ -1,0 +1,249 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# ^ MUST precede every other import (jax locks device count on first init).
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch <id> --shape <name> \
+        [--multi-pod] [--out results.json]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--out dir/]
+
+Per cell this records: memory_analysis (proves it fits), cost_analysis
+(FLOPs/bytes for §Roofline), and the collective-bytes breakdown parsed from
+the compiled HLO (all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute operand sizes) — cost_analysis does not report these.
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """bytes of 'bf16[8,128]{...}' -> 8*128*2; tuples handled by caller."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sums result-shape bytes of every collective op in the compiled HLO.
+
+    Uses the *result* shape (output bytes moved per participant) — for
+    all-gather that is the gathered size, for reduce-scatter the scattered
+    shard, matching bytes-on-the-wire per device up to a small factor.
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    out["count"] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # e.g.:  %ag = bf16[16,1024]{1,0} all-gather(...), replica_groups=...
+        m = re.match(r"^[%\w.\-]+\s*=\s*(\(?[a-z0-9]+\[[^=]*?)\s*"
+                     r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                     r"collective-permute)", s)
+        if m:
+            shape_str, op = m.group(1), m.group(2)
+            out[op] += _shape_bytes(shape_str)
+            out["count"][op] += 1
+    return out
+
+
+def _compile_bundle(bundle, mesh):
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    def _named(tree):
+        return jax.tree.map(
+            lambda s: NamedSharding(mesh, s), tree,
+            is_leaf=lambda x: isinstance(x, PartitionSpec))
+
+    with mesh:
+        jitted = jax.jit(
+            bundle.step_fn,
+            in_shardings=_named(bundle.in_shardings),
+            out_shardings=_named(bundle.out_shardings),
+            donate_argnums=bundle.donate_argnums)
+        lowered = jitted.lower(*bundle.input_sds)
+        compiled = lowered.compile()
+    return compiled
+
+
+def _cell_cost(compiled) -> Dict[str, float]:
+    cost = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+    out = {"flops": cost.get("flops", 0.0),
+           "bytes_accessed": cost.get("bytes accessed", 0.0)}
+    for op in _COLLECTIVES:
+        out[f"coll_{op}"] = float(coll[op])
+    return out
+
+
+def _probe_corrected_cost(arch: str, shape: str, mesh, bundle,
+                          main_cost: Dict[str, float]) -> Dict[str, Any]:
+    """Two-point linear correction for scanned loops (cost_analysis counts a
+    scan body ONCE — measured in EXPERIMENTS.md §Dry-run notes).
+
+    LM: compile at n_layers = 2 and 4 -> per-layer marginal cost.
+    GNN with edge chunking: compile (scan-free) at E/c and 2E/c edges.
+    Others: the main compile is already exact.
+    """
+    from repro.configs.registry import get_arch
+    from repro.launch.steps import build_bundle
+
+    spec = get_arch(arch)
+    if spec.kind in ("lm", "moe"):
+        L = spec.full_config().n_layers
+        b2 = build_bundle(arch, shape, mesh, probe={"n_layers": 2})
+        c2 = _cell_cost(_compile_bundle(b2, mesh))
+        b4 = build_bundle(arch, shape, mesh, probe={"n_layers": 4})
+        c4 = _cell_cost(_compile_bundle(b4, mesh))
+        corrected = {k: c2[k] + (L - 2) / 2.0 * (c4[k] - c2[k])
+                     for k in c2}
+        corrected["method"] = f"two-point layers(2,4) -> L={L}"
+        return corrected
+    if spec.kind == "gnn" and bundle.meta.get("edge_chunks", 1) > 1:
+        E_full = bundle.meta["n_edges"]
+        c = bundle.meta["edge_chunks"]
+        e1 = max(E_full // c, 1)
+        b1 = build_bundle(arch, shape, mesh, probe={"n_edges": e1})
+        cost1 = _cell_cost(_compile_bundle(b1, mesh))
+        e1p = b1.meta["n_edges"]
+        b2 = build_bundle(arch, shape, mesh, probe={"n_edges": 2 * e1})
+        cost2 = _cell_cost(_compile_bundle(b2, mesh))
+        e2p = b2.meta["n_edges"]
+        corrected = {}
+        for k in cost1:
+            rate = (cost2[k] - cost1[k]) / max(e2p - e1p, 1)
+            corrected[k] = cost1[k] + rate * (E_full - e1p)
+        corrected["method"] = f"two-point edges({e1p},{e2p}) -> E={E_full}"
+        return corrected
+    out = dict(main_cost)
+    out["method"] = "exact (no scanned loops)"
+    return out
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool,
+             skip_reason: str = "", probes: bool = True) -> Dict[str, Any]:
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import build_bundle
+
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+    }
+    if skip_reason:
+        rec["status"] = "SKIP"
+        rec["reason"] = skip_reason
+        return rec
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        bundle = build_bundle(arch, shape, mesh)
+        t_build = time.time() - t0
+        compiled = _compile_bundle(bundle, mesh)
+        t_compile = time.time() - t0 - t_build
+
+        mem = compiled.memory_analysis()
+        main_cost = _cell_cost(compiled)
+        coll = collective_bytes(compiled.as_text())
+
+        rec.update({
+            "status": "OK",
+            "compile_s": round(t_compile, 1),
+            "meta": {k: v for k, v in bundle.meta.items()
+                     if isinstance(v, (int, float, str))},
+            "memory": {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+                "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+                "peak_bytes": (getattr(mem, "argument_size_in_bytes", 0)
+                               + getattr(mem, "output_size_in_bytes", 0)
+                               + getattr(mem, "temp_size_in_bytes", 0)),
+            },
+            "cost_raw": main_cost,
+            "collectives": coll,
+        })
+        if probes:
+            rec["cost"] = _probe_corrected_cost(arch, shape, mesh, bundle,
+                                                main_cost)
+    except Exception as e:  # a failing cell is a bug — record it loudly
+        rec["status"] = "FAIL"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--no-probes", action="store_true",
+                    help="skip the two-point cost-correction compiles")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    from repro.configs.registry import all_cells, get_arch
+
+    if args.all:
+        cells = all_cells()
+    else:
+        spec = get_arch(args.arch)
+        cells = [{"arch": args.arch, "shape": args.shape,
+                  "skip": spec.skip_cells.get(args.shape, "")}]
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    results = []
+    for cell in cells:
+        for mp in meshes:
+            rec = run_cell(cell["arch"], cell["shape"], mp,
+                           skip_reason=cell.get("skip", ""),
+                           probes=not args.no_probes)
+            status = rec["status"]
+            extra = (f"compile={rec.get('compile_s')}s "
+                     f"flops={rec.get('cost', {}).get('flops', 0):.3g}"
+                     if status == "OK" else rec.get("reason",
+                                                    rec.get("error", "")))
+            print(f"[{status}] {rec['arch']} x {rec['shape']} @ {rec['mesh']}"
+                  f" {extra}", flush=True)
+            if status == "FAIL":
+                print(rec["traceback"][-1500:], flush=True)
+            results.append(rec)
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"wrote {args.out}")
+    n_fail = sum(r["status"] == "FAIL" for r in results)
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

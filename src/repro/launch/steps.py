@@ -1,0 +1,425 @@
+"""Step builders: (arch x shape x mesh) -> jit-able step + specs + shardings.
+
+Shared by the dry-run (lower/compile on ShapeDtypeStructs), the trainer and
+the server.  Every cell resolves here to:
+
+    step_fn, input_sds (ShapeDtypeStructs), in_shardings, out_shardings,
+    donate_argnums, meta (model flops etc.)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.registry import ArchSpec, get_arch
+from repro.configs.shapes import (GNNShape, LMShape, RecsysShape, shapes_for)
+from repro.dist.sharding import (SERVE_RULES, TRAIN_RULES, AxisRules,
+                                 logical_spec)
+from repro.models import dlrm as dlrm_lib
+from repro.models import transformer as tf_lib
+from repro.models.gnn import api as gnn_api
+from repro.models.gnn import equiformer, gat, mace, nequip
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update, \
+    clip_by_global_norm
+
+GNN_MODULES = {"gat": gat, "nequip": nequip, "mace": mace,
+               "equiformer": equiformer}
+
+Pytree = Any
+
+
+@dataclasses.dataclass
+class StepBundle:
+    step_fn: Any
+    input_sds: Tuple
+    in_shardings: Tuple
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...]
+    meta: Dict[str, Any]
+
+
+def pad_to(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+def _sds_like(tree: Pytree) -> Pytree:
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def _data_shards(mesh) -> int:
+    n = 1
+    for a in ("pod", "data"):
+        if a in mesh.shape:
+            n *= mesh.shape[a]
+    return n
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+def _lm_bundle(spec: ArchSpec, shape: LMShape, mesh) -> StepBundle:
+    q_chunk = 512 if shape.seq_len >= 4096 else 0
+    moe_chunks = 8 if shape.step in ("train", "prefill") else 1
+    cfg = spec.full_config(attn_q_chunk=q_chunk,
+                           moe_token_chunks=moe_chunks)
+    tp = mesh.shape.get("model", 1)
+    if cfg.n_heads % tp != 0:
+        # group-aligned head padding so the 'model' axis divides (DESIGN §5)
+        g = cfg.n_heads // cfg.n_kv_heads
+        gp = g
+        while (cfg.n_kv_heads * gp) % tp != 0:
+            gp += 1
+        cfg = dataclasses.replace(cfg, n_heads_padded=cfg.n_kv_heads * gp)
+    rules = TRAIN_RULES if shape.step == "train" else SERVE_RULES
+
+    pspecs = tf_lib.param_specs(cfg, rules, mesh)
+    params_sds = jax.eval_shape(partial(tf_lib.init_params, cfg),
+                                jax.random.key(0))
+    B, S = shape.global_batch, shape.seq_len
+    batch_spec = logical_spec(rules, ("batch", "seq"), (B, S), mesh)
+    meta = {
+        "model_params": cfg.n_params(),
+        "model_active_params": cfg.n_active_params(),
+        "tokens": B * (1 if shape.step == "decode" else S),
+        "step_kind": shape.step,
+    }
+
+    if shape.step == "train":
+        opt_specs = AdamWState(
+            step=P(), mu=jax.tree.map(lambda s: s, pspecs),
+            nu=jax.tree.map(lambda s: s, pspecs))
+        opt_sds = jax.eval_shape(adamw_init, params_sds)
+
+        def train_step(params, opt_state, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: tf_lib.loss_fn(cfg, p, batch, rules, mesh),
+                has_aux=True)(params)
+            grads, gnorm = clip_by_global_norm(grads, 1.0)
+            params, opt_state = adamw_update(params, grads, opt_state,
+                                             lr=3e-4)
+            return params, opt_state, loss
+
+        tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        batch_sds = {"tokens": tok, "labels": tok}
+        batch_shardings = {"tokens": batch_spec, "labels": batch_spec}
+        return StepBundle(
+            step_fn=train_step,
+            input_sds=(params_sds, opt_sds, batch_sds),
+            in_shardings=(pspecs, opt_specs, batch_shardings),
+            out_shardings=(pspecs, opt_specs, P()),
+            donate_argnums=(0, 1),
+            meta=meta)
+
+    if shape.step == "prefill":
+        def prefill_step(params, batch):
+            logits, _ = tf_lib.forward(cfg, params, batch["tokens"], rules,
+                                       mesh)
+            return logits
+
+        tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        logits_spec = logical_spec(rules, ("batch", "seq", "vocab"),
+                                   (B, S, cfg.vocab_size), mesh)
+        return StepBundle(
+            step_fn=prefill_step,
+            input_sds=(params_sds, {"tokens": tok}),
+            in_shardings=(pspecs, {"tokens": batch_spec}),
+            out_shardings=logits_spec,
+            donate_argnums=(),
+            meta=meta)
+
+    # decode: one new token against a seq_len KV cache
+    cache_sds = jax.eval_shape(
+        partial(tf_lib.init_kv_cache, cfg, B, S))
+    tp = mesh.shape.get("model", 1)
+    if cfg.n_kv_heads % tp == 0:
+        # MHA-style archs (deepseek kv=32): shard the kv-head axis — fully
+        # local attention per shard, no split-KV reductions (§Perf C1;
+        # deepseek decode_32k peak 42.4 -> ~14 GB)
+        axes = {"k": (None, "batch", None, "heads", "head_dim"),
+                "v": (None, "batch", None, "heads", "head_dim"),
+                "positions": ("batch", None)}
+    else:
+        axes = tf_lib.cache_axes()  # GQA: FlashDecoding split-KV on seq
+    cache_specs = jax.tree.map(
+        lambda sds, names: logical_spec(rules, names, sds.shape, mesh),
+        cache_sds, axes,
+        is_leaf=lambda x: isinstance(x, tuple))
+
+    def decode(params, cache, tokens, pos):
+        return tf_lib.decode_step(cfg, params, cache, tokens, pos, rules,
+                                  mesh)
+
+    tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    tok_spec = logical_spec(rules, ("batch", None), (B, 1), mesh)
+    logits_spec = logical_spec(rules, ("batch", "vocab"),
+                               (B, cfg.vocab_size), mesh)
+    return StepBundle(
+        step_fn=decode,
+        input_sds=(params_sds, cache_sds, tok,
+                   jax.ShapeDtypeStruct((), jnp.int32)),
+        in_shardings=(pspecs, cache_specs, tok_spec, P()),
+        out_shardings=(logits_spec, cache_specs),
+        donate_argnums=(1,),
+        meta=meta)
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+def _gnn_ghost_bundle(spec: ArchSpec, shape: GNNShape, mesh) -> StepBundle:
+    """Ghost-exchange path (hillclimb A, DESIGN §3.4): nodes partitioned
+    over dp, edges with their receiver, per-layer all_to_all ghost refresh
+    inside shard_map.  Used for the full-batch-large cells where plain-pjit
+    GSPMD replicates node state (baseline: 44.6 TB peak on equiformer)."""
+    import jax.numpy as jnp_
+    from repro.models.gnn import ghost as ghost_lib
+    cfg = spec.full_config(shape, dtype=jnp.bfloat16)
+    rules = TRAIN_RULES
+    ds = _data_shards(mesh)
+    plan = ghost_lib.plan_shapes(shape.n_nodes, shape.n_edges, ds,
+                                 budget_frac=1.0,
+                                 edge_chunks=cfg.edge_chunks)
+    mod = GNN_MODULES[cfg.kind]
+    params_sds = jax.eval_shape(partial(mod.init_params, cfg),
+                                jax.random.key(0))
+    pspecs = jax.tree.map(lambda s: P(), params_sds)
+    opt_sds = jax.eval_shape(adamw_init, params_sds)
+    opt_specs = AdamWState(step=P(), mu=pspecs, nu=pspecs)
+
+    S, n_loc, B, e_loc = plan.n_shards, plan.n_loc, plan.budget, plan.e_loc
+    f32, i32 = jnp.float32, jnp.int32
+    batch_sds = {
+        "features": jax.ShapeDtypeStruct((S * n_loc, cfg.d_feat), f32),
+        "species": jax.ShapeDtypeStruct((S * n_loc,), i32),
+        "positions": jax.ShapeDtypeStruct((S * n_loc, 3), f32),
+        "labels": jax.ShapeDtypeStruct((S * n_loc,), i32),
+        "node_mask": jax.ShapeDtypeStruct((S * n_loc,), jnp.bool_),
+        "graph_id": jax.ShapeDtypeStruct((S * n_loc,), i32),
+        "senders": jax.ShapeDtypeStruct((S * e_loc,), i32),
+        "receivers": jax.ShapeDtypeStruct((S * e_loc,), i32),
+        "edge_mask": jax.ShapeDtypeStruct((S * e_loc,), jnp.bool_),
+        "send_idx": jax.ShapeDtypeStruct((S * S * B,), i32),
+        "send_mask": jax.ShapeDtypeStruct((S * S * B,), jnp.bool_),
+    }
+    dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    dp_spec = dp if len(dp) > 1 else dp[0]
+    bshard = {k: P(dp_spec) for k in batch_sds}
+
+    from repro.models.gnn.api import gnn_loss
+
+    def remat_forward(cfg_, params, batch):
+        batch = dict(batch)
+        batch["remat"] = True
+        return mod.forward(cfg_, params, batch)
+
+    class _Mod:
+        forward = staticmethod(remat_forward)
+
+    loss_fn = ghost_lib.ghost_loss_fn(cfg, _Mod, gnn_loss, mesh, plan)
+
+    def train_step(params, opt_state, batch):
+        l, grads = jax.value_and_grad(lambda p: loss_fn(p, batch))(params)
+        grads, _ = clip_by_global_norm(grads, 1.0)
+        params, opt_state = adamw_update(params, grads, opt_state, lr=1e-3)
+        return params, opt_state, l
+
+    meta = {
+        "step_kind": "train", "mode": "ghost_shard_map",
+        "n_nodes": S * n_loc, "n_edges": S * e_loc,
+        "ghost_budget_rows": S * B,
+        "model_flops_fwd": _gnn_edge_flops(cfg) * S * e_loc,
+        "edge_chunks": cfg.edge_chunks,
+    }
+    return StepBundle(
+        step_fn=train_step,
+        input_sds=(params_sds, opt_sds, batch_sds),
+        in_shardings=(pspecs, opt_specs, bshard),
+        out_shardings=(pspecs, opt_specs, P()),
+        donate_argnums=(0, 1),
+        meta=meta)
+
+
+def _gnn_bundle(spec: ArchSpec, shape: GNNShape, mesh) -> StepBundle:
+    cfg = spec.full_config(shape)
+    rules = TRAIN_RULES
+    ds = _data_shards(mesh)
+    pad_nodes = pad_to(shape.n_nodes, ds)
+    pad_edges = pad_to(shape.n_edges, ds * max(cfg.edge_chunks, 1))
+    mod = GNN_MODULES[cfg.kind]
+
+    params_sds = jax.eval_shape(partial(mod.init_params, cfg),
+                                jax.random.key(0))
+    pspecs = jax.tree.map(lambda s: P(), params_sds)  # replicated (small)
+    batch_sds = gnn_api.batch_specs(cfg, pad_nodes, pad_edges)
+
+    node_axes = {"features": ("nodes", None), "species": ("nodes",),
+                 "positions": ("nodes", None), "node_mask": ("nodes",),
+                 "graph_id": ("nodes",), "labels": ("nodes",)}
+    edge_axes = {"senders": ("edges",), "receivers": ("edges",),
+                 "edge_mask": ("edges",)}
+    batch_specs_shard = {}
+    for k, sds in batch_sds.items():
+        names = node_axes.get(k) or edge_axes.get(k)
+        batch_specs_shard[k] = logical_spec(rules, names, sds.shape, mesh)
+
+    opt_sds = jax.eval_shape(adamw_init, params_sds)
+    opt_specs = AdamWState(step=P(), mu=pspecs, nu=pspecs)
+
+    def train_step(params, opt_state, batch):
+        def loss(p):
+            out = mod.forward(cfg, p, batch)
+            return gnn_api.gnn_loss(cfg, out, batch)
+        l, grads = jax.value_and_grad(loss)(params)
+        grads, _ = clip_by_global_norm(grads, 1.0)
+        params, opt_state = adamw_update(params, grads, opt_state, lr=1e-3)
+        return params, opt_state, l
+
+    flops_per_edge = _gnn_edge_flops(cfg)
+    meta = {
+        "step_kind": "train",
+        "n_nodes": pad_nodes, "n_edges": pad_edges,
+        "model_flops_fwd": flops_per_edge * pad_edges,
+        "edge_chunks": cfg.edge_chunks,
+    }
+    return StepBundle(
+        step_fn=train_step,
+        input_sds=(params_sds, opt_sds, batch_sds),
+        in_shardings=(pspecs, opt_specs, batch_specs_shard),
+        out_shardings=(pspecs, opt_specs, P()),
+        donate_argnums=(0, 1),
+        meta=meta)
+
+
+def _gnn_edge_flops(cfg) -> int:
+    """Analytic per-edge forward FLOPs (for the useful-compute ratio)."""
+    C = cfg.d_hidden
+    if cfg.kind == "gat":
+        return cfg.n_layers * 4 * cfg.n_heads * C
+    ir = cfg.irrep_dim
+    if cfg.kind in ("nequip", "mace"):
+        from repro.models.gnn.nequip import tp_paths
+        paths = len(tp_paths(cfg.lmax))
+        return cfg.n_layers * paths * (2 * cfg.lmax + 1) ** 2 * 2 * C
+    # equiformer: 2 rotations [ir x ir] x C + SO(2) mixes
+    so2 = sum((cfg.lmax + 1 - m) ** 2 * C * C * (2 if m else 1) * 2
+              for m in range(cfg.m_max + 1))
+    return cfg.n_layers * (2 * 2 * ir * ir * C + so2)
+
+
+# ---------------------------------------------------------------------------
+# RecSys cells
+# ---------------------------------------------------------------------------
+
+def _recsys_bundle(spec: ArchSpec, shape: RecsysShape, mesh) -> StepBundle:
+    cfg = spec.full_config()
+    rules = TRAIN_RULES if shape.step == "train" else SERVE_RULES
+    pspecs = dlrm_lib.param_specs(cfg, rules, mesh)
+    params_sds = jax.eval_shape(partial(dlrm_lib.init_params, cfg),
+                                jax.random.key(0))
+    B = shape.batch
+    bspec = logical_spec(rules, ("batch", None), (max(B, 1), 1), mesh)
+    dense = jax.ShapeDtypeStruct((B, cfg.n_dense), jnp.float32)
+    ids = jax.ShapeDtypeStruct((B, cfg.n_sparse, cfg.multi_hot), jnp.int32)
+    meta = {"step_kind": shape.step, "batch": B,
+            "embed_rows": cfg.n_embed_rows}
+
+    if shape.step == "train":
+        opt_sds = jax.eval_shape(adamw_init, params_sds)
+        opt_specs = AdamWState(step=P(), mu=pspecs, nu=pspecs)
+
+        def train_step(params, opt_state, batch):
+            (l, m), grads = jax.value_and_grad(
+                lambda p: dlrm_lib.loss_fn(cfg, p, batch, rules, mesh),
+                has_aux=True)(params)
+            grads, _ = clip_by_global_norm(grads, 10.0)
+            params, opt_state = adamw_update(params, grads, opt_state,
+                                             lr=1e-3)
+            return params, opt_state, l
+
+        batch_sds = {"dense": dense, "sparse_ids": ids,
+                     "labels": jax.ShapeDtypeStruct((B,), jnp.int32)}
+        bshard = {"dense": bspec, "sparse_ids": bspec, "labels": bspec}
+        return StepBundle(
+            step_fn=train_step,
+            input_sds=(params_sds, opt_sds, batch_sds),
+            in_shardings=(pspecs, opt_specs, bshard),
+            out_shardings=(pspecs, opt_specs, P()),
+            donate_argnums=(0, 1),
+            meta=meta)
+
+    if shape.step == "serve":
+        def serve_step(params, batch):
+            return dlrm_lib.forward(cfg, params, batch, rules, mesh)
+
+        batch_sds = {"dense": dense, "sparse_ids": ids}
+        bshard = {"dense": bspec, "sparse_ids": bspec}
+        return StepBundle(
+            step_fn=serve_step,
+            input_sds=(params_sds, batch_sds),
+            in_shardings=(pspecs, bshard),
+            out_shardings=bspec,
+            donate_argnums=(),
+            meta=meta)
+
+    # retrieval: 1 query vs n_candidates
+    n_cand = pad_to(shape.n_candidates, _data_shards(mesh) * 16)
+    cand = jax.ShapeDtypeStruct((n_cand, cfg.embed_dim), jnp.float32)
+    cand_spec = logical_spec(rules, ("candidates", None), (n_cand, 1), mesh)
+
+    def retrieval_step(params, batch):
+        return dlrm_lib.retrieval_score(cfg, params, batch, rules, mesh)
+
+    batch_sds = {"dense": dense, "sparse_ids": ids, "candidates": cand}
+    bshard = {"dense": P(), "sparse_ids": P(), "candidates": cand_spec}
+    meta["n_candidates"] = n_cand
+    return StepBundle(
+        step_fn=retrieval_step,
+        input_sds=(params_sds, batch_sds),
+        in_shardings=(pspecs, bshard),
+        out_shardings=(P(), P()),
+        donate_argnums=(),
+        meta=meta)
+
+
+# ---------------------------------------------------------------------------
+
+def build_bundle(arch_id: str, shape_name: str, mesh,
+                 probe: Optional[Dict[str, Any]] = None) -> StepBundle:
+    """``probe`` builds a reduced cost-probe variant (dryrun two-point
+    FLOP/byte correction for scanned loops — cost_analysis counts a scan
+    body once):
+      {'n_layers': L}   LM: shrink the layer scan
+      {'n_edges': E}    GNN: shrink the edge set, edge_chunks=1 (no scan)
+    """
+    spec = get_arch(arch_id)
+    shape = shapes_for(spec.kind)[shape_name]
+    if spec.kind in ("lm", "moe"):
+        if probe and "n_layers" in probe:
+            orig = spec.full_config
+            # probes must be completely scan-free (cost_analysis counts any
+            # scan body once): unrolled layers, unchunked attention + MoE.
+            spec = dataclasses.replace(
+                spec, full_config=lambda **kw: orig(
+                    **{**kw, "n_layers": probe["n_layers"],
+                       "attn_q_chunk": 0, "scan_layers": False,
+                       "moe_token_chunks": 1}))
+        return _lm_bundle(spec, shape, mesh)
+    if spec.kind == "gnn":
+        ghost = shape.name == "ogb_products"  # full-batch-large -> ghosts
+        if probe and "n_edges" in probe:
+            shape = dataclasses.replace(
+                shape, n_edges=probe["n_edges"], edge_chunks=1)
+        if ghost:
+            return _gnn_ghost_bundle(spec, shape, mesh)
+        return _gnn_bundle(spec, shape, mesh)
+    return _recsys_bundle(spec, shape, mesh)

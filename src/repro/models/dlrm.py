@@ -1,0 +1,151 @@
+"""DLRM-RM2 (arXiv:1906.00091): sparse embedding bags -> dot interaction ->
+MLPs.
+
+JAX has no nn.EmbeddingBag — the lookup is built here from ``jnp.take`` +
+``segment_sum`` (taxonomy §RecSys: "this IS part of the system"), with a
+Pallas kernel (kernels/embedding_bag) as the TPU hot path.  The 26 tables
+are stacked [F, V, D] and row-sharded on 'model' — the same vertex-
+partitioning the paper's atom placement does for bipartite user/item graphs
+(DESIGN.md §4).
+
+Shapes cells: train_batch (65536), serve_p99 (512), serve_bulk (262144),
+retrieval_cand (1 query x 1M candidates — batched dot, not a loop).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.sharding import AxisRules, logical_spec, shard_constraint
+from repro.models.layers import init_dense
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    name: str = "dlrm-rm2"
+    n_dense: int = 13
+    n_sparse: int = 26
+    embed_dim: int = 64
+    vocab_size: int = 1_048_576          # per table (2^20: shards 16-way)
+    multi_hot: int = 1                    # ids per field (bag size)
+    bot_mlp: Tuple[int, ...] = (512, 256, 64)
+    top_mlp: Tuple[int, ...] = (512, 512, 256, 1)
+    dtype: Any = jnp.float32
+
+    @property
+    def n_embed_rows(self) -> int:
+        return self.n_sparse * self.vocab_size
+
+
+def init_params(cfg: DLRMConfig, key: jax.Array) -> Pytree:
+    keys = jax.random.split(key, 3)
+    tables = (jax.random.normal(
+        keys[0], (cfg.n_sparse, cfg.vocab_size, cfg.embed_dim), jnp.float32)
+        / np.sqrt(cfg.embed_dim)).astype(cfg.dtype)
+
+    def mlp(key, dims_in, dims):
+        ws, d = [], dims_in
+        for i, h in enumerate(dims):
+            k1, k2, key = jax.random.split(key, 3)
+            ws.append({"w": init_dense(k1, (d, h), dtype=cfg.dtype),
+                       "b": jnp.zeros((h,), cfg.dtype)})
+            d = h
+        return ws
+
+    n_feat = 1 + cfg.n_sparse                  # bottom output + embeddings
+    n_pairs = n_feat * (n_feat - 1) // 2
+    top_in = n_pairs + cfg.bot_mlp[-1]
+    return {
+        "tables": tables,
+        "bot": mlp(keys[1], cfg.n_dense, cfg.bot_mlp),
+        "top": mlp(keys[2], top_in, cfg.top_mlp),
+    }
+
+
+def param_axes(cfg: DLRMConfig) -> Pytree:
+    return {
+        "tables": (None, "table_rows", None),
+        "bot": [{"w": (None, None), "b": (None,)} for _ in cfg.bot_mlp],
+        "top": [{"w": (None, None), "b": (None,)} for _ in cfg.top_mlp],
+    }
+
+
+def param_specs(cfg: DLRMConfig, rules: AxisRules, mesh) -> Pytree:
+    shapes = jax.eval_shape(lambda k: init_params(cfg, k), jax.random.key(0))
+    return jax.tree.map(
+        lambda s, a: logical_spec(rules, a, s.shape, mesh),
+        shapes, param_axes(cfg), is_leaf=lambda x: isinstance(x, tuple))
+
+
+def embedding_bag(tables: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    """tables [F, V, D], ids [B, F, H] (H-hot) -> bags [B, F, D].
+
+    take + segment-free sum over the bag axis — the jnp reference
+    implementation; kernels/embedding_bag provides the Pallas TPU path."""
+    # gather per field: tables[f, ids[b, f, h]] -> [B, F, H, D]
+    gathered = jnp.take_along_axis(
+        tables[None, :, :, :],                           # [1, F, V, D]
+        ids[:, :, :, None].astype(jnp.int32),            # [B, F, H, 1]
+        axis=2)
+    return gathered.sum(axis=2)                          # [B, F, D]
+
+
+def _mlp_apply(ws, x, act_last=False):
+    for i, layer in enumerate(ws):
+        x = x @ layer["w"] + layer["b"]
+        if i < len(ws) - 1 or act_last:
+            x = jax.nn.relu(x)
+    return x
+
+
+def forward(cfg: DLRMConfig, params: Pytree, batch: Dict[str, jnp.ndarray],
+            rules: AxisRules, mesh=None) -> jnp.ndarray:
+    """batch: dense [B, 13] float, sparse_ids [B, 26, H] int -> logits [B]."""
+    dense = batch["dense"].astype(cfg.dtype)
+    ids = batch["sparse_ids"]
+    B = dense.shape[0]
+
+    bot = _mlp_apply(params["bot"], dense)                # [B, D]
+    bags = embedding_bag(params["tables"], ids)           # [B, F, D]
+    bags = shard_constraint(bags, rules, ("batch", None, None), mesh)
+
+    feats = jnp.concatenate([bot[:, None, :], bags], 1)   # [B, F+1, D]
+    inter = jnp.einsum("bfd,bgd->bfg", feats, feats)      # dot interaction
+    iu, ju = np.triu_indices(feats.shape[1], k=1)
+    pairs = inter[:, iu, ju]                              # [B, n_pairs]
+    top_in = jnp.concatenate([bot, pairs], axis=-1)
+    logit = _mlp_apply(params["top"], top_in)[:, 0]
+    return logit
+
+
+def loss_fn(cfg: DLRMConfig, params, batch, rules, mesh=None):
+    logit = forward(cfg, params, batch, rules, mesh)
+    y = batch["labels"].astype(jnp.float32)
+    z = logit.astype(jnp.float32)
+    # numerically stable BCE-with-logits
+    bce = jnp.maximum(z, 0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z)))
+    return jnp.mean(bce), {"bce": jnp.mean(bce)}
+
+
+def retrieval_score(cfg: DLRMConfig, params: Pytree,
+                    batch: Dict[str, jnp.ndarray],
+                    rules: AxisRules, mesh=None,
+                    top_k: int = 100) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """retrieval_cand cell: one query against N candidate item embeddings —
+    a two-tower batched dot + top-k, NOT a loop over candidates."""
+    dense = batch["dense"].astype(cfg.dtype)              # [1, 13]
+    ids = batch["sparse_ids"]                             # [1, F, H]
+    cand = batch["candidates"].astype(cfg.dtype)          # [N, D]
+    bot = _mlp_apply(params["bot"], dense)                # [1, D]
+    bags = embedding_bag(params["tables"], ids)           # [1, F, D]
+    query = bot + bags.sum(axis=1)                        # [1, D] user tower
+    cand = shard_constraint(cand, rules, ("candidates", None), mesh)
+    scores = (cand @ query[0]).astype(jnp.float32)        # [N]
+    vals, idx = jax.lax.top_k(scores, top_k)
+    return vals, idx

@@ -1,0 +1,4 @@
+from repro.models.gnn import irreps
+from repro.models.gnn.common import message_passing, segment_softmax
+
+__all__ = ["irreps", "message_passing", "segment_softmax"]

@@ -1,0 +1,112 @@
+"""Common config + batch format for the four assigned GNN architectures.
+
+All GNN shape cells feed a ``GraphBatch`` of static-shaped arrays:
+  features  [N, d_feat]  node input features (citation shapes) — molecular
+                         archs project them into the species channel;
+  species   [N]          atomic species ids (molecule shape) — citation
+                         archs embed them when features are absent;
+  positions [N, 3]       node coordinates.  Molecular shapes carry real
+                         geometry; citation graphs get synthetic positions
+                         (the equivariant archs need *some* geometry — noted
+                         in DESIGN.md §Arch-applicability);
+  senders/receivers [E]  receiver-sorted edge list; edge_mask/node_mask for
+                         padding (sampled subgraphs);
+  graph_id  [N]          block-diagonal batch membership (molecule cells);
+  labels    [N] or [G]   node classes or per-graph regression targets.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    name: str
+    kind: str                  # 'gat' | 'nequip' | 'mace' | 'equiformer'
+    n_layers: int
+    d_hidden: int
+    lmax: int = 0
+    m_max: int = 0             # eSCN truncation (equiformer)
+    n_heads: int = 1
+    correlation: int = 1       # MACE product-basis order
+    n_rbf: int = 8
+    cutoff: float = 5.0
+    d_feat: int = 16           # input feature dim
+    n_classes: int = 16        # output dim (classes or energy basis)
+    n_species: int = 16
+    task: str = "node_class"   # 'node_class' | 'graph_energy'
+    n_graphs: int = 1          # block-diagonal batch size (molecule cells)
+    edge_chunks: int = 1
+    dtype: Any = jnp.float32
+
+    @property
+    def irrep_dim(self) -> int:
+        return (self.lmax + 1) ** 2
+
+
+def make_graph_batch(structure, d_feat: int, n_classes: int,
+                     positions: Optional[np.ndarray] = None,
+                     graph_id: Optional[np.ndarray] = None,
+                     n_species: int = 16,
+                     seed: int = 0) -> Dict[str, jnp.ndarray]:
+    """Synthetic batch over a real structure (host-side)."""
+    rng = np.random.default_rng(seed)
+    n, e = structure.n_vertices, structure.n_edges
+    if positions is None:
+        positions = rng.normal(0, 1.0, size=(n, 3))
+    feats = rng.normal(0, 1.0, size=(n, d_feat)).astype(np.float32)
+    return {
+        "features": jnp.asarray(feats),
+        "species": jnp.asarray(rng.integers(0, n_species, n), jnp.int32),
+        "positions": jnp.asarray(positions, jnp.float32),
+        "senders": jnp.asarray(structure.senders),
+        "receivers": jnp.asarray(structure.receivers),
+        "edge_mask": jnp.ones((e,), bool),
+        "node_mask": jnp.ones((n,), bool),
+        "graph_id": jnp.asarray(
+            graph_id if graph_id is not None else np.zeros(n), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, n_classes, n), jnp.int32),
+    }
+
+
+def batch_specs(cfg: GNNConfig, n_nodes: int, n_edges: int,
+                n_graphs: int = 1) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for the dry-run (no allocation)."""
+    f32, i32 = jnp.float32, jnp.int32
+    return {
+        "features": jax.ShapeDtypeStruct((n_nodes, cfg.d_feat), f32),
+        "species": jax.ShapeDtypeStruct((n_nodes,), i32),
+        "positions": jax.ShapeDtypeStruct((n_nodes, 3), f32),
+        "senders": jax.ShapeDtypeStruct((n_edges,), i32),
+        "receivers": jax.ShapeDtypeStruct((n_edges,), i32),
+        "edge_mask": jax.ShapeDtypeStruct((n_edges,), jnp.bool_),
+        "node_mask": jax.ShapeDtypeStruct((n_nodes,), jnp.bool_),
+        "graph_id": jax.ShapeDtypeStruct((n_nodes,), i32),
+        "labels": jax.ShapeDtypeStruct((n_nodes,), i32),
+    }
+
+
+def gnn_loss(cfg: GNNConfig, node_out: jnp.ndarray,
+             batch: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    """Node classification CE, or per-graph energy MSE (molecule cells)."""
+    mask = batch["node_mask"]
+    if cfg.task == "graph_energy":
+        # energy = sum of node scalars per graph (block-diagonal batch)
+        e_node = node_out[..., 0] * mask
+        seg = jax.ops.segment_sum(e_node, batch["graph_id"],
+                                  num_segments=cfg.n_graphs)
+        target = jnp.zeros_like(seg)  # synthetic target
+        return jnp.mean(jnp.square(seg - target))
+    logits = node_out.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, batch["labels"][:, None].astype(jnp.int32), axis=-1)[:, 0]
+    nll = (lse - gold) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)

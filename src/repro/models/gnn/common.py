@@ -1,0 +1,115 @@
+"""Shared GNN message-passing machinery on the segment-op substrate.
+
+``message_passing`` is the model-side twin of the GraphLab engines'
+gather/⊕/apply (DESIGN.md §3.1): per-edge messages from gathered endpoint
+features, segment-combined into receiver accumulators.  ``edge_chunks > 1``
+streams the edge array through a ``lax.scan`` so the peak per-edge
+intermediate is E/chunks — the knob that makes EquiformerV2's 49-component
+irrep messages fit HBM on the 61.9M-edge ogb_products cell (the memory
+roofline term made explicit).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def message_passing(
+    node_feats: Pytree,
+    senders: jnp.ndarray,
+    receivers: jnp.ndarray,
+    n_nodes: int,
+    edge_fn: Callable[[Pytree, jnp.ndarray], Pytree],
+    edge_feats: Pytree = None,
+    edge_mask: Optional[jnp.ndarray] = None,
+    edge_chunks: int = 1,
+) -> Pytree:
+    """acc[v] = sum over in-edges e=(u,v) of edge_fn(x[u], edge_feats[e]).
+
+    edge_fn(src_feats, edge_feats) -> per-edge message pytree.
+    ``receivers`` must be sorted when edge_chunks == 1 isn't required, but
+    sortedness helps XLA either way.
+    """
+    E = senders.shape[0]
+    if edge_mask is None:
+        edge_mask = jnp.ones((E,), bool)
+
+    def compute(sl_senders, sl_receivers, sl_efeats, sl_mask):
+        src = jax.tree.map(lambda x: x[sl_senders], node_feats)
+        msgs = edge_fn(src, sl_efeats)
+        rec = jnp.where(sl_mask, sl_receivers, n_nodes)  # drop padded edges
+
+        def seg(m):
+            return jax.ops.segment_sum(m, rec, n_nodes + 1)[:n_nodes]
+
+        return jax.tree.map(seg, msgs)
+
+    if edge_chunks <= 1:
+        return compute(senders, receivers, edge_feats, edge_mask)
+
+    assert E % edge_chunks == 0, (E, edge_chunks)
+    chunk = E // edge_chunks
+
+    def reshape(x):
+        return x.reshape((edge_chunks, chunk) + x.shape[1:])
+
+    cs = reshape(senders)
+    cr = reshape(receivers)
+    cm = reshape(edge_mask)
+    ce = jax.tree.map(reshape, edge_feats) if edge_feats is not None else None
+
+    # checkpoint the chunk body: without it the scan transpose saves every
+    # chunk's edge-level linearization residuals (measured 44 GB/layer on
+    # nequip x ogb_products — §Perf A2); with it, backward recomputes one
+    # chunk at a time.
+    compute_ckpt = jax.checkpoint(
+        compute, policy=jax.checkpoint_policies.nothing_saveable)
+
+    def body(acc, xs):
+        if ce is not None:
+            s, r, m, e = xs
+        else:
+            s, r, m = xs
+            e = None
+        out = compute_ckpt(s, r, e, m)
+        return jax.tree.map(jnp.add, acc, out), None
+
+    zero = compute(cs[0] * 0, cr[0] * 0, jax.tree.map(lambda x: x[0],
+                   ce) if ce is not None else None, cm[0] & False)
+    zero = jax.tree.map(jnp.zeros_like, zero)
+    xs = (cs, cr, cm, ce) if ce is not None else (cs, cr, cm)
+    acc, _ = jax.lax.scan(body, zero, xs)
+    return acc
+
+
+def segment_softmax(
+    logits: jnp.ndarray,
+    receivers: jnp.ndarray,
+    n_nodes: int,
+    edge_mask: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Numerically stable softmax over each receiver's in-edge set
+    (GAT's edge attention; EquiformerV2's per-neighbor attention)."""
+    if edge_mask is not None:
+        logits = jnp.where(edge_mask, logits, -jnp.inf)
+    mx = jax.ops.segment_max(logits, receivers, n_nodes)
+    mx = jnp.where(jnp.isfinite(mx), mx, 0.0)
+    ex = jnp.exp(logits - mx[receivers])
+    if edge_mask is not None:
+        ex = jnp.where(edge_mask, ex, 0.0)
+    den = jax.ops.segment_sum(ex, receivers, n_nodes)
+    return ex / jnp.maximum(den[receivers], 1e-12)
+
+
+def radial_basis(dist: jnp.ndarray, n_rbf: int, cutoff: float) -> jnp.ndarray:
+    """Bessel-style radial basis with smooth cosine cutoff (NequIP/MACE)."""
+    d = jnp.maximum(dist, 1e-6)
+    n = jnp.arange(1, n_rbf + 1, dtype=d.dtype)
+    basis = jnp.sqrt(2.0 / cutoff) * jnp.sin(
+        n * jnp.pi * d[..., None] / cutoff) / d[..., None]
+    env = 0.5 * (jnp.cos(jnp.pi * jnp.clip(d / cutoff, 0, 1)) + 1.0)
+    return basis * env[..., None]

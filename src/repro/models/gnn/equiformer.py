@@ -1,0 +1,194 @@
+"""EquiformerV2 — equivariant graph attention via eSCN convolutions
+(arXiv:2306.12059), TPU adaptation.
+
+The eSCN trick (the arch's whole point): a full SO(3) tensor-product
+convolution at lmax=6 costs O(lmax^6); rotating each edge's features into a
+frame where the edge direction is +z makes the convolution block-diagonal in
+m, and truncating to |m| <= m_max (config: 2) cuts it to O(lmax^3)-ish.
+
+Per layer, per edge e=(u, v):
+  D_e     = wigner_d(align_to_z(r_uv))                  (irreps.py)
+  f       = D_e x_u                                     (rotate to edge frame)
+  y_m     = SO(2) mix: for each m <= m_max, the (l, +/-m) components mix
+            across l and channels with a 2x2-rotation-structured weight,
+            modulated per-edge by a radial MLP; m > m_max dropped
+  alpha_e = segment-softmax attention from invariant (l=0) channels
+  msg     = alpha_e * D_e^T y                           (rotate back)
+  x_v    <- x_v + per-l linear(sum msgs); equivariant RMS norm; gated FFN
+
+D_e is recomputed inside each edge chunk (storing [E, 49, 49] rotation
+matrices for 62M edges would need ~600 GB — FLOPs are cheaper than HBM, the
+memory-roofline-driven choice recorded in DESIGN.md §6 / EXPERIMENTS §Perf).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.gnn import irreps
+from repro.models.gnn.api import GNNConfig
+from repro.models.gnn.common import (message_passing, radial_basis,
+                                     segment_softmax)
+from repro.models.layers import init_dense
+
+Pytree = Any
+
+
+def _m_indices(lmax: int, m_max: int) -> List[Tuple[int, np.ndarray, np.ndarray]]:
+    """For each m in 0..m_max: (m, idx of (l,+m) comps, idx of (l,-m))."""
+    out = []
+    for m in range(m_max + 1):
+        pos = np.asarray([l * l + l + m for l in range(max(m, 0), lmax + 1)
+                          if m <= l], np.int32)
+        neg = np.asarray([l * l + l - m for l in range(max(m, 0), lmax + 1)
+                          if m <= l], np.int32)
+        out.append((m, pos, neg))
+    return out
+
+
+def init_params(cfg: GNNConfig, key: jax.Array) -> Pytree:
+    C, lmax, m_max = cfg.d_hidden, cfg.lmax, cfg.m_max
+    midx = _m_indices(lmax, m_max)
+    keys = jax.random.split(key, 8 * cfg.n_layers + 3)
+    layers = []
+    for i in range(cfg.n_layers):
+        k = jax.random.split(keys[i], 10)
+        so2 = []
+        for j, (m, pos, neg) in enumerate(midx):
+            nl = pos.size
+            so2.append({
+                "w_r": init_dense(k[j % 8], (nl, C, nl, C),
+                                  scale=1.0 / np.sqrt(nl * C),
+                                  dtype=cfg.dtype),
+                "w_i": (init_dense(jax.random.fold_in(k[j % 8], 1),
+                                   (nl, C, nl, C),
+                                   scale=1.0 / np.sqrt(nl * C),
+                                   dtype=cfg.dtype) if m > 0 else None),
+            })
+        layers.append({
+            "so2": so2,
+            "rad_w1": init_dense(k[8], (cfg.n_rbf, 32), dtype=cfg.dtype),
+            "rad_w2": init_dense(k[9], (32, (m_max + 1) * C), dtype=cfg.dtype),
+            "attn_src": init_dense(jax.random.fold_in(k[0], 7),
+                                   (C, cfg.n_heads), dtype=cfg.dtype),
+            "attn_dst": init_dense(jax.random.fold_in(k[1], 7),
+                                   (C, cfg.n_heads), dtype=cfg.dtype),
+            "mix_out": init_dense(jax.random.fold_in(k[2], 7),
+                                  (cfg.lmax + 1, C, C), dtype=cfg.dtype),
+            "ffn_w1": init_dense(jax.random.fold_in(k[3], 7), (C, 2 * C),
+                                 dtype=cfg.dtype),
+            "ffn_w2": init_dense(jax.random.fold_in(k[4], 7), (2 * C, C),
+                                 dtype=cfg.dtype),
+            "gate_w": init_dense(jax.random.fold_in(k[5], 7),
+                                 (C, max(cfg.lmax, 1) * C), dtype=cfg.dtype),
+        })
+    return {
+        "embed": init_dense(keys[-3], (cfg.n_species, C), dtype=cfg.dtype),
+        "feat_proj": init_dense(keys[-2], (cfg.d_feat, C), dtype=cfg.dtype),
+        "layers": layers,
+        "readout": init_dense(keys[-1], (C, cfg.n_classes), dtype=cfg.dtype),
+    }
+
+
+def _equiv_rms_norm(x: jnp.ndarray, lmax: int) -> jnp.ndarray:
+    """Per-l RMS over (m, channel) — rotation invariant."""
+    blocks = []
+    for l in range(lmax + 1):
+        sl = irreps.slice_l(l)
+        b = x[:, sl, :]
+        rms = jnp.sqrt(jnp.mean(jnp.square(b), axis=(1, 2),
+                                keepdims=True) + 1e-6)
+        blocks.append(b / rms)
+    return jnp.concatenate(blocks, axis=1)
+
+
+def forward(cfg: GNNConfig, params: Pytree,
+            batch: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    C, lmax, m_max = cfg.d_hidden, cfg.lmax, cfg.m_max
+    pos = batch["positions"].astype(cfg.dtype)
+    s, r = batch["senders"], batch["receivers"]
+    emask = batch["edge_mask"]
+    n = pos.shape[0]
+    midx = _m_indices(lmax, m_max)
+
+    x0 = (params["embed"][batch["species"]]
+          + batch["features"].astype(cfg.dtype) @ params["feat_proj"])
+    x = jnp.zeros((n, cfg.irrep_dim, C), cfg.dtype)
+    x = x.at[:, 0, :].set(x0)
+
+    rel = pos[r] - pos[s]
+    dist = jnp.linalg.norm(rel + 1e-12, axis=-1)
+    rbf = radial_basis(dist, cfg.n_rbf, cfg.cutoff)
+    refresh = batch.get("ghost_refresh") or (lambda t: t)
+
+    def layer_fn(x, lp):
+        x = refresh(x)  # ghost rows re-synced from owners (DESIGN §3.4)
+
+        # attention logits from invariant channels (computed on full edge
+        # set — scalars only, cheap)
+        a = (x[:, 0, :] @ lp["attn_src"])[s] + (x[:, 0, :] @ lp["attn_dst"])[r]
+        logits = jax.nn.leaky_relu(a, 0.2).mean(-1)           # [E]
+        alpha = segment_softmax(logits, r, n, emask)          # [E]
+
+        def edge_fn(src_x, efeat):
+            e_rel, e_rbf, e_alpha, e_m = efeat
+            e_rad = (jax.nn.silu(e_rbf @ lp["rad_w1"]) @ lp["rad_w2"]
+                     ).reshape(-1, m_max + 1, C)  # per-chunk (§Perf A3)
+            # rotate into the edge frame (recomputed per chunk: cheaper than
+            # materializing [E, 49, 49] rotations in HBM)
+            Ds = irreps.wigner_d(irreps.align_to_z(e_rel), lmax)
+            f = []
+            for l in range(lmax + 1):
+                f.append(jnp.einsum(
+                    "eij,ejc->eic", Ds[l].astype(src_x.dtype),
+                    src_x[:, irreps.slice_l(l), :]))
+            f = jnp.concatenate(f, axis=1)                    # [E, ir, C]
+
+            y = jnp.zeros_like(f)
+            for j, (m, pidx, nidx) in enumerate(midx):
+                fp = f[:, pidx, :]                            # [E, nl, C]
+                w = lp["so2"][j]
+                mod = e_rad[:, j][:, None, :]                 # [E, 1, C]
+                if m == 0:
+                    yp = jnp.einsum("elc,lckd->ekd", fp, w["w_r"]) * mod
+                    y = y.at[:, pidx, :].add(yp)
+                else:
+                    fn = f[:, nidx, :]
+                    yp = (jnp.einsum("elc,lckd->ekd", fp, w["w_r"])
+                          - jnp.einsum("elc,lckd->ekd", fn, w["w_i"])) * mod
+                    yn = (jnp.einsum("elc,lckd->ekd", fp, w["w_i"])
+                          + jnp.einsum("elc,lckd->ekd", fn, w["w_r"])) * mod
+                    y = y.at[:, pidx, :].add(yp)
+                    y = y.at[:, nidx, :].add(yn)
+            # rotate back, weight by attention
+            out = []
+            for l in range(lmax + 1):
+                out.append(jnp.einsum(
+                    "eji,ejc->eic", Ds[l].astype(y.dtype),
+                    y[:, irreps.slice_l(l), :]))
+            out = jnp.concatenate(out, axis=1)
+            return out * (e_alpha * e_m)[:, None, None]
+
+        agg = message_passing(
+            x, s, r, n, edge_fn,
+            edge_feats=(rel, rbf, alpha, emask.astype(cfg.dtype)),
+            edge_mask=emask, edge_chunks=cfg.edge_chunks)
+
+        from repro.models.gnn.nequip import _gate, _per_l_linear
+        x = x + _per_l_linear(agg, lp["mix_out"], lmax)
+        x = _equiv_rms_norm(x, lmax)
+        # gated FFN on invariant channels
+        h = jax.nn.silu(x[:, 0, :] @ lp["ffn_w1"]) @ lp["ffn_w2"]
+        x = x.at[:, 0, :].add(h)
+        return _gate(x, lp["gate_w"], lmax)
+
+    if batch.get("remat"):
+        layer_fn = jax.checkpoint(
+            layer_fn, policy=jax.checkpoint_policies.nothing_saveable)
+    for lp in params["layers"]:
+        x = layer_fn(x, lp)
+
+    return x[:, 0, :] @ params["readout"]

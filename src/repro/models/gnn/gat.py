@@ -1,0 +1,67 @@
+"""Graph Attention Network (Velickovic et al., arXiv:1710.10903).
+
+Cora reference architecture: layer 1 = 8 heads x 8 dims, ELU, concat;
+layer 2 = 1 head -> n_classes.  SDDMM edge scores -> segment softmax -> SpMM,
+all on the segment-op substrate (kernel regime 1 of the taxonomy §GNN).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gnn.api import GNNConfig
+from repro.models.gnn.common import segment_softmax
+from repro.models.layers import init_dense
+
+Pytree = Any
+
+
+def init_params(cfg: GNNConfig, key: jax.Array) -> Pytree:
+    keys = jax.random.split(key, cfg.n_layers * 3 + 1)
+    layers = []
+    d_in = cfg.d_feat
+    for i in range(cfg.n_layers):
+        last = i == cfg.n_layers - 1
+        heads = 1 if last else cfg.n_heads
+        d_out = cfg.n_classes if last else cfg.d_hidden
+        layers.append({
+            "w": init_dense(keys[3 * i], (d_in, heads, d_out),
+                            dtype=cfg.dtype),
+            "a_src": init_dense(keys[3 * i + 1], (heads, d_out),
+                                dtype=cfg.dtype),
+            "a_dst": init_dense(keys[3 * i + 2], (heads, d_out),
+                                dtype=cfg.dtype),
+        })
+        d_in = d_out * heads
+    return {"layers": layers}
+
+
+def forward(cfg: GNNConfig, params: Pytree,
+            batch: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    x = batch["features"].astype(cfg.dtype)
+    s, r = batch["senders"], batch["receivers"]
+    emask = batch["edge_mask"]
+    n = x.shape[0]
+
+    refresh = batch.get("ghost_refresh") or (lambda t: t)
+    for i, lp in enumerate(params["layers"]):
+        x = refresh(x)
+        last = i == len(params["layers"]) - 1
+        h = jnp.einsum("nd,dho->nho", x, lp["w"])           # [N, H, O]
+        # SDDMM: per-edge attention logits (GATv1 split form)
+        e_src = jnp.einsum("nho,ho->nh", h, lp["a_src"])    # [N, H]
+        e_dst = jnp.einsum("nho,ho->nh", h, lp["a_dst"])
+        logits = jax.nn.leaky_relu(e_src[s] + e_dst[r], 0.2)  # [E, H]
+        alpha = jax.vmap(
+            lambda lg: segment_softmax(lg, r, n, emask),
+            in_axes=1, out_axes=1)(logits)                  # [E, H]
+        msgs = alpha[:, :, None] * h[s]                     # [E, H, O]
+        msgs = jnp.where(emask[:, None, None], msgs, 0.0)
+        agg = jax.ops.segment_sum(msgs, r, n, indices_are_sorted=True)
+        if last:
+            x = agg.mean(axis=1)                            # head-average
+        else:
+            x = jax.nn.elu(agg).reshape(n, -1)              # concat heads
+    return x

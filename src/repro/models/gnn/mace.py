@@ -1,0 +1,142 @@
+"""MACE — higher-order equivariant message passing (arXiv:2206.07697).
+
+The MACE insight: instead of many message-passing layers, each layer builds
+a *many-body* feature via tensor powers of the one-particle density
+
+    A_i[l]  = sum_j R(|r_ij|) * CG-TP( h_j, Y(r_hat_ij) )      (density)
+    B2_i    = CG-TP(A_i, A_i)                                  (corr 2)
+    B3_i    = CG-TP(B2_i, A_i)                                 (corr 3)
+    h_i <- per-l linear([A, B2, B3]) + residual
+
+Two layers of correlation-order-3 products reach 13-body equivalent
+interactions.  ``correlation`` bounds the product order (config: 3).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gnn import irreps
+from repro.models.gnn.api import GNNConfig
+from repro.models.gnn.common import message_passing, radial_basis
+from repro.models.gnn.nequip import _gate, _per_l_linear, tp_paths
+from repro.models.layers import init_dense
+
+Pytree = Any
+
+
+def _sq_paths(lmax: int) -> List[Tuple[int, int, int]]:
+    """(l1, l2, l3) for the channel-wise self-products A (x) A."""
+    return tp_paths(lmax)
+
+
+def init_params(cfg: GNNConfig, key: jax.Array) -> Pytree:
+    C = cfg.d_hidden
+    paths = tp_paths(cfg.lmax)
+    nsq = len(_sq_paths(cfg.lmax))
+    keys = jax.random.split(key, 6 * cfg.n_layers + 3)
+    layers = []
+    for i in range(cfg.n_layers):
+        k = jax.random.split(keys[i], 8)
+        layer = {
+            "rad_w1": init_dense(k[0], (cfg.n_rbf, 32), dtype=cfg.dtype),
+            "rad_w2": init_dense(k[1], (32, len(paths) * C), dtype=cfg.dtype),
+            "mix_A": init_dense(k[2], (cfg.lmax + 1, C, C), dtype=cfg.dtype),
+            "lin_self": init_dense(k[3], (cfg.lmax + 1, C, C),
+                                   dtype=cfg.dtype),
+            "gate_w": init_dense(k[4], (C, max(cfg.lmax, 1) * C),
+                                 dtype=cfg.dtype),
+            # per-product-path channel weights for the B features
+            "w_sq": init_dense(k[5], (nsq, C), dtype=cfg.dtype),
+        }
+        if cfg.correlation >= 2:
+            layer["mix_B2"] = init_dense(k[6], (cfg.lmax + 1, C, C),
+                                         dtype=cfg.dtype)
+        if cfg.correlation >= 3:
+            layer["w_cube"] = init_dense(k[5], (nsq, C), dtype=cfg.dtype)
+            layer["mix_B3"] = init_dense(k[7], (cfg.lmax + 1, C, C),
+                                         dtype=cfg.dtype)
+        layers.append(layer)
+    return {
+        "embed": init_dense(keys[-3], (cfg.n_species, C), dtype=cfg.dtype),
+        "feat_proj": init_dense(keys[-2], (cfg.d_feat, C), dtype=cfg.dtype),
+        "layers": layers,
+        "readout": init_dense(keys[-1], (C, cfg.n_classes), dtype=cfg.dtype),
+    }
+
+
+def _channelwise_tp(a: jnp.ndarray, b: jnp.ndarray, lmax: int,
+                    w: jnp.ndarray, dtype) -> jnp.ndarray:
+    """Channel-wise (uuu) CG product of two irrep features [N, ir, C]."""
+    out = jnp.zeros_like(a)
+    for p, (l1, l2, l3) in enumerate(_sq_paths(lmax)):
+        cg = jnp.asarray(irreps.clebsch_gordan(l1, l2, l3), dtype)
+        t = jnp.einsum("nic,njc,ijk->nkc",
+                       a[:, irreps.slice_l(l1), :],
+                       b[:, irreps.slice_l(l2), :], cg)
+        out = out.at[:, irreps.slice_l(l3), :].add(t * w[p][None, None, :])
+    return out
+
+
+def forward(cfg: GNNConfig, params: Pytree,
+            batch: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    C, lmax = cfg.d_hidden, cfg.lmax
+    pos = batch["positions"].astype(cfg.dtype)
+    s, r = batch["senders"], batch["receivers"]
+    n = pos.shape[0]
+    paths = tp_paths(lmax)
+
+    x0 = (params["embed"][batch["species"]]
+          + batch["features"].astype(cfg.dtype) @ params["feat_proj"])
+    x = jnp.zeros((n, cfg.irrep_dim, C), cfg.dtype)
+    x = x.at[:, 0, :].set(x0)
+
+    rel = pos[r] - pos[s]
+    dist = jnp.linalg.norm(rel + 1e-12, axis=-1)
+    sh = irreps.real_sph_harm(rel, lmax)
+    rbf = radial_basis(dist, cfg.n_rbf, cfg.cutoff)
+    emask = batch["edge_mask"]
+    refresh = batch.get("ghost_refresh") or (lambda t: t)
+
+    def layer_fn(x, lp):
+        x = refresh(x)  # ghost rows re-synced from owners (DESIGN §3.4)
+
+        def edge_fn(src_x, efeat):
+            e_sh, e_rbf, e_m = efeat
+            e_rad = (jax.nn.silu(e_rbf @ lp["rad_w1"]) @ lp["rad_w2"]
+                     ).reshape(-1, len(paths), C)  # per-chunk (§Perf A3)
+            msg = jnp.zeros((src_x.shape[0], cfg.irrep_dim, C), cfg.dtype)
+            for p, (l1, l2, l3) in enumerate(paths):
+                cg = jnp.asarray(irreps.clebsch_gordan(l1, l2, l3), cfg.dtype)
+                t = jnp.einsum("eic,ej,ijk->ekc",
+                               src_x[:, irreps.slice_l(l1), :],
+                               e_sh[:, irreps.slice_l(l2)], cg)
+                msg = msg.at[:, irreps.slice_l(l3), :].add(
+                    t * e_rad[:, p][:, None, :])
+            return msg * e_m[:, None, None]
+
+        A = message_passing(
+            x, s, r, n, edge_fn,
+            edge_feats=(sh, rbf, emask.astype(cfg.dtype)),
+            edge_mask=emask, edge_chunks=cfg.edge_chunks)
+
+        upd = _per_l_linear(A, lp["mix_A"], lmax)
+        if cfg.correlation >= 2:
+            B2 = _channelwise_tp(A, A, lmax, lp["w_sq"], cfg.dtype)
+            upd = upd + _per_l_linear(B2, lp["mix_B2"], lmax)
+        if cfg.correlation >= 3:
+            B3 = _channelwise_tp(B2, A, lmax, lp["w_cube"], cfg.dtype)
+            upd = upd + _per_l_linear(B3, lp["mix_B3"], lmax)
+
+        x = _per_l_linear(x, lp["lin_self"], lmax) + upd
+        return _gate(x, lp["gate_w"], lmax)
+
+    if batch.get("remat"):
+        layer_fn = jax.checkpoint(
+            layer_fn, policy=jax.checkpoint_policies.nothing_saveable)
+    for lp in params["layers"]:
+        x = layer_fn(x, lp)
+
+    return x[:, 0, :] @ params["readout"]

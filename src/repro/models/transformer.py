@@ -1,0 +1,495 @@
+"""Decoder-only LM with GQA / RoPE / qk-norm / sliding window / MoE.
+
+Pure-functional, scan-over-layers (stacked params — compile time stays flat
+in depth), logical-axis sharding annotations, remat policy for training.
+Covers the five assigned LM architectures; MoE layers are in models/moe.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.sharding import AxisRules, logical_spec, shard_constraint
+from repro.models.layers import (apply_rope, cross_entropy_loss, init_dense,
+                                 layer_norm, rms_norm)
+from repro.models import moe as moe_lib
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    norm: str = "rmsnorm"          # 'rmsnorm' | 'layernorm'
+    mlp: str = "swiglu"            # 'swiglu' | 'gelu'
+    qk_norm: bool = False
+    sliding_window: Optional[int] = None   # starcoder2: 4096
+    rope_theta: float = 1e4
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+    # numerics / memory
+    dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.float32
+    remat: str = "full"            # 'full' | 'none'
+    tie_embeddings: bool = False
+    # query-chunked attention (XLA-level flash): scores never materialize
+    # beyond [B, H, q_chunk, S].  0 = off (small-seq smoke tests).
+    attn_q_chunk: int = 0
+    # scan over the layer stack (compile-time flat in depth).  The dry-run
+    # cost probes set False (cost_analysis counts scan bodies once).
+    scan_layers: bool = True
+    # MoE dispatch processed in token chunks to bound the top_k x capacity
+    # blowup of the xe buffers (see moe.py memory napkin math).
+    moe_token_chunks: int = 1
+    # group-aligned zero-padded query heads: starcoder2's 24 heads do not
+    # divide the 16-way 'model' axis; padding each GQA group 12 -> 16 gives
+    # 32 shardable heads whose pad lanes are zero weights + masked outputs
+    # (grad-isolated, so exactly equivalent math; measured 76.8 -> ~13 GB
+    # temp on train_4k, §Perf).  None = no padding.
+    n_heads_padded: "Optional[int]" = None
+
+    @property
+    def heads_eff(self) -> int:
+        return self.n_heads_padded or self.n_heads
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    def n_params(self) -> int:
+        """Parameter count (for MODEL_FLOPS = 6*N*D roofline accounting)."""
+        d, hd = self.d_model, self.head_dim
+        attn = d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd \
+            + self.n_heads * hd * d
+        if self.is_moe:
+            ffn = self.n_experts * 3 * d * self.d_ff + d * self.n_experts
+        else:
+            n_mats = 3 if self.mlp == "swiglu" else 2
+            ffn = n_mats * d * self.d_ff
+        per_layer = attn + ffn + 2 * d
+        emb = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * per_layer + emb + d
+
+    def n_active_params(self) -> int:
+        """Active params per token (MoE: top_k of n_experts)."""
+        if not self.is_moe:
+            return self.n_params()
+        d = self.d_model
+        full = self.n_params()
+        ffn_all = self.n_layers * self.n_experts * 3 * d * self.d_ff
+        ffn_act = self.n_layers * self.top_k * 3 * d * self.d_ff
+        return full - ffn_all + ffn_act
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: TransformerConfig, key: jax.Array) -> Pytree:
+    keys = jax.random.split(key, 16)
+    d, H, KV, hd, ff = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                        cfg.head_dim, cfg.d_ff)
+    L, pdt = cfg.n_layers, cfg.param_dtype
+
+    def dense(k, shape, scale=None):
+        return init_dense(k, shape, scale, pdt)
+
+    Hp = cfg.heads_eff
+    attn = {
+        "wq": dense(keys[0], (L, d, Hp, hd)),
+        "wk": dense(keys[1], (L, d, KV, hd)),
+        "wv": dense(keys[2], (L, d, KV, hd)),
+        "wo": dense(keys[3], (L, Hp, hd, d), scale=1.0 / np.sqrt(H * hd)),
+    }
+    if Hp != H:  # zero the pad lanes (stay zero: masked grads + decay*0)
+        mask = _head_mask(cfg).astype(pdt)
+        attn["wq"] = attn["wq"] * mask[None, None, :, None]
+        attn["wo"] = attn["wo"] * mask[None, :, None, None]
+    if cfg.qk_norm:
+        attn["q_norm"] = jnp.ones((L, hd), pdt)
+        attn["k_norm"] = jnp.ones((L, hd), pdt)
+
+    if cfg.is_moe:
+        mlp = {
+            "router": dense(keys[4], (L, d, cfg.n_experts)),
+            "w_gate": dense(keys[5], (L, cfg.n_experts, d, ff)),
+            "w_up": dense(keys[6], (L, cfg.n_experts, d, ff)),
+            "w_down": dense(keys[7], (L, cfg.n_experts, ff, d),
+                            scale=1.0 / np.sqrt(ff)),
+        }
+    elif cfg.mlp == "swiglu":
+        mlp = {
+            "w_gate": dense(keys[5], (L, d, ff)),
+            "w_up": dense(keys[6], (L, d, ff)),
+            "w_down": dense(keys[7], (L, ff, d), scale=1.0 / np.sqrt(ff)),
+        }
+    else:  # gelu
+        mlp = {
+            "w_up": dense(keys[6], (L, d, ff)),
+            "w_down": dense(keys[7], (L, ff, d), scale=1.0 / np.sqrt(ff)),
+        }
+
+    norms = {"ln1": jnp.ones((L, d), pdt), "ln2": jnp.ones((L, d), pdt)}
+    if cfg.norm == "layernorm":
+        norms["ln1_b"] = jnp.zeros((L, d), pdt)
+        norms["ln2_b"] = jnp.zeros((L, d), pdt)
+
+    params = {
+        "embed": dense(keys[8], (cfg.vocab_size, d), scale=1.0),
+        "layers": {"attn": attn, "mlp": mlp, "norms": norms},
+        "final_norm": jnp.ones((d,), pdt),
+    }
+    if cfg.norm == "layernorm":
+        params["final_norm_b"] = jnp.zeros((d,), pdt)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense(keys[9], (d, cfg.vocab_size))
+    return params
+
+
+def _head_mask(cfg: TransformerConfig) -> jnp.ndarray:
+    """[Hp] validity mask; pad heads live at group positions g >= G."""
+    Hp, KV = cfg.heads_eff, cfg.n_kv_heads
+    gp, g = Hp // KV, cfg.n_heads // KV
+    return (jnp.arange(Hp) % gp) < g
+
+
+def param_axes(cfg: TransformerConfig) -> Pytree:
+    """Logical-axis names per parameter (leading 'layers' dim = None)."""
+    attn = {
+        "wq": (None, "embed_fsdp", "heads", "head_dim"),
+        "wk": (None, "embed_fsdp", "kv_heads", "head_dim"),
+        "wv": (None, "embed_fsdp", "kv_heads", "head_dim"),
+        "wo": (None, "heads", "head_dim", "embed_fsdp"),
+    }
+    if cfg.qk_norm:
+        attn["q_norm"] = (None, None)
+        attn["k_norm"] = (None, None)
+    if cfg.is_moe:
+        # EP layout (moe.py): experts over ('pod','data'), ff over 'model';
+        # router replicated (read by every device's local dispatch)
+        mlp = {
+            "router": (None, None, None),
+            "w_gate": (None, "experts", None, "mlp"),
+            "w_up": (None, "experts", None, "mlp"),
+            "w_down": (None, "experts", "mlp", None),
+        }
+    elif cfg.mlp == "swiglu":
+        mlp = {
+            "w_gate": (None, "embed_fsdp", "mlp"),
+            "w_up": (None, "embed_fsdp", "mlp"),
+            "w_down": (None, "mlp", "embed_fsdp"),
+        }
+    else:
+        mlp = {
+            "w_up": (None, "embed_fsdp", "mlp"),
+            "w_down": (None, "mlp", "embed_fsdp"),
+        }
+    norms = {"ln1": (None, None), "ln2": (None, None)}
+    if cfg.norm == "layernorm":
+        norms["ln1_b"] = (None, None)
+        norms["ln2_b"] = (None, None)
+    axes = {
+        "embed": ("vocab", "embed_fsdp"),
+        "layers": {"attn": attn, "mlp": mlp, "norms": norms},
+        "final_norm": (None,),
+    }
+    if cfg.norm == "layernorm":
+        axes["final_norm_b"] = (None,)
+    if not cfg.tie_embeddings:
+        axes["lm_head"] = ("embed_fsdp", "vocab")
+    return axes
+
+
+def param_specs(cfg: TransformerConfig, rules: AxisRules, mesh) -> Pytree:
+    shapes = jax.eval_shape(partial(init_params, cfg),
+                            jax.random.key(0))
+    axes = param_axes(cfg)
+    return jax.tree.map(
+        lambda s, a: logical_spec(rules, a, s.shape, mesh),
+        shapes, axes, is_leaf=lambda x: isinstance(x, tuple))
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _norm(cfg, x, scale, bias):
+    if cfg.norm == "layernorm":
+        return layer_norm(x, scale, bias)
+    return rms_norm(x, scale)
+
+
+def _gather_w(w, cfg, rules, mesh, names):
+    """Casts a (possibly FSDP-sharded) weight to compute dtype and pins the
+    gathered layout: the data-axis all-gather then moves bf16, not f32
+    (halves FSDP gather bytes; §Perf iteration B1)."""
+    out_names = tuple(None if n == "embed_fsdp" else n for n in names)
+    return shard_constraint(w.astype(cfg.dtype), rules, out_names, mesh)
+
+
+def _attention(cfg: TransformerConfig, rules, mesh, x, lp, positions,
+               kv_cache=None, cache_positions=None):
+    """x: [B, S, d].  Training/prefill when kv_cache is None, else decode.
+
+    Returns (out [B, S, d], new_kv or None).
+    """
+    B, S, d = x.shape
+    H, KV, hd = cfg.heads_eff, cfg.n_kv_heads, cfg.head_dim
+    attn = lp["attn"]
+
+    q = jnp.einsum("bsd,dhk->bshk", x, _gather_w(
+        attn["wq"], cfg, rules, mesh, ("embed_fsdp", "heads", "head_dim")))
+    k = jnp.einsum("bsd,dgk->bsgk", x, _gather_w(
+        attn["wk"], cfg, rules, mesh, ("embed_fsdp", "kv_heads", "head_dim")))
+    v = jnp.einsum("bsd,dgk->bsgk", x, _gather_w(
+        attn["wv"], cfg, rules, mesh, ("embed_fsdp", "kv_heads", "head_dim")))
+    if cfg.qk_norm:
+        q = rms_norm(q, attn["q_norm"])
+        k = rms_norm(k, attn["k_norm"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = shard_constraint(q, rules, ("batch", "seq", "heads", "head_dim"), mesh)
+    k = shard_constraint(k, rules, ("batch", "seq", "kv_heads", "head_dim"), mesh)
+
+    if kv_cache is not None:
+        ck, cv, write_at = kv_cache
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                          (0, write_at, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                          (0, write_at, 0, 0))
+        k, v = ck.astype(cfg.dtype), cv.astype(cfg.dtype)
+        new_kv = (ck, cv)
+        kv_positions = cache_positions          # [B, Smax] (or [Smax])
+    else:
+        new_kv = None
+        kv_positions = positions
+
+    T = k.shape[1]
+    group = H // KV
+    qg = q.reshape(B, S, KV, group, hd)
+    scale = 1.0 / np.sqrt(hd)
+    qpos = positions if positions.ndim == 2 else positions[None, :]
+    kpos = kv_positions if kv_positions.ndim == 2 else kv_positions[None, :]
+
+    def _attend(qg_blk, qpos_blk):
+        """Exact attention for a query block: [B, sq, KV, G, hd] -> same."""
+        scores = jnp.einsum("bsgjk,btgk->bgjst", qg_blk,
+                            k).astype(jnp.float32) * scale
+        mask = kpos[:, None, :] <= qpos_blk[:, :, None]     # causal
+        if cfg.sliding_window is not None:
+            mask &= kpos[:, None, :] > qpos_blk[:, :, None] - cfg.sliding_window
+        if kv_cache is not None:
+            mask &= (kpos >= 0)[:, None, :]                 # unwritten slots
+        scores = jnp.where(mask[:, None, None, :, :], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(cfg.dtype)
+        return jnp.einsum("bgjst,btgk->bsgjk", probs, v)
+
+    qc = cfg.attn_q_chunk
+    if qc and S > qc and S % qc == 0 and kv_cache is None:
+        # scan over query blocks: peak scores footprint [B,H,qc,T] — the
+        # XLA-level flash-attention formulation (kernels/flash_attention is
+        # the Pallas twin for real TPU runs)
+        qg_blocks = qg.reshape(B, S // qc, qc, KV, group, hd)
+        qpos_blocks = qpos.reshape(B, S // qc, qc)
+
+        def body(_, xs):
+            qb, pb = xs
+            return None, _attend(qb, pb)
+
+        _, out_blocks = jax.lax.scan(
+            body, None,
+            (jnp.moveaxis(qg_blocks, 1, 0), jnp.moveaxis(qpos_blocks, 1, 0)))
+        out = jnp.moveaxis(out_blocks, 0, 1).reshape(B, S, H, hd)
+    else:
+        out = _attend(qg, qpos).reshape(B, S, H, hd)
+    if cfg.n_heads_padded is not None:
+        # zero pad-head outputs: keeps them grad-isolated (their softmax is
+        # uniform garbage, but nothing flows in or out)
+        out = out * _head_mask(cfg).astype(out.dtype)[None, None, :, None]
+    out = shard_constraint(out, rules, ("batch", "seq", "heads", "head_dim"),
+                           mesh)
+    y = jnp.einsum("bshk,hkd->bsd", out, _gather_w(
+        attn["wo"], cfg, rules, mesh, ("heads", "head_dim", "embed_fsdp")))
+    return y, new_kv
+
+
+def _mlp(cfg: TransformerConfig, rules, mesh, x, lp):
+    mlp = lp["mlp"]
+    if cfg.is_moe:
+        return moe_lib.moe_ffn(cfg, rules, mesh, x, mlp)
+    if cfg.mlp == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, _gather_w(
+            mlp["w_gate"], cfg, rules, mesh, ("embed_fsdp", "mlp")))
+        u = jnp.einsum("bsd,df->bsf", x, _gather_w(
+            mlp["w_up"], cfg, rules, mesh, ("embed_fsdp", "mlp")))
+        h = jax.nn.silu(g) * u
+    else:
+        u = jnp.einsum("bsd,df->bsf", x, _gather_w(
+            mlp["w_up"], cfg, rules, mesh, ("embed_fsdp", "mlp")))
+        h = jax.nn.gelu(u)
+    h = shard_constraint(h, rules, ("batch", "seq", "mlp"), mesh)
+    out = jnp.einsum("bsf,fd->bsd", h, _gather_w(
+        mlp["w_down"], cfg, rules, mesh, ("mlp", "embed_fsdp")))
+    return out, jnp.zeros((), jnp.float32)
+
+
+def _layer(cfg, rules, mesh, carry, lp, positions):
+    x, aux = carry
+    norms = lp["norms"]
+    h = _norm(cfg, x, norms["ln1"], norms.get("ln1_b"))
+    h = shard_constraint(h, rules, ("batch", "seq", "embed"), mesh)
+    a, _ = _attention(cfg, rules, mesh, h, lp, positions)
+    # constrain the sublayer OUTPUT to the seq-parallel spec so the TP
+    # output contraction lowers to reduce-scatter instead of all-reduce
+    # (Megatron-SP; §Perf iteration B2)
+    a = shard_constraint(a, rules, ("batch", "seq_sp", "embed"), mesh)
+    x = x + a
+    x = shard_constraint(x, rules, ("batch", "seq_sp", "embed"), mesh)
+    h = _norm(cfg, x, norms["ln2"], norms.get("ln2_b"))
+    h = shard_constraint(h, rules, ("batch", "seq", "embed"), mesh)
+    m, moe_aux = _mlp(cfg, rules, mesh, h, lp)
+    m = shard_constraint(m, rules, ("batch", "seq_sp", "embed"), mesh)
+    x = x + m
+    # sequence-parallel residual stream: the scan checkpoint saves THIS
+    # tensor per layer — sharding seq over 'model' divides the dominant
+    # activation-memory term by the TP width (Megatron-SP; §Perf log)
+    x = shard_constraint(x, rules, ("batch", "seq_sp", "embed"), mesh)
+    return (x, aux + moe_aux), None
+
+
+def forward(cfg: TransformerConfig, params: Pytree, tokens: jnp.ndarray,
+            rules: AxisRules, mesh=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens [B, S] -> (logits [B, S, V], moe aux loss)."""
+    B, S = tokens.shape
+    x = params["embed"].astype(cfg.dtype)[tokens]
+    x = shard_constraint(x, rules, ("batch", "seq_sp", "embed"), mesh)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    body = partial(_layer, cfg, rules, mesh, positions=positions)
+    if cfg.remat == "full":
+        body = jax.checkpoint(
+            body, policy=(jax.checkpoint_policies.dots_with_no_batch_dims_saveable if cfg.remat == "dots" else jax.checkpoint_policies.nothing_saveable))
+    carry = (x, jnp.zeros((), jnp.float32))
+    if cfg.scan_layers:
+        (x, aux), _ = jax.lax.scan(body, carry, params["layers"])
+    else:  # unrolled (dry-run cost probes)
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda p: p[i], params["layers"])
+            carry, _ = body(carry, lp)
+        x, aux = carry
+
+    x = _norm(cfg, x, params["final_norm"], params.get("final_norm_b"))
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(cfg.dtype)
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    logits = shard_constraint(logits, rules, ("batch", "seq", "vocab"), mesh)
+    return logits, aux
+
+
+def loss_fn(cfg: TransformerConfig, params, batch, rules, mesh=None):
+    logits, aux = forward(cfg, params, batch["tokens"], rules, mesh)
+    ce = cross_entropy_loss(logits, batch["labels"], batch.get("mask"))
+    return ce + cfg.router_aux_coef * aux, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve_step): one new token against a KV cache
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(cfg: TransformerConfig, batch: int, max_seq: int,
+                  dtype=jnp.bfloat16) -> Pytree:
+    """Cache [L, B, T, KV, hd].  Sliding-window archs only keep the window
+    (long_500k is O(window), the sub-quadratic property)."""
+    T = min(max_seq, cfg.sliding_window) if cfg.sliding_window else max_seq
+    shape = (cfg.n_layers, batch, T, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        # position of each cache slot, -1 = unwritten; [B, T]
+        "positions": jnp.full((batch, T), -1, jnp.int32),
+    }
+
+
+def cache_axes() -> Dict[str, Tuple]:
+    return {
+        "k": (None, "batch", "kv_seq", "kv_heads", "head_dim"),
+        "v": (None, "batch", "kv_seq", "kv_heads", "head_dim"),
+        "positions": ("batch", "kv_seq"),
+    }
+
+
+def decode_step(cfg: TransformerConfig, params: Pytree, cache: Pytree,
+                tokens: jnp.ndarray, pos: jnp.ndarray, rules: AxisRules,
+                mesh=None) -> Tuple[jnp.ndarray, Pytree]:
+    """tokens [B, 1] at position ``pos`` (scalar) -> (logits [B, V], cache).
+
+    The cache slot is ``pos % T`` (ring buffer — a plain index for full
+    attention since T = max_seq, the wraparound path for sliding window).
+    """
+    B = tokens.shape[0]
+    T = cache["k"].shape[2]
+    x = params["embed"].astype(cfg.dtype)[tokens]       # [B, 1, d]
+    x = shard_constraint(x, rules, ("batch", "seq", "embed"), mesh)
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    slot = pos % T
+
+    cache_positions = jax.lax.dynamic_update_slice(
+        cache["positions"], positions, (0, slot))
+
+    def one_layer(x, ck, cv, lp):
+        norms = lp["norms"]
+        h = _norm(cfg, x, norms["ln1"], norms.get("ln1_b"))
+        a, new_kv = _attention(
+            cfg, rules, mesh, h, lp, positions,
+            kv_cache=(ck, cv, slot), cache_positions=cache_positions)
+        x = x + a
+        h = _norm(cfg, x, norms["ln2"], norms.get("ln2_b"))
+        m, _ = _mlp(cfg, rules, mesh, h, lp)
+        return x + m, new_kv
+
+    # The full cache rides in the scan CARRY (not xs/ys): a while-loop can
+    # alias donated carry buffers in place, so decode holds ONE cache copy;
+    # as xs/ys, XLA kept old+new+loop-temp copies (~3x cache HBM; §Perf C2).
+    def body(carry, lp_i):
+        x, ck_all, cv_all, i = carry
+        lp = lp_i
+        ck = jax.lax.dynamic_index_in_dim(ck_all, i, 0, keepdims=False)
+        cv = jax.lax.dynamic_index_in_dim(cv_all, i, 0, keepdims=False)
+        x, (nk, nv) = one_layer(x, ck, cv, lp)
+        ck_all = jax.lax.dynamic_update_index_in_dim(ck_all, nk, i, 0)
+        cv_all = jax.lax.dynamic_update_index_in_dim(cv_all, nv, i, 0)
+        return (x, ck_all, cv_all, i + 1), None
+
+    if cfg.scan_layers:
+        (x, new_k, new_v, _), _ = jax.lax.scan(
+            body, (x, cache["k"], cache["v"], jnp.zeros((), jnp.int32)),
+            params["layers"])
+    else:  # unrolled (dry-run cost probes)
+        new_k, new_v = cache["k"], cache["v"]
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda p: p[i], params["layers"])
+            x, (nk, nv) = one_layer(x, new_k[i], new_v[i], lp)
+            new_k = new_k.at[i].set(nk)
+            new_v = new_v.at[i].set(nv)
+    x = _norm(cfg, x, params["final_norm"], params.get("final_norm_b"))
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(cfg.dtype)
+    logits = jnp.einsum("bsd,dv->bsv", x, head)[:, 0]
+    logits = shard_constraint(logits, rules, ("batch", "vocab"), mesh)
+    new_cache = {"k": new_k, "v": new_v, "positions": cache_positions}
+    return logits, new_cache

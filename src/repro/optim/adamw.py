@@ -1,0 +1,85 @@
+"""AdamW + schedules, pure-pytree (scan/pjit-safe; optimizer state inherits
+param shardings so ZeRO falls out of the FSDP param specs for free)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class AdamWState:
+    step: jnp.ndarray
+    mu: Pytree
+    nu: Pytree
+
+
+def adamw_init(params: Pytree) -> AdamWState:
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+    )
+
+
+def clip_by_global_norm(grads: Pytree, max_norm: float) -> Tuple[Pytree, jnp.ndarray]:
+    gnorm = jnp.sqrt(sum(
+        jnp.sum(jnp.square(g.astype(jnp.float32)))
+        for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-12))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gnorm
+
+
+def cosine_schedule(base_lr: float, warmup_steps: int,
+                    total_steps: int) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup_steps, 1)
+        frac = jnp.clip((step - warmup_steps) /
+                        max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = base_lr * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return lr
+
+
+def adamw_update(
+    params: Pytree,
+    grads: Pytree,
+    state: AdamWState,
+    lr: jnp.ndarray,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+) -> Tuple[Pytree, AdamWState]:
+    step = state.step + 1
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g32 = g.astype(jnp.float32)
+        mu = b1 * mu + (1 - b1) * g32
+        nu = b2 * nu + (1 - b2) * jnp.square(g32)
+        mhat = mu / c1
+        nhat = nu / c2
+        new_p = (p.astype(jnp.float32)
+                 - lr * (mhat / (jnp.sqrt(nhat) + eps)
+                         + weight_decay * p.astype(jnp.float32)))
+        return new_p.astype(p.dtype), mu, nu
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(state.mu)
+    flat_nu = jax.tree.leaves(state.nu)
+    out = [upd(p, g, m, n) for p, g, m, n in
+           zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_mu = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_nu = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_p, AdamWState(step=step, mu=new_mu, nu=new_nu)

@@ -1,0 +1,71 @@
+"""Ghost-exchange plan correctness (models/gnn/ghost.py, §Perf A).
+
+The device-side exchange is a mechanical gather + all_to_all of the plan's
+tables, so the load-bearing correctness is host-side: every edge's endpoint
+must be exactly reconstructible from (local ids, send tables)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.graphs.generators import power_law_graph
+from repro.models.gnn.ghost import partition_for_ghosts, plan_shapes
+
+
+@settings(max_examples=8, deadline=None)
+@given(n=st.integers(32, 200), seed=st.integers(0, 10**6),
+       shards=st.sampled_from([2, 4, 8]))
+def test_ghost_plan_reconstructs_every_edge(n, seed, shards):
+    struct = power_law_graph(n, avg_degree=6, seed=seed)
+    if struct.n_edges == 0:
+        return
+    plan = partition_for_ghosts(struct.senders, struct.receivers,
+                                n, shards, budget_frac=1.0)
+    S, B, n_loc, e_loc = (plan.n_shards, plan.budget, plan.n_loc,
+                          plan.e_loc)
+
+    # ghost slot (peer, b) on shard s holds the row peer SENDS in its block
+    # for s: send_idx[peer*(S*B) + s*B + b] (a local row on `peer`)
+    reconstructed = set()
+    for s in range(S):
+        lo = s * n_loc
+        for i in range(e_loc):
+            gi = s * e_loc + i
+            if not plan.edge_mask[gi]:
+                continue
+            r_glob = plan.receivers_local[gi] + lo
+            sl = plan.senders_local[gi]
+            if sl < n_loc:
+                s_glob = sl + lo
+            else:
+                slot = sl - n_loc
+                peer, b = slot // B, slot % B
+                idx = peer * (S * B) + s * B + b
+                assert plan.send_mask[idx], "ghost slot has no sender row"
+                s_glob = plan.send_idx[idx] + peer * n_loc
+            reconstructed.add((int(s_glob), int(r_glob)))
+
+    original = set(zip(struct.senders.tolist(), struct.receivers.tolist()))
+    missing = original - reconstructed
+    # every original edge is either reconstructed or accounted as dropped
+    assert len(missing) <= plan.dropped_edges
+    extra = reconstructed - original
+    assert not extra, f"fabricated edges: {list(extra)[:5]}"
+
+
+def test_plan_shapes_matches_value_plan_dims():
+    struct = power_law_graph(100, avg_degree=6, seed=0)
+    real = partition_for_ghosts(struct.senders, struct.receivers, 100, 4)
+    dims = plan_shapes(100, struct.n_edges, 4, edge_chunks=1)
+    assert dims.n_loc == real.n_loc
+    assert dims.budget == real.budget
+    assert dims.n_shards == real.n_shards
+
+
+def test_budget_drops_are_counted_not_silent():
+    # a star graph: every edge into vertex 0 is remote for its shard
+    n = 64
+    senders = np.arange(1, n, dtype=np.int32)
+    receivers = np.zeros(n - 1, np.int32)
+    plan = partition_for_ghosts(senders, receivers, n, 4, budget_frac=0.05)
+    kept = int(plan.edge_mask.sum())
+    assert kept + plan.dropped_edges == n - 1

@@ -1,0 +1,138 @@
+"""Equivariance property tests for the irrep toolbox (models/gnn/irreps).
+
+These pin the invariants every equivariant arch depends on:
+  Y(R r) = D(R) Y(r);  D orthogonal; D(R1 R2) = D(R1) D(R2);
+  TP(D1 x, D2 y) = D3 TP(x, y);  align_to_z(r) r = +z.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.gnn import irreps
+
+
+def rotations(k, seed):
+    return irreps._random_rotations(k, np.random.default_rng(seed))
+
+
+def unit_vectors(k, seed):
+    rng = np.random.default_rng(seed)
+    r = rng.normal(size=(k, 3))
+    return r / np.linalg.norm(r, axis=1, keepdims=True)
+
+
+@settings(max_examples=10, deadline=None)
+@given(lmax=st.integers(0, 6), seed=st.integers(0, 10**6))
+def test_sh_rotation_equivariance(lmax, seed):
+    R = rotations(4, seed)
+    r = unit_vectors(4, seed + 1)
+    Y = irreps.real_sph_harm(jnp.asarray(r, jnp.float32), lmax)
+    YR = irreps.real_sph_harm(
+        jnp.asarray(np.einsum("bij,bj->bi", R, r), jnp.float32), lmax)
+    D = irreps.wigner_d_block(jnp.asarray(R, jnp.float32), lmax)
+    DY = jnp.einsum("bij,bj->bi", D, Y)
+    np.testing.assert_allclose(np.asarray(YR), np.asarray(DY),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(lmax=st.integers(0, 6), seed=st.integers(0, 10**6))
+def test_wigner_orthogonal_homomorphism(lmax, seed):
+    Ra, Rb = rotations(3, seed), rotations(3, seed + 1)
+    Da = irreps.wigner_d(jnp.asarray(Ra, jnp.float32), lmax)
+    Db = irreps.wigner_d(jnp.asarray(Rb, jnp.float32), lmax)
+    Dab = irreps.wigner_d(jnp.asarray(Ra @ Rb, jnp.float32), lmax)
+    for l in range(lmax + 1):
+        eye = np.eye(2 * l + 1)
+        np.testing.assert_allclose(
+            np.einsum("bij,bkj->bik", Da[l], Da[l]),
+            np.broadcast_to(eye, (3,) + eye.shape), atol=1e-4)
+        np.testing.assert_allclose(
+            np.asarray(Dab[l]),
+            np.einsum("bij,bjk->bik", Da[l], Db[l]), atol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(l1=st.integers(0, 3), l2=st.integers(0, 3), l3=st.integers(0, 3),
+       seed=st.integers(0, 10**6))
+def test_cg_equivariance(l1, l2, l3, seed):
+    C = irreps.clebsch_gordan(l1, l2, l3)
+    if not (abs(l1 - l2) <= l3 <= l1 + l2):
+        assert np.abs(C).max() == 0.0
+        return
+    assert np.linalg.norm(C) == pytest.approx(1.0, abs=1e-6)
+    R = rotations(4, seed)
+    rng = np.random.default_rng(seed + 2)
+    x = rng.normal(size=(4, 2 * l1 + 1)).astype(np.float32)
+    y = rng.normal(size=(4, 2 * l2 + 1)).astype(np.float32)
+    D = irreps.wigner_d(jnp.asarray(R, jnp.float32), max(l1, l2, l3))
+    tp = irreps.tensor_product(jnp.asarray(x), jnp.asarray(y), l1, l2, l3)
+    tpr = irreps.tensor_product(
+        jnp.einsum("bij,bj->bi", D[l1], x),
+        jnp.einsum("bij,bj->bi", D[l2], y), l1, l2, l3)
+    Dtp = jnp.einsum("bij,bj->bi", D[l3], tp)
+    np.testing.assert_allclose(np.asarray(tpr), np.asarray(Dtp),
+                               rtol=1e-3, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10**6))
+def test_align_to_z(seed):
+    r = unit_vectors(16, seed)
+    A = irreps.align_to_z(jnp.asarray(r, jnp.float32))
+    az = np.einsum("bij,bj->bi", A, r)
+    np.testing.assert_allclose(az, np.broadcast_to([0, 0, 1.0], az.shape),
+                               atol=1e-4)
+    # orthogonality (it must be a rotation, not just any map)
+    eye = np.einsum("bij,bkj->bik", A, A)
+    np.testing.assert_allclose(eye, np.broadcast_to(np.eye(3), eye.shape),
+                               atol=1e-4)
+
+
+def test_align_to_z_antipode():
+    A = irreps.align_to_z(jnp.asarray([[0.0, 0.0, -1.0]], jnp.float32))
+    az = np.einsum("bij,bj->bi", A, [[0.0, 0.0, -1.0]])
+    np.testing.assert_allclose(az, [[0, 0, 1.0]], atol=1e-5)
+
+
+def test_sh_orthonormal_montecarlo():
+    pts = unit_vectors(200000, 0)
+    Y = np.asarray(irreps.real_sph_harm(jnp.asarray(pts, jnp.float64)
+                                        if jax.config.jax_enable_x64
+                                        else jnp.asarray(pts, jnp.float32), 3))
+    gram = 4 * np.pi * (Y.T @ Y) / pts.shape[0]
+    np.testing.assert_allclose(gram, np.eye(16), atol=0.05)
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 10**6))
+def test_model_invariance_under_rotation(seed):
+    """End-to-end: NequIP/MACE/EquiformerV2 invariant outputs do not change
+    when the molecule is rotated."""
+    from repro.graphs.generators import molecule_batch
+    from repro.models.gnn.api import GNNConfig, make_graph_batch
+    from repro.models.gnn import equiformer, mace, nequip
+    st_, gid, pos = molecule_batch(batch=2, n_nodes=8, n_edges_per=16,
+                                   seed=seed % 1000)
+    batch = make_graph_batch(st_, d_feat=8, n_classes=4, positions=pos,
+                             graph_id=gid, seed=seed % 1000)
+    R = jnp.asarray(rotations(1, seed)[0], jnp.float32)
+    b2 = dict(batch)
+    b2["positions"] = batch["positions"] @ R.T
+    for mod, cfg in (
+            (nequip, GNNConfig(name="n", kind="nequip", n_layers=2,
+                               d_hidden=8, lmax=2, n_rbf=4, d_feat=8,
+                               n_classes=4)),
+            (mace, GNNConfig(name="m", kind="mace", n_layers=1, d_hidden=8,
+                             lmax=2, correlation=3, n_rbf=4, d_feat=8,
+                             n_classes=4)),
+            (equiformer, GNNConfig(name="e", kind="equiformer", n_layers=1,
+                                   d_hidden=8, lmax=3, m_max=2, n_heads=2,
+                                   n_rbf=4, d_feat=8, n_classes=4))):
+        params = mod.init_params(cfg, jax.random.key(0))
+        o1 = mod.forward(cfg, params, batch)
+        o2 = mod.forward(cfg, params, b2)
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                                   rtol=5e-3, atol=5e-4)

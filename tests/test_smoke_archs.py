@@ -1,0 +1,185 @@
+"""Per-architecture smoke tests (deliverable f): a REDUCED config of each
+assigned arch runs one forward/train step on CPU — output shapes + no NaNs.
+
+The FULL configs are exercised only via the dry-run (ShapeDtypeStructs)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCH_IDS, get_arch
+from repro.dist.sharding import TRAIN_RULES
+from repro.graphs.generators import cora_like, molecule_batch
+
+LM_ARCHS = ["starcoder2-3b", "deepseek-7b", "qwen3-32b",
+            "moonshot-v1-16b-a3b", "olmoe-1b-7b"]
+GNN_ARCHS = ["mace", "gat-cora", "equiformer-v2", "nequip"]
+
+
+def test_registry_covers_all_assigned():
+    assert len(ARCH_IDS) == 10
+    for arch in ARCH_IDS:
+        spec = get_arch(arch)
+        assert spec.kind in ("lm", "moe", "gnn", "recsys")
+        assert spec.full_config is not None
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_smoke_train_step(arch):
+    from repro.models import transformer as tf
+    spec = get_arch(arch)
+    cfg = spec.smoke_config()
+    params = tf.init_params(cfg, jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, 16), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+
+    (loss, metrics), grads = jax.jit(jax.value_and_grad(
+        lambda p: tf.loss_fn(cfg, p, batch, TRAIN_RULES),
+        has_aux=True))(params)
+    assert np.isfinite(float(loss))
+    for g in jax.tree.leaves(grads):
+        assert not bool(jnp.isnan(g).any())
+
+    logits, _ = jax.jit(lambda p: tf.forward(cfg, p, toks, TRAIN_RULES))(
+        params)
+    assert logits.shape == (2, 16, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any())
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_smoke_decode_step(arch):
+    from repro.models import transformer as tf
+    spec = get_arch(arch)
+    cfg = spec.smoke_config()
+    params = tf.init_params(cfg, jax.random.key(0))
+    cache = tf.init_kv_cache(cfg, 2, 32, dtype=jnp.float32)
+    tok = jnp.zeros((2, 1), jnp.int32)
+    logits, cache = jax.jit(
+        lambda p, c, t: tf.decode_step(cfg, p, c, t, 0, TRAIN_RULES))(
+        params, cache, tok)
+    assert logits.shape == (2, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any())
+
+
+@pytest.mark.parametrize("arch", GNN_ARCHS)
+def test_gnn_smoke_train_step(arch):
+    from repro.launch.steps import GNN_MODULES
+    from repro.models.gnn.api import make_graph_batch, gnn_loss
+    spec = get_arch(arch)
+    cfg = spec.smoke_config()
+    mod = GNN_MODULES[cfg.kind]
+    st = cora_like(64, 128, seed=0)
+    batch = make_graph_batch(st, d_feat=cfg.d_feat, n_classes=cfg.n_classes)
+    params = mod.init_params(cfg, jax.random.key(0))
+
+    def loss(p):
+        out = mod.forward(cfg, p, batch)
+        assert out.shape == (64, cfg.n_classes)
+        return gnn_loss(cfg, out, batch)
+
+    l, grads = jax.jit(jax.value_and_grad(loss))(params)
+    assert np.isfinite(float(l))
+    for g in jax.tree.leaves(grads):
+        assert not bool(jnp.isnan(g).any())
+
+
+@pytest.mark.parametrize("arch", GNN_ARCHS)
+def test_gnn_smoke_molecule_batch(arch):
+    """graph_energy task over a block-diagonal molecular batch."""
+    import dataclasses
+    from repro.launch.steps import GNN_MODULES
+    from repro.models.gnn.api import make_graph_batch, gnn_loss
+    spec = get_arch(arch)
+    cfg = dataclasses.replace(spec.smoke_config(), task="graph_energy",
+                              n_graphs=4)
+    mod = GNN_MODULES[cfg.kind]
+    st, graph_id, pos = molecule_batch(batch=4, n_nodes=8, n_edges_per=12,
+                                       seed=1)
+    batch = make_graph_batch(st, d_feat=cfg.d_feat, n_classes=cfg.n_classes,
+                             positions=pos, graph_id=graph_id)
+    params = mod.init_params(cfg, jax.random.key(0))
+    l = jax.jit(lambda p: gnn_loss(cfg, mod.forward(cfg, p, batch), batch))(
+        params)
+    assert np.isfinite(float(l))
+
+
+def test_dlrm_smoke_train_and_serve():
+    from repro.models import dlrm as dl
+    spec = get_arch("dlrm-rm2")
+    cfg = spec.smoke_config()
+    params = dl.init_params(cfg, jax.random.key(0))
+    B = 32
+    batch = {
+        "dense": jax.random.normal(jax.random.key(1), (B, cfg.n_dense)),
+        "sparse_ids": jax.random.randint(
+            jax.random.key(2), (B, cfg.n_sparse, cfg.multi_hot), 0,
+            cfg.vocab_size),
+        "labels": jnp.zeros((B,), jnp.int32),
+    }
+    (l, m), grads = jax.jit(jax.value_and_grad(
+        lambda p: dl.loss_fn(cfg, p, batch, TRAIN_RULES), has_aux=True))(
+        params)
+    assert np.isfinite(float(l))
+    logit = jax.jit(lambda p: dl.forward(cfg, p, batch, TRAIN_RULES))(params)
+    assert logit.shape == (B,)
+    assert not bool(jnp.isnan(logit).any())
+
+
+def test_dlrm_smoke_retrieval():
+    from repro.models import dlrm as dl
+    spec = get_arch("dlrm-rm2")
+    cfg = spec.smoke_config()
+    params = dl.init_params(cfg, jax.random.key(0))
+    batch = {
+        "dense": jax.random.normal(jax.random.key(1), (1, cfg.n_dense)),
+        "sparse_ids": jnp.zeros((1, cfg.n_sparse, cfg.multi_hot), jnp.int32),
+        "candidates": jax.random.normal(jax.random.key(3),
+                                        (4096, cfg.embed_dim)),
+    }
+    scores, idx = jax.jit(
+        lambda p, b: dl.retrieval_score(cfg, p, b, TRAIN_RULES, top_k=16))(
+        params, batch)
+    assert scores.shape == (16,)
+    # top-k is sorted descending
+    assert bool(jnp.all(scores[:-1] >= scores[1:]))
+
+
+def test_minibatch_sampler_feeds_gnn():
+    """minibatch_lg path: real neighbor sampler -> padded batch -> GAT."""
+    from repro.graphs.generators import power_law_graph
+    from repro.graphs.sampling import NeighborSampler
+    from repro.launch.steps import GNN_MODULES
+    from repro.models.gnn.api import GNNConfig, gnn_loss
+    st = power_law_graph(500, avg_degree=10, seed=0)
+    sampler = NeighborSampler(st, fanout=(5, 3), seed=0)
+    sub = sampler.sample(np.arange(16))
+    cfg = GNNConfig(name="gat-mb", kind="gat", n_layers=2, d_hidden=4,
+                    n_heads=2, d_feat=8, n_classes=3)
+    mod = GNN_MODULES["gat"]
+    rng = np.random.default_rng(0)
+    batch = {
+        "features": jnp.asarray(
+            rng.normal(size=(sub.max_nodes, 8)), jnp.float32),
+        "species": jnp.zeros((sub.max_nodes,), jnp.int32),
+        "positions": jnp.zeros((sub.max_nodes, 3), jnp.float32),
+        "senders": jnp.asarray(sub.senders),
+        "receivers": jnp.asarray(sub.receivers),
+        "edge_mask": jnp.asarray(sub.edge_mask),
+        "node_mask": jnp.asarray(sub.node_mask),
+        "graph_id": jnp.zeros((sub.max_nodes,), jnp.int32),
+        "labels": jnp.zeros((sub.max_nodes,), jnp.int32),
+    }
+    params = mod.init_params(cfg, jax.random.key(0))
+    out = jax.jit(lambda p: mod.forward(cfg, p, batch))(params)
+    assert not bool(jnp.isnan(out).any())
+    # padded (masked) edges must not contribute: perturb padded rows
+    b2 = dict(batch)
+    feats = np.asarray(batch["features"]).copy()
+    feats[~np.asarray(sub.node_mask)] += 100.0
+    b2["features"] = jnp.asarray(feats)
+    out2 = jax.jit(lambda p: mod.forward(cfg, p, b2))(params)
+    real = np.asarray(sub.node_mask)
+    # messages only flow along real edges, so real-node outputs that have no
+    # padded in-neighbors must match; seeds (first 16) qualify
+    np.testing.assert_allclose(np.asarray(out)[:16], np.asarray(out2)[:16],
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,149 @@
+"""End-to-end behaviour tests for the GraphLab core + paper applications."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.apps.als import ALSProgram, als_rmse, make_als_graph
+from repro.apps.coem import CoEMProgram, coem_accuracy, make_coem_graph
+from repro.apps.lbp import (LoopyBPProgram, exact_marginals_chain,
+                            make_mrf_graph)
+from repro.apps.pagerank import (PageRankProgram, exact_pagerank,
+                                 make_pagerank_graph)
+from repro.core import (BSPEngine, ChromaticEngine, Consistency,
+                        DynamicEngine)
+from repro.core.graph import GraphStructure
+from repro.graphs.generators import (bipartite_graph, cora_like,
+                                     grid3d_graph, power_law_graph)
+
+TOL = 1e-7
+
+
+@pytest.fixture(scope="module")
+def web_graph():
+    return power_law_graph(300, avg_degree=6, seed=1)
+
+
+class TestPageRank:
+    def test_chromatic_converges_to_exact(self, web_graph):
+        g = make_pagerank_graph(web_graph)
+        prog = PageRankProgram(0.15, web_graph.n_vertices)
+        eng = ChromaticEngine(prog, g, tolerance=TOL)
+        s, _ = eng.run(eng.init(g), max_steps=300)
+        exact = exact_pagerank(web_graph, 0.15, 500)
+        assert np.abs(np.asarray(s.graph.vertex_data["rank"])
+                      - exact).sum() < 1e-4
+
+    def test_all_engines_agree(self, web_graph):
+        g = make_pagerank_graph(web_graph)
+        prog = PageRankProgram(0.15, web_graph.n_vertices)
+        results = []
+        for eng in (BSPEngine(prog, g, tolerance=TOL),
+                    ChromaticEngine(prog, g, tolerance=TOL),
+                    DynamicEngine(prog, g, pipeline_length=64,
+                                  tolerance=TOL)):
+            s, _ = eng.run(eng.init(g), max_steps=5000)
+            results.append(np.asarray(s.graph.vertex_data["rank"]))
+        np.testing.assert_allclose(results[0], results[1], atol=1e-5)
+        np.testing.assert_allclose(results[0], results[2], atol=1e-5)
+
+    def test_async_beats_sync_on_updates(self, web_graph):
+        """Paper Fig. 1(a): chromatic (Gauss-Seidel) needs fewer updates
+        than BSP (Jacobi) for the same accuracy."""
+        g = make_pagerank_graph(web_graph)
+        prog = PageRankProgram(0.15, web_graph.n_vertices)
+        bsp = BSPEngine(prog, g, tolerance=TOL)
+        sb, _ = bsp.run(bsp.init(g), max_steps=1000)
+        chrom = ChromaticEngine(prog, g, tolerance=TOL)
+        sc, _ = chrom.run(chrom.init(g), max_steps=1000)
+        assert int(sc.total_updates) < int(sb.total_updates)
+
+    def test_update_count_skew(self, web_graph):
+        """Paper Fig. 1(b): dynamic scheduling leaves most vertices with
+        near-minimal update counts."""
+        g = make_pagerank_graph(web_graph)
+        prog = PageRankProgram(0.15, web_graph.n_vertices)
+        eng = DynamicEngine(prog, g, pipeline_length=32, tolerance=1e-5)
+        s, _ = eng.run(eng.init(g), max_steps=20000)
+        counts = np.asarray(s.update_count)
+        assert counts.max() > counts.min()  # non-uniform
+        # the heavy tail is small
+        assert (counts > np.median(counts) * 3).mean() < 0.2
+
+
+class TestALS:
+    def test_train_rmse_drops(self):
+        g, _ = make_als_graph(80, 60, 2500, d=4, seed=0, noise=0.05)
+        prog = ALSProgram(d=4)
+        eng = ChromaticEngine(prog, g, tolerance=1e-3)
+        before = als_rmse(g, train=True)
+        s, _ = eng.run(eng.init(g), max_steps=15)
+        after = als_rmse(s.graph, train=True)
+        assert after < before * 0.5
+
+    def test_bipartite_two_coloring_used(self):
+        g, _ = make_als_graph(40, 30, 600, d=3, seed=1)
+        eng = ChromaticEngine(ALSProgram(d=3), g)
+        assert eng.num_colors == 2  # paper: ALS graph is 2-colorable
+
+    def test_racing_less_stable_than_serializable(self):
+        """Paper Fig. 1(d): non-serializable dynamic ALS oscillates."""
+        g, _ = make_als_graph(60, 50, 1800, d=6, seed=3, noise=0.02)
+        swings = {}
+        for ser in (True, False):
+            prog = ALSProgram(d=6, reg=0.01)
+            eng = DynamicEngine(prog, g, pipeline_length=110,
+                                serializable=ser, tolerance=1e-4)
+            s = eng.init(g)
+            rmses = []
+            for _ in range(40):
+                s = eng.step(s)
+                rmses.append(als_rmse(s.graph, train=True))
+            swings[ser] = float(np.abs(np.diff(rmses)).sum())
+        assert swings[False] > swings[True]
+
+
+class TestLBP:
+    def test_chain_marginals_exact(self):
+        """On a tree (chain), LBP is exact — compare to brute force."""
+        n, k = 6, 3
+        st, _ = GraphStructure.undirected(np.arange(n - 1),
+                                          np.arange(1, n), n)
+        g = make_mrf_graph(st, n_states=k, seed=0)
+        prog = LoopyBPProgram(k, smoothing=0.7)
+        eng = ChromaticEngine(prog, g, tolerance=1e-9)
+        s, _ = eng.run(eng.init(g), max_steps=100)
+        beliefs = np.exp(np.asarray(s.graph.vertex_data["belief"]))
+        beliefs /= beliefs.sum(1, keepdims=True)
+        exact = exact_marginals_chain(
+            np.asarray(g.vertex_data["unary"]), prog.pairwise)
+        np.testing.assert_allclose(beliefs, exact, atol=1e-4)
+
+    def test_grid_converges(self):
+        st = grid3d_graph(4, 4, 4, connectivity=26)
+        g = make_mrf_graph(st, n_states=2, seed=1)
+        prog = LoopyBPProgram(2, smoothing=0.5)
+        eng = DynamicEngine(prog, g, pipeline_length=32, tolerance=1e-4)
+        s, _ = eng.run(eng.init(g), max_steps=3000)
+        assert float(jnp.max(s.prio)) <= 1e-4  # scheduler drained
+        assert not bool(jnp.isnan(s.graph.vertex_data["belief"]).any())
+
+
+class TestCoEM:
+    def test_accuracy_beats_chance(self):
+        g, info = make_coem_graph(400, 120, 5000, n_types=4, seed=0)
+        prog = CoEMProgram(4)
+        eng = ChromaticEngine(prog, g, tolerance=1e-4)
+        s, _ = eng.run(eng.init(g), max_steps=30)
+        acc = coem_accuracy(s.graph, info)
+        assert acc > 0.5  # chance = 0.25
+
+    def test_seeds_never_change(self):
+        g, info = make_coem_graph(200, 60, 2000, n_types=3, seed=1)
+        seeds_before = np.asarray(g.vertex_data["p"]).copy()
+        seed_mask = np.asarray(g.vertex_data["seed"]) > 0.5
+        prog = CoEMProgram(3)
+        eng = ChromaticEngine(prog, g, tolerance=1e-4)
+        s, _ = eng.run(eng.init(g), max_steps=10)
+        after = np.asarray(s.graph.vertex_data["p"])
+        np.testing.assert_allclose(after[seed_mask],
+                                   seeds_before[seed_mask])
