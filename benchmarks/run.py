@@ -29,8 +29,29 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated harness names")
+    ap.add_argument("--smoke", action="store_true",
+                    help="collection check: verify every harness resolves "
+                         "to a callable with a docstring, run nothing")
     args = ap.parse_args()
     names = (args.only.split(",") if args.only else list(HARNESSES))
+    unknown = [n for n in names if n not in HARNESSES]
+    if unknown:
+        print(f"unknown harness names {unknown} (known: {list(HARNESSES)})")
+        sys.exit(2)
+
+    if args.smoke:
+        bad = [n for n in names
+               if not (callable(HARNESSES.get(n))
+                       and (HARNESSES[n].__doc__ or "").strip())]
+        for n in names:
+            if n not in bad:
+                print(f"collected {n}: "
+                      f"{HARNESSES[n].__doc__.splitlines()[0]}")
+        if bad:
+            print(f"FAILED collection: {bad} (known: {list(HARNESSES)})")
+            sys.exit(1)
+        print(f"{len(names)} harnesses collected")
+        return
 
     failures = 0
     for name in names:

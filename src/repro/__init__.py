@@ -1,0 +1,8 @@
+"""Distributed GraphLab reproduction (arXiv:1204.6078) on JAX.
+
+Layers: ``core`` (data graph + engines), ``apps`` (paper programs),
+``dist`` (sharding rules + shard_map ghost engine), ``launch`` (production
+mesh/steps/drivers), ``models``/``kernels`` (the jax_pallas workloads).
+"""
+
+__version__ = "0.1.0"

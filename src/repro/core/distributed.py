@@ -33,7 +33,7 @@ import numpy as np
 
 from repro.core.engine_base import Engine, EngineState
 from repro.core.graph import DataGraph, GraphStructure
-from repro.core.partition import AtomIndex, overpartition, place_atoms
+from repro.core.partition import overpartition, place_vertices
 
 
 @dataclasses.dataclass
@@ -100,26 +100,7 @@ class SimulatedCluster:
     @staticmethod
     def _place(st: GraphStructure, atom_of: np.ndarray,
                n_machines: int) -> np.ndarray:
-        k = int(atom_of.max()) + 1
-        nv = np.bincount(atom_of, minlength=k)
-        e_atom = atom_of[st.receivers]
-        ne = np.bincount(e_atom, minlength=k)
-        src_atom = atom_of[st.senders]
-        cutmask = e_atom != src_atom
-        if cutmask.any():
-            up, w = np.unique(np.stack([src_atom[cutmask], e_atom[cutmask]], 1),
-                              axis=0, return_counts=True)
-            meta_src, meta_dst, meta_w = up[:, 0], up[:, 1], w.astype(np.int64)
-        else:
-            meta_src = meta_dst = np.zeros(0, np.int32)
-            meta_w = np.zeros(0, np.int64)
-        index = AtomIndex(
-            k_atoms=k, n_vertices=st.n_vertices, n_edges=st.n_edges,
-            atom_nv=nv.astype(np.int64), atom_ne=ne.astype(np.int64),
-            meta_src=meta_src, meta_dst=meta_dst, meta_weight=meta_w,
-            files=[""] * k)
-        placement = place_atoms(index, n_machines)
-        return placement[atom_of]
+        return place_vertices(st, atom_of, n_machines)
 
     # -- cost of one step ------------------------------------------------------
     def step_cost(self, step: int, per_vertex_updates: np.ndarray) -> StepCost:

@@ -259,6 +259,39 @@ def place_atoms(index: AtomIndex, n_machines: int) -> np.ndarray:
     return out
 
 
+def place_vertices(st: GraphStructure, atom_of: np.ndarray,
+                   n_machines: int) -> np.ndarray:
+    """Two-phase placement without journal files: builds the meta-graph of
+    an atom assignment directly from the structure, places atoms with
+    ``place_atoms``, and returns machine_of_vertex [N].
+
+    Shared by the simulated cluster (core/distributed.py) and the real
+    shard_map engine (dist/engine.py): both derive vertex placement — and
+    therefore ghost sets — from the same two-phase partition.
+    """
+    atom_of = np.asarray(atom_of, np.int32)
+    k = int(atom_of.max()) + 1
+    nv = np.bincount(atom_of, minlength=k)
+    e_atom = atom_of[st.receivers]
+    ne = np.bincount(e_atom, minlength=k)
+    src_atom = atom_of[st.senders]
+    cutmask = e_atom != src_atom
+    if cutmask.any():
+        up, w = np.unique(np.stack([src_atom[cutmask], e_atom[cutmask]], 1),
+                          axis=0, return_counts=True)
+        meta_src, meta_dst, meta_w = up[:, 0], up[:, 1], w.astype(np.int64)
+    else:
+        meta_src = meta_dst = np.zeros(0, np.int32)
+        meta_w = np.zeros(0, np.int64)
+    index = AtomIndex(
+        k_atoms=k, n_vertices=st.n_vertices, n_edges=st.n_edges,
+        atom_nv=nv.astype(np.int64), atom_ne=ne.astype(np.int64),
+        meta_src=meta_src, meta_dst=meta_dst, meta_weight=meta_w,
+        files=[""] * k)
+    placement = place_atoms(index, n_machines)
+    return placement[atom_of]
+
+
 @dataclasses.dataclass
 class LocalGraph:
     """One machine's partition after journal replay (paper Fig. 5(b): "Local

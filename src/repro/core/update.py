@@ -76,6 +76,14 @@ class VertexProgram:
     # -- optional edge writes (adjacent-edge mutation, e.g. BP messages) -----
     has_edge_out: bool = False
 
+    # Whether gather/edge_out read ``ctx.rev_edata``.  None (default) means
+    # "if has_edge_out" — BP-style programs read the reverse message, pure
+    # gather programs don't.  The distributed engine uses this to decide
+    # whether reverse edges need ghost caches (dist/engine.py); a program
+    # that reads rev_edata without declaring it gets zeros there, so
+    # declare it.  Shared-memory engines always supply real rev_edata.
+    reads_rev_edata: Optional[bool] = None
+
     def edge_out(self, ctx: EdgeCtx, new_src: Pytree, src_acc: Pytree) -> Pytree:
         """New data for edge (src -> dst), given src's freshly applied data
         and src's accumulator.  Only edges whose *source* vertex was updated

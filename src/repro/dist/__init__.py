@@ -1,0 +1,23 @@
+"""Production distribution layer (DESIGN.md §3.6–3.7).
+
+Two layers, mirroring the paper's split between *data placement* and
+*engine execution*:
+
+  ``dist.sharding``  logical-axis sharding rules: model code annotates
+                     arrays with logical names ("batch", "heads", ...) and
+                     the rules resolve them onto the physical mesh —
+                     GSPMD/pjit handles the collectives.
+
+  ``dist.engine``    the explicit path: a ``DistributedEngine`` running a
+                     ``VertexProgram`` under ``shard_map`` with two-phase
+                     atom placement and a versioned ghost exchange
+                     (paper Secs. 4.1, 5.1).
+"""
+from repro.dist.sharding import (AxisRules, SERVE_RULES, TRAIN_RULES,
+                                 logical_spec, shard_constraint)
+from repro.dist.engine import DistributedEngine, DistState
+
+__all__ = [
+    "AxisRules", "DistState", "DistributedEngine", "SERVE_RULES",
+    "TRAIN_RULES", "logical_spec", "shard_constraint",
+]

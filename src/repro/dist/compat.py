@@ -1,0 +1,18 @@
+"""jax version compatibility for the distribution layer.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` to ``jax.shard_map``
+and renamed ``check_rep`` to ``check_vma`` across the versions this repo
+must run on; resolve once here so call sites stay on the new spelling.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma)

@@ -1,0 +1,540 @@
+"""DistributedEngine: a real VertexProgram under ``shard_map`` (DESIGN §3.7).
+
+Where ``core/distributed.py`` *models* the paper's cluster (real values,
+simulated time), this module *is* the cluster on a device mesh: vertices are
+placed with the two-phase atom partitioner (``core/partition.py``), each
+mesh slice along the ``data`` axis plays one machine, and ghosts — boundary
+vertices a machine reads but does not own — live in a versioned remote
+cache refreshed by explicit ``all_to_all`` exchanges.
+
+The execution schedule is the Chromatic Engine's (Sec. 4.2.1): one engine
+step sweeps the colors; within a color every machine updates its scheduled
+own vertices of that color.  Because a proper coloring makes same-color
+vertices non-adjacent, refreshing ghosts once per color-step reproduces the
+shared-memory engine's reads exactly, so the distributed fixed point matches
+``ChromaticEngine`` to float tolerance (tests/test_dist_engine.py).
+
+Versioned ghost exchange (Sec. 5.1: "each machine receives each modified
+vertex data at most once"): the send tables enumerate (owner row, caching
+machine) pairs once; at each exchange a row ships only if its vertex
+updated this color-step.  Unchanged ghosts keep their cached value; a
+per-machine counter accounts the rows actually shipped, which is the
+quantity the paper's Fig. 6(c) network curves measure.
+
+Adjacent-edge writes (LBP messages) ride the same machinery: an edge lives
+with its receiver's machine, its reverse edge may live elsewhere, so edge
+data has its own ghost cache + send tables, refreshed with the same
+changed-only discipline (an edge changes exactly when its source vertex
+updates).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core.coloring import coloring_for
+from repro.core.graph import DataGraph, segment_combine
+from repro.dist.compat import shard_map
+from repro.core.partition import overpartition, place_vertices
+from repro.core.update import EdgeCtx, VertexProgram, masked_update
+
+Pytree = Any
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DistState:
+    """Sharded engine state: leading dims are ``S * per_machine`` blocks,
+    machine m owns block m (sharded over the mesh ``data`` axis)."""
+
+    vown: Pytree            # [S*n_loc, ...] owned vertex data (padded)
+    vghost: Pytree          # [S*(S*B), ...] ghost vertex cache
+    edata: Pytree           # [S*e_loc, ...] owned edge data
+    eghost: Pytree          # [S*(S*EB), ...] ghost edge cache ({} if unused)
+    prio: jnp.ndarray       # [S*n_loc] scheduler T (pad rows 0)
+    update_count: jnp.ndarray  # [S*n_loc] i32
+    traffic_v: jnp.ndarray  # [S] i32 — ghost vertex rows actually shipped
+    traffic_e: jnp.ndarray  # [S] i32 — ghost edge rows actually shipped
+    step_index: jnp.ndarray  # scalar i32
+
+    def replace(self, **kw) -> "DistState":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass
+class _Layout:
+    """Host-side partition layout: static index tables for the device step."""
+
+    n_machines: int
+    n_loc: int          # owned vertex rows per machine (padded)
+    budget: int         # ghost vertex rows per (machine, peer) pair
+    e_loc: int          # edge rows per machine (padded)
+    e_budget: int       # ghost edge rows per (machine, peer) pair
+    has_rev: bool       # reverse-edge ghost machinery built?
+    machine_of: np.ndarray   # [N]
+    own_gid: np.ndarray      # [S*n_loc] global vertex id or -1
+    row_of: np.ndarray       # [N] global row of each vertex
+    erow_gid: np.ndarray     # [S*e_loc] global edge id or -1
+    ghost_gid: np.ndarray    # [S*(S*B)] global vertex id cached here or -1
+    eghost_gid: np.ndarray   # [S*(S*EB)] global edge id cached here or -1
+    tables: Dict[str, np.ndarray]   # device tables (see _build_layout)
+
+
+def _slab_tables(dest: np.ndarray, owner: np.ndarray, gid: np.ndarray,
+                 S: int, row_in_owner: np.ndarray, domain: int):
+    """Ghost slab assignment, vectorized.
+
+    Each unique (dest machine, owner machine, gid) triple gets a slot
+    ``b < budget`` in dest's per-owner slab.  Returns
+    ``(budget, slab_gid [S*S*budget], send_idx, send_mask, ukey, bslot)``
+    where (ukey, bslot) label arbitrary (dest, owner, gid) queries via
+    searchsorted — used to localize edge endpoints.
+    """
+    if dest.size == 0:
+        z = np.zeros(S * S, np.int64)
+        return (1, np.full(S * S, -1, np.int64), z, np.zeros(S * S, bool),
+                np.zeros(0, np.int64), np.zeros(0, np.int64))
+    key = (dest.astype(np.int64) * S + owner) * domain + gid
+    ukey = np.unique(key)
+    pair = ukey // domain                    # dest * S + owner, sorted
+    ugid = ukey % domain
+    starts = np.searchsorted(pair, np.arange(S * S))
+    bslot = np.arange(ukey.size) - starts[pair]
+    budget = max(int(bslot.max()) + 1, 1)
+    d, o = pair // S, pair % S
+    slab_gid = np.full(S * S * budget, -1, np.int64)
+    slab_gid[d * (S * budget) + o * budget + bslot] = ugid
+    send_idx = np.zeros(S * S * budget, np.int64)
+    send_mask = np.zeros(S * S * budget, bool)
+    # owner o ships its local row of gid to machine d's slab slot
+    send_idx[o * (S * budget) + d * budget + bslot] = row_in_owner[ugid]
+    send_mask[o * (S * budget) + d * budget + bslot] = True
+    return budget, slab_gid, send_idx, send_mask, ukey, bslot
+
+
+def _slab_lookup(ukey: np.ndarray, bslot: np.ndarray, dest, owner, gid,
+                 S: int, domain: int) -> np.ndarray:
+    """Slot of each (dest, owner, gid) query in its slab (must exist)."""
+    key = (dest.astype(np.int64) * S + owner) * domain + gid
+    return bslot[np.searchsorted(ukey, key)]
+
+
+def _build_layout(graph: DataGraph, machine_of: np.ndarray,
+                  n_machines: int, build_rev: bool) -> _Layout:
+    st = graph.structure
+    N, S = st.n_vertices, int(n_machines)
+
+    # --- owned vertex rows: [machine-major, id-minor], padded to n_loc ----
+    counts = np.bincount(machine_of, minlength=S)
+    n_loc = max(int(counts.max()), 1)
+    order = np.argsort(machine_of, kind="stable")
+    slot = np.zeros(N, np.int64)
+    offs = np.concatenate([[0], np.cumsum(counts)])
+    slot[order] = np.arange(N) - offs[machine_of[order]]
+    row_of = machine_of.astype(np.int64) * n_loc + slot
+    own_gid = np.full(S * n_loc, -1, np.int64)
+    own_gid[row_of] = np.arange(N)
+
+    # --- owned edge rows (an edge lives with its receiver's machine) ------
+    E = st.n_edges
+    e_machine = machine_of[st.receivers]
+    ecounts = np.bincount(e_machine, minlength=S)
+    e_loc = max(int(ecounts.max()), 1)
+    eorder = np.argsort(e_machine, kind="stable")
+    epos = np.zeros(E, np.int64)
+    eoffs = np.concatenate([[0], np.cumsum(ecounts)])
+    epos[eorder] = np.arange(E) - eoffs[e_machine[eorder]]
+    erow_of = e_machine.astype(np.int64) * e_loc + epos
+    erow_gid = np.full(S * e_loc, -1, np.int64)
+    erow_gid[erow_of] = np.arange(E)
+
+    # --- ghost vertex slabs: machine m ghosts v iff some edge it owns has
+    # remote sender v; slot assignment is a vectorized group-rank ----------
+    s_machine = machine_of[st.senders]
+    cut = s_machine != e_machine
+    budget, ghost_gid, send_idx, send_mask, vkey, vslot = _slab_tables(
+        e_machine[cut], s_machine[cut], st.senders[cut], S, slot, max(N, 1))
+
+    senders_local = np.zeros(S * e_loc, np.int64)
+    senders_local[erow_of[~cut]] = slot[st.senders[~cut]]
+    if cut.any():
+        gslot = _slab_lookup(vkey, vslot, e_machine[cut], s_machine[cut],
+                             st.senders[cut], S, max(N, 1))
+        senders_local[erow_of[cut]] = \
+            n_loc + s_machine[cut].astype(np.int64) * budget + gslot
+    receivers_local = np.zeros(S * e_loc, np.int64)
+    receivers_local[erow_of] = slot[st.receivers]
+    edge_mask = np.zeros(S * e_loc, bool)
+    edge_mask[erow_of] = True
+    src_deg_e = np.zeros(S * e_loc, np.int32)
+    src_deg_e[erow_of] = st.out_degree[st.senders]
+    dst_deg_e = np.zeros(S * e_loc, np.int32)
+    dst_deg_e[erow_of] = st.in_degree[st.receivers]
+
+    # --- ghost edge slabs (reverse-edge reads: ctx.rev_edata) -------------
+    e_budget = 1
+    rev_local = np.full(S * e_loc, -1, np.int64)
+    eghost_gid = np.full(S * S, -1, np.int64)
+    esend_idx = np.zeros(S * S, np.int64)
+    esend_mask = np.zeros(S * S, bool)
+    if build_rev:
+        has = st.reverse_perm >= 0
+        e_ids = np.nonzero(has)[0]
+        re = st.reverse_perm[e_ids].astype(np.int64)
+        m, p = e_machine[e_ids], e_machine[re]
+        ecut = m != p
+        e_budget, eghost_gid, esend_idx, esend_mask, ekey, eslot = \
+            _slab_tables(m[ecut], p[ecut], re[ecut], S, epos, max(E, 1))
+        rev_local[erow_of[e_ids[~ecut]]] = epos[re[~ecut]]
+        if ecut.any():
+            gslot = _slab_lookup(ekey, eslot, m[ecut], p[ecut], re[ecut],
+                                 S, max(E, 1))
+            rev_local[erow_of[e_ids[ecut]]] = \
+                e_loc + p[ecut].astype(np.int64) * e_budget + gslot
+
+    tables = {
+        "senders_local": senders_local.astype(np.int32),
+        "receivers_local": receivers_local.astype(np.int32),
+        "edge_mask": edge_mask,
+        "src_deg_e": src_deg_e,
+        "dst_deg_e": dst_deg_e,
+        "own_mask": (own_gid >= 0),
+        "send_idx": send_idx.astype(np.int32),
+        "send_mask": send_mask,
+        "rev_local": rev_local.astype(np.int32),
+        "esend_idx": esend_idx.astype(np.int32),
+        "esend_mask": esend_mask,
+    }
+    return _Layout(
+        n_machines=S, n_loc=n_loc, budget=budget, e_loc=e_loc,
+        e_budget=e_budget, has_rev=build_rev, machine_of=machine_of,
+        own_gid=own_gid, row_of=row_of, erow_gid=erow_gid,
+        ghost_gid=ghost_gid, eghost_gid=eghost_gid, tables=tables)
+
+
+def _take_rows(tree: Pytree, idx: np.ndarray) -> Pytree:
+    """Gathers global rows by id (pad ids < 0 -> zero rows)."""
+
+    def one(x):
+        x = np.asarray(x)
+        out = np.zeros((idx.size,) + x.shape[1:], x.dtype)
+        ok = idx >= 0
+        out[ok] = x[idx[ok]]
+        return out
+
+    return jax.tree.map(one, tree)
+
+
+class DistributedEngine:
+    """Runs ``program`` on ``graph`` over the mesh ``data`` axis.
+
+    One mesh slice along ``axis`` = one paper machine.  ``step(state)`` is
+    one chromatic sweep; ``run`` drives to convergence like the other
+    engines.  Sync ops are not supported on this path yet (the global
+    reduction belongs to the checkpoint/sync subsystem, DESIGN §3.8).
+    """
+
+    def __init__(
+        self,
+        program: VertexProgram,
+        graph: DataGraph,
+        mesh,
+        *,
+        axis: str = "data",
+        colors: Optional[np.ndarray] = None,
+        k_atoms: Optional[int] = None,
+        method: str = "hash",
+        tolerance: float = 1e-3,
+        seed: int = 0,
+    ):
+        if getattr(program, "sync_ops", None):
+            raise NotImplementedError("sync ops on the shard_map path")
+        self.program = program
+        self.graph = graph
+        self.mesh = mesh
+        self.axis = axis
+        self.tolerance = float(tolerance)
+        st = graph.structure
+
+        if axis not in mesh.shape:
+            raise ValueError(
+                f"mesh has no {axis!r} axis (axes: {tuple(mesh.shape)}); "
+                f"pass axis=<name> for the machine dimension")
+        S = int(mesh.shape[axis])
+        k_atoms = k_atoms or max(4 * S, 32)
+        atom_of = overpartition(st, k_atoms, method=method, seed=seed)
+        machine_of = place_vertices(st, atom_of, S)
+        # reverse-edge ghost machinery only when the program reads
+        # ctx.rev_edata (declared, defaulting to has_edge_out)
+        use_rev = (program.reads_rev_edata
+                   if program.reads_rev_edata is not None
+                   else program.has_edge_out)
+        # place_atoms may leave a machine empty on tiny graphs; the layout
+        # pads every machine to the same shapes, so that is fine.
+        self.layout = _build_layout(
+            graph, np.asarray(machine_of, np.int32), S, use_rev)
+
+        if colors is None:
+            colors = coloring_for(st, program.consistency)
+        colors = np.asarray(colors, np.int32)
+        self.num_colors = int(colors.max()) + 1 if colors.size else 1
+        self.colors = colors
+
+        self._shard = NamedSharding(mesh, P(axis))
+        self._rep = NamedSharding(mesh, P())
+        self._tables = {
+            k: jax.device_put(jnp.asarray(v), self._shard)
+            for k, v in self.layout.tables.items()}
+        colors_own = np.zeros(S * self.layout.n_loc, np.int32)
+        ok = self.layout.own_gid >= 0
+        colors_own[ok] = colors[self.layout.own_gid[ok]]
+        self._tables["colors_own"] = jax.device_put(
+            jnp.asarray(colors_own), self._shard)
+        self._jit_step = jax.jit(self._make_step())
+
+    # -- state ---------------------------------------------------------------
+    def init(self, graph: Optional[DataGraph] = None,
+             initial_prio: Optional[np.ndarray] = None) -> DistState:
+        graph = graph or self.graph
+        if graph.structure is not self.graph.structure and not (
+                graph.structure.n_vertices == self.graph.structure.n_vertices
+                and np.array_equal(graph.structure.senders,
+                                   self.graph.structure.senders)
+                and np.array_equal(graph.structure.receivers,
+                                   self.graph.structure.receivers)):
+            raise ValueError(
+                "init() graph structure differs from the one this engine "
+                "was partitioned for; build a new DistributedEngine")
+        lay = self.layout
+        S = lay.n_machines
+        vdata = jax.tree.map(np.asarray, graph.vertex_data)
+        edata = jax.tree.map(np.asarray, graph.edge_data)
+
+        vown = _take_rows(vdata, lay.own_gid)
+        vghost = _take_rows(vdata, lay.ghost_gid)
+        edata_l = _take_rows(edata, lay.erow_gid)
+        eghost = _take_rows(edata, lay.eghost_gid) if lay.has_rev else {}
+
+        prio_g = (np.asarray(initial_prio, np.float32)
+                  if initial_prio is not None else np.asarray(
+                      self.program.initial_priority(
+                          graph.structure.n_vertices), np.float32))
+        prio = np.zeros(S * lay.n_loc, np.float32)
+        ok = lay.own_gid >= 0
+        prio[ok] = prio_g[lay.own_gid[ok]]
+
+        put = lambda t: jax.tree.map(
+            lambda x: jax.device_put(jnp.asarray(x), self._shard), t)
+        return DistState(
+            vown=put(vown), vghost=put(vghost), edata=put(edata_l),
+            eghost=put(eghost), prio=put(prio),
+            update_count=put(np.zeros(S * lay.n_loc, np.int32)),
+            traffic_v=put(np.zeros(S, np.int32)),
+            traffic_e=put(np.zeros(S, np.int32)),
+            step_index=jax.device_put(jnp.zeros((), jnp.int32), self._rep))
+
+    # -- the sharded step -----------------------------------------------------
+    def _make_step(self):
+        lay, prog = self.layout, self.program
+        S, n_loc, B = lay.n_machines, lay.n_loc, lay.budget
+        e_loc, EB = lay.e_loc, lay.e_budget
+        use_rev = lay.has_rev
+        ax, tol = self.axis, self.tolerance
+        num_colors = self.num_colors
+
+        def exchange(payload, changed, send_idx, send_mask, budget):
+            """Versioned all_to_all: ship only rows whose vertex/edge
+            changed; returns (recv payload, recv changed, rows shipped)."""
+            ship = jnp.logical_and(send_mask, changed[send_idx])
+
+            def a2a(rows):
+                rows = rows.reshape((S, budget) + rows.shape[1:])
+                out = jax.lax.all_to_all(rows, ax, 0, 0, tiled=True)
+                return out.reshape((S * budget,) + out.shape[2:])
+
+            def one(x):
+                rows = x[send_idx]
+                m = ship.reshape((-1,) + (1,) * (rows.ndim - 1))
+                return a2a(jnp.where(m, rows, jnp.zeros_like(rows)))
+
+            recv = jax.tree.map(one, payload)
+            recv_changed = a2a(ship)
+            return recv, recv_changed, jnp.sum(ship, dtype=jnp.int32)
+
+        def body(state: DistState, tb: Dict[str, jnp.ndarray]) -> DistState:
+            vown, vghost = state.vown, state.vghost
+            edata, eghost = state.edata, state.eghost
+            prio, count = state.prio, state.update_count
+            tv, te = state.traffic_v, state.traffic_e
+
+            sl, rl = tb["senders_local"], tb["receivers_local"]
+            emask = tb["edge_mask"]
+            # masked edges aggregate into the dropped segment n_loc
+            recv_idx = jnp.where(emask, rl, n_loc)
+
+            for c in range(num_colors):
+                v_all = jax.tree.map(
+                    lambda o, g: jnp.concatenate([o, g], 0), vown, vghost)
+                if use_rev:
+                    e_all = jax.tree.map(
+                        lambda o, g: jnp.concatenate([o, g], 0), edata,
+                        eghost)
+                    rp = jnp.maximum(tb["rev_local"], 0)
+                    has_rev = tb["rev_local"] >= 0
+
+                    def _rev(x):
+                        y = x[rp]
+                        m = has_rev.reshape((-1,) + (1,) * (y.ndim - 1))
+                        return jnp.where(m, y, jnp.zeros_like(y))
+
+                    rev_edata = jax.tree.map(_rev, e_all)
+                else:
+                    # program declared it never reads ctx.rev_edata
+                    rev_edata = jax.tree.map(jnp.zeros_like, edata)
+
+                ctx = EdgeCtx(
+                    edata=edata,
+                    rev_edata=rev_edata,
+                    src=jax.tree.map(lambda x: x[sl], v_all),
+                    dst=jax.tree.map(lambda x: x[rl], vown),
+                    src_deg=tb["src_deg_e"],
+                    dst_deg=tb["dst_deg_e"])
+                msgs = prog.gather(ctx)
+                acc = segment_combine(msgs, recv_idx, n_loc, prog.combiner,
+                                      indices_are_sorted=False)
+
+                active = jnp.logical_and(
+                    tb["own_mask"],
+                    jnp.logical_and(tb["colors_own"] == c, prio > tol))
+                new_v, residual = prog.apply(vown, acc, None)
+                vown = masked_update(vown, new_v, active)
+                contrib = jnp.where(
+                    active, prog.priority(residual.astype(jnp.float32)), 0.0)
+
+                # versioned ghost exchange: vdata (+acc for edge writes,
+                # +contrib for remote scheduling) of *changed* rows only
+                payload = {"v": vown, "contrib": contrib}
+                if prog.has_edge_out:
+                    payload["acc"] = acc
+                recv, recv_ch, shipped = exchange(
+                    payload, active, tb["send_idx"], tb["send_mask"], B)
+                tv = tv + shipped
+
+                def _merge(old, new):
+                    m = recv_ch.reshape((-1,) + (1,) * (old.ndim - 1))
+                    return jnp.where(m, new.astype(old.dtype), old)
+
+                vghost = jax.tree.map(_merge, vghost, recv["v"])
+                ghost_contrib = jnp.where(recv_ch, recv["contrib"], 0.0)
+
+                prio = jnp.where(active, 0.0, prio)
+                if prog.schedule_neighbors:
+                    contrib_all = jnp.concatenate([contrib, ghost_contrib])
+                    vals = jnp.where(emask, contrib_all[sl], 0.0)
+                    prio = prio + jax.ops.segment_sum(
+                        vals, recv_idx, n_loc + 1)[:n_loc]
+
+                if prog.has_edge_out:
+                    v_all2 = jax.tree.map(
+                        lambda o, g: jnp.concatenate([o, g], 0), vown,
+                        vghost)
+                    acc_all = jax.tree.map(
+                        lambda a, g: jnp.concatenate([a, g], 0), acc,
+                        recv["acc"])
+                    changed_all = jnp.concatenate(
+                        [active, recv_ch.astype(active.dtype)])
+                    ctx2 = ctx._replace(
+                        src=jax.tree.map(lambda x: x[sl], v_all2),
+                        dst=jax.tree.map(lambda x: x[rl], vown))
+                    new_src = jax.tree.map(lambda x: x[sl], v_all2)
+                    src_acc = jax.tree.map(lambda x: x[sl], acc_all)
+                    new_e = prog.edge_out(ctx2, new_src, src_acc)
+                    wmask = jnp.logical_and(changed_all[sl], emask)
+                    edata = masked_update(edata, new_e, wmask)
+
+                    if use_rev:  # refresh remote reverse-message caches
+                        erecv, erecv_ch, eshipped = exchange(
+                            edata, wmask, tb["esend_idx"],
+                            tb["esend_mask"], EB)
+                        te = te + eshipped
+
+                        def _emerge(old, new):
+                            m = erecv_ch.reshape(
+                                (-1,) + (1,) * (old.ndim - 1))
+                            return jnp.where(m, new.astype(old.dtype), old)
+
+                        eghost = jax.tree.map(_emerge, eghost, erecv)
+
+                count = count + active.astype(jnp.int32)
+
+            return DistState(
+                vown=vown, vghost=vghost, edata=edata, eghost=eghost,
+                prio=prio, update_count=count,
+                traffic_v=tv, traffic_e=te,
+                step_index=state.step_index)
+
+        spec = P(self.axis)
+        state_specs = DistState(
+            vown=spec, vghost=spec, edata=spec, eghost=spec, prio=spec,
+            update_count=spec, traffic_v=spec, traffic_e=spec,
+            step_index=P())
+        sharded = shard_map(
+            body, mesh=self.mesh,
+            in_specs=(state_specs, spec), out_specs=state_specs,
+            check_vma=False)
+
+        def step(state: DistState, tables) -> DistState:
+            out = sharded(state, tables)
+            return out.replace(step_index=state.step_index + 1)
+
+        return step
+
+    # -- drivers --------------------------------------------------------------
+    def step(self, state: DistState) -> DistState:
+        return self._jit_step(state, self._tables)
+
+    def run(self, state: DistState,
+            max_steps: int = 100) -> Tuple[DistState, "list[dict]"]:
+        trace = []
+        for _ in range(max_steps):
+            if float(jnp.max(state.prio)) <= self.tolerance:
+                break
+            state = self.step(state)
+            trace.append({
+                "step": int(state.step_index),
+                "updates": int(jnp.sum(state.update_count)),
+                "ghost_rows": int(jnp.sum(state.traffic_v)),
+            })
+        return state, trace
+
+    # -- readback -------------------------------------------------------------
+    def vertex_data(self, state: DistState) -> Pytree:
+        """Owned rows stitched back to global vertex order [N, ...]."""
+        lay = self.layout
+        ok = lay.own_gid >= 0
+
+        def one(x):
+            x = np.asarray(x)
+            out = np.zeros((self.graph.structure.n_vertices,) + x.shape[1:],
+                           x.dtype)
+            out[lay.own_gid[ok]] = x[ok]
+            return out
+
+        return jax.tree.map(one, state.vown)
+
+    def ghost_rows_sent(self, state: DistState) -> int:
+        return int(np.asarray(state.traffic_v).sum())
+
+    def ghost_edge_rows_sent(self, state: DistState) -> int:
+        return int(np.asarray(state.traffic_e).sum())
+
+    def total_ghost_slots(self) -> int:
+        """Distinct (vertex, caching machine) pairs — the per-sweep upper
+        bound on versioned traffic when every vertex updates."""
+        return int(self.layout.tables["send_mask"].sum())

@@ -1,0 +1,171 @@
+"""Logical-axis sharding rules (DESIGN.md §3.6).
+
+Model code never names mesh axes.  It annotates arrays with *logical* axis
+names — ``("batch", "seq", "heads", "head_dim")`` — and an ``AxisRules``
+table maps each logical name to the mesh axes it may shard over.  The same
+model then runs under training rules (FSDP over ``data``, tensor-parallel
+over ``model``) or serving rules (replicated weights, sharded KV) by
+swapping the table, exactly as the engines swap consistency models by
+swapping colorings.
+
+Resolution is *total*: a logical dim whose size does not divide the mesh
+axes it maps to silently falls back to replication (the longest divisible
+prefix of its mesh axes wins).  This is what lets the smoke configs — tiny
+shapes on a 1-device CPU mesh — trace the identical annotated code the
+256-chip pod runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+Pytree = Any
+
+# A rule value: None (never shard) | one mesh axis | ordered mesh axes.
+RuleValue = Union[None, str, Tuple[str, ...]]
+
+
+def _normalize(value: RuleValue) -> Tuple[str, ...]:
+    if value is None:
+        return ()
+    if isinstance(value, str):
+        return (value,)
+    return tuple(value)
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisRules:
+    """Immutable logical-name -> mesh-axes table.
+
+    Hashable (usable as jit static metadata); ``extend`` derives a new
+    table with overrides, which is how SERVE_RULES differs from
+    TRAIN_RULES in two entries instead of being restated.
+    """
+
+    items: Tuple[Tuple[str, Tuple[str, ...]], ...]
+
+    @staticmethod
+    def of(**rules: RuleValue) -> "AxisRules":
+        return AxisRules(tuple(sorted(
+            (name, _normalize(v)) for name, v in rules.items())))
+
+    def extend(self, **overrides: RuleValue) -> "AxisRules":
+        d = dict(self.items)
+        d.update({k: _normalize(v) for k, v in overrides.items()})
+        return AxisRules(tuple(sorted(d.items())))
+
+    def mesh_axes(self, name: str) -> Tuple[str, ...]:
+        for k, v in self.items:
+            if k == name:
+                return v
+        raise KeyError(
+            f"unknown logical axis {name!r}; known: "
+            f"{[k for k, _ in self.items]}")
+
+    def __contains__(self, name: str) -> bool:
+        return any(k == name for k, _ in self.items)
+
+
+def logical_spec(
+    rules: AxisRules,
+    names: Sequence[Optional[str]],
+    shape: Sequence[int],
+    mesh,
+) -> P:
+    """Resolves logical axis names to a ``PartitionSpec`` on ``mesh``.
+
+    Per dimension: look up the logical name's mesh axes, keep only axes the
+    mesh actually has (a 2D mesh ignores "pod") that are not already used by
+    an earlier dimension, then keep the longest prefix whose total size
+    divides the dimension — anything else replicates.  ``None`` entries and
+    ``mesh=None`` always replicate.
+    """
+    if mesh is None:
+        return P(*([None] * len(names)))
+    if len(names) != len(shape):
+        raise ValueError(
+            f"names {tuple(names)} and shape {tuple(shape)} rank mismatch")
+    used: set = set()
+    out = []
+    for name, dim in zip(names, shape):
+        if name is None:
+            out.append(None)
+            continue
+        axes = [a for a in rules.mesh_axes(name)
+                if a in mesh.shape and a not in used]
+        # divisibility fallback: longest prefix of axes whose product divides
+        while axes:
+            prod = 1
+            for a in axes:
+                prod *= mesh.shape[a]
+            if prod > 1 and dim % prod == 0:
+                break
+            axes.pop()
+        if not axes:
+            out.append(None)
+            continue
+        used.update(axes)
+        out.append(tuple(axes) if len(axes) > 1 else axes[0])
+    return P(*out)
+
+
+def shard_constraint(
+    x: jax.Array,
+    rules: AxisRules,
+    names: Sequence[Optional[str]],
+    mesh=None,
+) -> jax.Array:
+    """``with_sharding_constraint`` through logical names; identity when
+    there is nothing to constrain (no mesh / 1-device mesh), so annotated
+    model code runs unchanged on CPU."""
+    if len(names) != len(x.shape):
+        # validate even on the no-op path: a rank mismatch here would
+        # otherwise surface only on a multi-device mesh
+        raise ValueError(
+            f"names {tuple(names)} and array rank {len(x.shape)} mismatch")
+    if mesh is None or mesh.devices.size <= 1:
+        return x
+    spec = logical_spec(rules, names, x.shape, mesh)
+    if all(s is None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# The two production rule sets (launch/mesh.py axes: ('pod',) 'data', 'model')
+# ---------------------------------------------------------------------------
+
+# Training: batch/FSDP over the data axes, tensor parallel over 'model'.
+# 'embed_fsdp' is the d_model axis of *stored* weights (gathered to bf16 at
+# use — models/transformer.py _gather_w); 'seq_sp' is sequence parallelism
+# on the norm/residual path.
+TRAIN_RULES = AxisRules.of(
+    batch=("pod", "data"),
+    seq=None,
+    seq_sp="model",
+    kv_seq=None,
+    embed=None,
+    embed_fsdp=("pod", "data"),
+    heads="model",
+    kv_heads="model",
+    head_dim=None,
+    mlp="model",
+    vocab="model",
+    experts=("pod", "data"),
+    table_rows="model",
+    candidates=("pod", "data"),
+    nodes=("pod", "data"),
+    edges=("pod", "data"),
+)
+
+# Serving: no FSDP (weights resident, replicated over data; sharded over
+# 'model' via heads/mlp/vocab); the KV cache shards its seq axis for
+# FlashDecoding split-KV when kv_heads cannot split (GQA).
+SERVE_RULES = TRAIN_RULES.extend(
+    embed_fsdp=None,
+    kv_seq="model",
+)

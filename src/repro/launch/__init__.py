@@ -1,0 +1,6 @@
+"""Production launch layer: mesh definitions, step bundles, drivers.
+
+``mesh``/``steps`` build (arch x shape x mesh) cells; ``dryrun`` lowers and
+compiles them against ShapeDtypeStructs; ``train``/``serve`` are the real
+CPU-runnable drivers that ride the same bundles on a pod.
+"""

@@ -328,6 +328,7 @@ def _recsys_bundle(spec: ArchSpec, shape: RecsysShape, mesh) -> StepBundle:
                                 jax.random.key(0))
     B = shape.batch
     bspec = logical_spec(rules, ("batch", None), (max(B, 1), 1), mesh)
+    bspec1 = logical_spec(rules, ("batch",), (max(B, 1),), mesh)
     dense = jax.ShapeDtypeStruct((B, cfg.n_dense), jnp.float32)
     ids = jax.ShapeDtypeStruct((B, cfg.n_sparse, cfg.multi_hot), jnp.int32)
     meta = {"step_kind": shape.step, "batch": B,
@@ -348,7 +349,7 @@ def _recsys_bundle(spec: ArchSpec, shape: RecsysShape, mesh) -> StepBundle:
 
         batch_sds = {"dense": dense, "sparse_ids": ids,
                      "labels": jax.ShapeDtypeStruct((B,), jnp.int32)}
-        bshard = {"dense": bspec, "sparse_ids": bspec, "labels": bspec}
+        bshard = {"dense": bspec, "sparse_ids": bspec, "labels": bspec1}
         return StepBundle(
             step_fn=train_step,
             input_sds=(params_sds, opt_sds, batch_sds),
@@ -367,7 +368,7 @@ def _recsys_bundle(spec: ArchSpec, shape: RecsysShape, mesh) -> StepBundle:
             step_fn=serve_step,
             input_sds=(params_sds, batch_sds),
             in_shardings=(pspecs, bshard),
-            out_shardings=bspec,
+            out_shardings=bspec1,  # logits are [B] (rank-1)
             donate_argnums=(),
             meta=meta)
 

@@ -219,5 +219,6 @@ def ghost_loss_fn(cfg, mod, gnn_loss, mesh, plan: GhostPlan):
             "send_idx": P(dp_spec), "send_mask": P(dp_spec),
         },
     )
-    return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
-                         out_specs=P(), check_vma=False)
+    from repro.dist.compat import shard_map
+    return shard_map(body, mesh=mesh, in_specs=in_specs,
+                     out_specs=P(), check_vma=False)

@@ -1,0 +1,148 @@
+"""Deterministic stand-in for the `hypothesis` API surface this suite uses.
+
+The container image may not ship `hypothesis` and tier-1 must not depend on
+network installs.  When the real package is missing, ``conftest.py``
+registers this module in ``sys.modules`` under the name ``hypothesis`` so
+the property-test modules import and *run* — each ``@given`` test executes
+``max_examples`` deterministic draws (corner cases first, then seeded
+pseudo-random examples) instead of hypothesis' adaptive search.
+
+Covered API (everything tests/*.py imports):
+    given(**kwargs)                       keyword-style only
+    settings(max_examples=, deadline=, **ignored)
+    strategies.integers(lo, hi) / sampled_from(seq) / booleans()
+
+This is intentionally NOT a property-testing framework: no shrinking, no
+database, no assume().  With the real hypothesis installed it is never used.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
+from typing import Any, Sequence
+
+DEFAULT_MAX_EXAMPLES = 10
+
+
+class _Strategy:
+    def draw(self, rng: random.Random) -> Any:
+        raise NotImplementedError
+
+    def corner(self, which: int) -> Any:  # which in {0: minimal, 1: maximal}
+        raise NotImplementedError
+
+
+class _Integers(_Strategy):
+    def __init__(self, min_value: int, max_value: int):
+        self.lo, self.hi = int(min_value), int(max_value)
+
+    def draw(self, rng):
+        return rng.randint(self.lo, self.hi)
+
+    def corner(self, which):
+        return self.lo if which == 0 else self.hi
+
+
+class _SampledFrom(_Strategy):
+    def __init__(self, elements: Sequence[Any]):
+        self.elements = list(elements)
+
+    def draw(self, rng):
+        return self.elements[rng.randrange(len(self.elements))]
+
+    def corner(self, which):
+        return self.elements[0 if which == 0 else -1]
+
+
+class _Booleans(_Strategy):
+    def draw(self, rng):
+        return rng.random() < 0.5
+
+    def corner(self, which):
+        return bool(which)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value=0, max_value=2**31 - 1):
+        return _Integers(min_value, max_value)
+
+    @staticmethod
+    def sampled_from(elements):
+        return _SampledFrom(elements)
+
+    @staticmethod
+    def booleans():
+        return _Booleans()
+
+
+def settings(*args, max_examples: int = DEFAULT_MAX_EXAMPLES, **_ignored):
+    """Decorator: records max_examples for the (possibly later-applied)
+    ``given`` wrapper.  Works above or below ``@given``."""
+
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    if args and callable(args[0]):  # bare @settings
+        return deco(args[0])
+    return deco
+
+
+def given(**param_strategies):
+    for name, s in param_strategies.items():
+        if not isinstance(s, _Strategy):
+            raise TypeError(
+                f"fallback hypothesis: unsupported strategy for {name!r}: "
+                f"{s!r} (only integers/sampled_from/booleans)")
+
+    def deco(fn):
+        seed = zlib.crc32(
+            f"{fn.__module__}.{fn.__qualname__}".encode()) & 0xFFFFFFFF
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_fallback_max_examples",
+                        getattr(fn, "_fallback_max_examples",
+                                DEFAULT_MAX_EXAMPLES))
+            rng = random.Random(seed)
+            for i in range(max(int(n), 1)):
+                if i < 2:  # corner examples first: all-min, then all-max
+                    drawn = {k: s.corner(i)
+                             for k, s in param_strategies.items()}
+                else:
+                    drawn = {k: s.draw(rng)
+                             for k, s in param_strategies.items()}
+                try:
+                    fn(*args, **{**kwargs, **drawn})
+                except _Rejected:
+                    continue  # failed assume(): not a counterexample
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example ({fn.__qualname__}, "
+                        f"example {i}): {drawn!r}") from e
+
+        # hide the drawn params from pytest's fixture resolution
+        sig = inspect.signature(fn)
+        kept = [p for p in sig.parameters.values()
+                if p.name not in param_strategies]
+        wrapper.__signature__ = sig.replace(parameters=kept)
+        return wrapper
+
+    return deco
+
+
+HealthCheck = type("HealthCheck", (), {"all": staticmethod(lambda: [])})
+
+
+def assume(condition: bool) -> bool:
+    """Degenerate assume: treat a failed assumption as a passing example."""
+    if not condition:
+        raise _Rejected()
+    return True
+
+
+class _Rejected(Exception):
+    pass
