@@ -1,16 +1,21 @@
 """Benchmark runner: one harness per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig1a,fig3,...]
+    PYTHONPATH=src python -m benchmarks.run [--only fig1a,fig3,...] [--json]
 
-Prints CSV per figure.  The roofline table is separate
-(benchmarks/roofline.py — it consumes the dry-run JSON).
+Prints CSV per figure.  ``--json`` additionally writes one machine-readable
+``BENCH_<name>.json`` per harness (records + wall time) so the perf
+trajectory is recorded across PRs; CI uploads them as artifacts.  The
+roofline table is separate (benchmarks/roofline.py — it consumes the
+dry-run JSON).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
+from benchmarks import gas_bench
 from benchmarks import paper_figures as pf
 
 HARNESSES = {
@@ -22,7 +27,15 @@ HARNESSES = {
     "fig6": pf.fig6_scaling_and_intensity,
     "fig9a": pf.fig9a_dynamic_vs_static_als,
     "table2": pf.table2_throughput,
+    "gas": gas_bench.gas_microbenchmark,
 }
+
+
+def _write_json(name: str, payload: dict) -> None:
+    path = f"BENCH_{name}.json"
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"wrote {path}")
 
 
 def main() -> None:
@@ -32,6 +45,9 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="collection check: verify every harness resolves "
                          "to a callable with a docstring, run nothing")
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_<name>.json per harness "
+                         "(BENCH_smoke.json under --smoke)")
     args = ap.parse_args()
     names = (args.only.split(",") if args.only else list(HARNESSES))
     unknown = [n for n in names if n not in HARNESSES]
@@ -51,6 +67,8 @@ def main() -> None:
             print(f"FAILED collection: {bad} (known: {list(HARNESSES)})")
             sys.exit(1)
         print(f"{len(names)} harnesses collected")
+        if args.json:
+            _write_json("smoke", {"collected": names})
         return
 
     failures = 0
@@ -65,12 +83,16 @@ def main() -> None:
             failures += 1
             print(f"FAILED: {type(e).__name__}: {e}")
             continue
+        wall = time.time() - t0
         if records:
             cols = sorted({k for r in records for k in r})
             print(",".join(cols))
             for r in records:
                 print(",".join(str(r.get(c, "")) for c in cols))
-        print(f"({time.time() - t0:.1f}s)")
+        print(f"({wall:.1f}s)")
+        if args.json:
+            _write_json(name, {"name": name, "wall_s": round(wall, 2),
+                               "records": records or []})
     if failures:
         sys.exit(1)
 

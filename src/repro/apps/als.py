@@ -27,7 +27,7 @@ import numpy as np
 
 from repro.core.consistency import Consistency
 from repro.core.graph import DataGraph, GraphStructure
-from repro.core.update import ApplyOut, EdgeCtx, VertexProgram
+from repro.core.update import ApplyOut, EdgeCtx, FusedGather, VertexProgram
 from repro.graphs.generators import bipartite_graph
 
 
@@ -46,6 +46,22 @@ class ALSProgram(VertexProgram):
         return {
             "xxt": w[..., None] * x[:, :, None] * x[:, None, :],  # [E, d, d]
             "rx": w * ctx.edata["rating"][:, None] * x,           # [E, d]
+        }
+
+    def fused_gather(self):
+        # Both leaves are weighted-src-sums of *derived* per-vertex features:
+        # the x xᵀ outer product is an [N, d, d] vertex table (cheap — N ≪ E),
+        # so the [E, d, d] per-edge messages never materialize (DESIGN §3.5).
+        return {
+            "xxt": FusedGather(
+                "weighted_src_sum",
+                feature=lambda v: v["factor"][:, :, None]
+                * v["factor"][:, None, :],
+                weight=lambda e: e["train"]),
+            "rx": FusedGather(
+                "weighted_src_sum",
+                feature=lambda v: v["factor"],
+                weight=lambda e: e["train"] * e["rating"]),
         }
 
     def apply(self, vertex_data, acc, glob=None) -> ApplyOut:

@@ -24,7 +24,7 @@ import numpy as np
 
 from repro.core.consistency import Consistency
 from repro.core.graph import DataGraph, GraphStructure
-from repro.core.update import ApplyOut, EdgeCtx, VertexProgram
+from repro.core.update import ApplyOut, EdgeCtx, FusedGather, VertexProgram
 from repro.graphs.generators import bipartite_graph
 
 
@@ -38,6 +38,13 @@ class CoEMProgram(VertexProgram):
 
     def gather(self, ctx: EdgeCtx):
         return ctx.edata["w"][:, None] * ctx.src["p"]  # [E, K]
+
+    def fused_gather(self):
+        # The paper's communication-bound worst case (816 B vertex data) is
+        # exactly where skipping inactive [E, K] traffic pays (DESIGN §3.5).
+        return FusedGather("weighted_src_sum",
+                           feature=lambda v: v["p"],
+                           weight=lambda e: e["w"])
 
     def apply(self, vertex_data, acc, glob=None) -> ApplyOut:
         total = jnp.sum(acc, axis=-1, keepdims=True)

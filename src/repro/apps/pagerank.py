@@ -17,7 +17,7 @@ import numpy as np
 
 from repro.core.consistency import Consistency
 from repro.core.graph import DataGraph, GraphStructure
-from repro.core.update import ApplyOut, EdgeCtx, VertexProgram
+from repro.core.update import ApplyOut, EdgeCtx, FusedGather, VertexProgram
 
 
 class PageRankProgram(VertexProgram):
@@ -32,6 +32,12 @@ class PageRankProgram(VertexProgram):
     def gather(self, ctx: EdgeCtx):
         # w_{u,v} * R(u)
         return ctx.edata["w"] * ctx.src["rank"]
+
+    def fused_gather(self):
+        # same message, computed inside the GAS kernel (DESIGN.md §3.5)
+        return FusedGather("weighted_src_sum",
+                           feature=lambda v: v["rank"],
+                           weight=lambda e: e["w"])
 
     def apply(self, vertex_data, acc, glob=None) -> ApplyOut:
         new_rank = self.alpha / self.n + (1.0 - self.alpha) * acc

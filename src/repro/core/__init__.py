@@ -12,13 +12,15 @@ from repro.core.snapshot import (AsyncSnapshotDriver, SnapshotState,
                                  SyncSnapshotDriver, init_snapshot,
                                  restore_engine_state)
 from repro.core.sync_op import FnSyncOp, SyncOp
-from repro.core.update import ApplyOut, EdgeCtx, VertexProgram
+from repro.core.update import (ApplyOut, EdgeCtx, FusedGather, VertexProgram,
+                               supports_fused_gather)
 
 __all__ = [
     "ApplyOut", "AsyncSnapshotDriver", "BSPEngine", "ChromaticEngine",
     "ClusterModel", "Consistency", "DataGraph", "DynamicEngine", "EdgeCtx",
-    "Engine", "EngineState", "FnSyncOp", "GraphStructure", "SequentialEngine",
-    "SimulatedCluster", "SnapshotState", "SyncOp", "SyncSnapshotDriver",
-    "VertexProgram", "gather_scope", "init_snapshot", "init_state",
-    "restore_engine_state", "scatter_to_neighbors", "segment_combine",
+    "Engine", "EngineState", "FnSyncOp", "FusedGather", "GraphStructure",
+    "SequentialEngine", "SimulatedCluster", "SnapshotState", "SyncOp",
+    "SyncSnapshotDriver", "VertexProgram", "gather_scope", "init_snapshot",
+    "init_state", "restore_engine_state", "scatter_to_neighbors",
+    "segment_combine", "supports_fused_gather",
 ]

@@ -46,8 +46,9 @@ class BSPEngine(Engine):
         mask = state.prio > self.tolerance
         # Jacobi: gather/apply against the previous barrier's data for ALL
         # active vertices at once (single color = vertex consistency).
-        graph, residual = apply_phase(self.program, state.graph, mask,
-                                      state.globals_)
+        graph, residual, et = apply_phase(
+            self.program, state.graph, mask, state.globals_,
+            edges=self._full_edges, interpret=self.gas_interpret)
         prio = schedule_phase(self.program, self.structure, state.prio, mask,
                               residual)
         state = state.replace(
@@ -55,5 +56,6 @@ class BSPEngine(Engine):
             prio=prio,
             update_count=state.update_count + mask.astype(jnp.int32),
             total_updates=state.total_updates + jnp.sum(mask.astype(jnp.int32)),
+            edges_touched=state.edges_touched + et,
             step_index=state.step_index + 1)
         return self._run_syncs(state, prev_vdata)

@@ -13,6 +13,12 @@ exchange is the sharded all-gather XLA inserts — see launch/spmd path).
 Within a color-step, updates read the freshest data (Gauss-Seidel across
 colors), which is what buys the asynchronous convergence behaviour of
 Fig. 1(a) relative to the Jacobi BSP engine.
+
+Fused GAS path (DESIGN.md §3.5): for fuseable programs each color owns a
+**per-color edge range** — the receiver-sorted edges whose receiver has
+that color, precomputed on host — so a color-step streams only E_c edges
+(Σ_c E_c = E per sweep) instead of gathering all E edges ``num_colors``
+times, and the active-block bitmap prunes further as the scheduler drains.
 """
 from __future__ import annotations
 
@@ -29,6 +35,7 @@ from repro.core.engine_base import (Engine, EngineState, apply_phase,
 from repro.core.graph import DataGraph
 from repro.core.sync_op import SyncOp
 from repro.core.update import VertexProgram
+from repro.kernels.gas.ops import EdgeSet
 
 
 class ChromaticEngine(Engine):
@@ -39,8 +46,12 @@ class ChromaticEngine(Engine):
         colors: Optional[np.ndarray] = None,
         tolerance: float = 1e-3,
         sync_ops: Sequence[SyncOp] = (),
+        *,
+        use_fused: Optional[bool] = None,
+        gas_interpret: Optional[bool] = None,
     ):
-        super().__init__(program, graph, tolerance, sync_ops)
+        super().__init__(program, graph, tolerance, sync_ops,
+                         use_fused=use_fused, gas_interpret=gas_interpret)
         if colors is None:
             colors = coloring_for(graph.structure, program.consistency)
         colors = np.asarray(colors, dtype=np.int32)
@@ -52,23 +63,39 @@ class ChromaticEngine(Engine):
         self.colors = jnp.asarray(colors)
         self.num_colors = int(colors.max()) + 1 if colors.size else 1
 
+        self._color_edges: Optional[list] = None
+        if self.use_fused:
+            st = graph.structure
+            recv_color = colors[st.receivers]
+            self._color_edges = []
+            for c in range(self.num_colors):
+                idx = np.nonzero(recv_color == c)[0].astype(np.int32)
+                self._color_edges.append(EdgeSet.build(
+                    st.senders[idx], st.receivers[idx], st.n_vertices,
+                    perm=idx))
+
     def _step(self, state: EngineState) -> EngineState:
         """One sweep = one color-step per color (paper: T is drained color by
         color; the sync operation runs safely between color-steps)."""
         graph, prio = state.graph, state.prio
         count, total = state.update_count, state.total_updates
+        edges_t = state.edges_touched
         prev_vdata = graph.vertex_data
         glob = state.globals_
 
         for c in range(self.num_colors):  # unrolled: num_colors is small
             mask = jnp.logical_and(self.colors == c, prio > self.tolerance)
-            graph, residual = apply_phase(self.program, graph, mask, glob)
+            edges = self._color_edges[c] if self._color_edges else None
+            graph, residual, et = apply_phase(
+                self.program, graph, mask, glob, edges=edges,
+                interpret=self.gas_interpret)
             prio = schedule_phase(self.program, self.structure, prio, mask,
                                   residual)
             count = count + mask.astype(jnp.int32)
             total = total + jnp.sum(mask.astype(jnp.int32))
+            edges_t = edges_t + et
 
         state = state.replace(
             graph=graph, prio=prio, update_count=count, total_updates=total,
-            step_index=state.step_index + 1)
+            edges_touched=edges_t, step_index=state.step_index + 1)
         return self._run_syncs(state, prev_vdata)

@@ -56,8 +56,12 @@ class DynamicEngine(Engine):
         serializable: bool = True,
         tolerance: float = 1e-3,
         sync_ops: Sequence[SyncOp] = (),
+        *,
+        use_fused: Optional[bool] = None,
+        gas_interpret: Optional[bool] = None,
     ):
-        super().__init__(program, graph, tolerance, sync_ops)
+        super().__init__(program, graph, tolerance, sync_ops,
+                         use_fused=use_fused, gas_interpret=gas_interpret)
         self.pipeline_length = int(min(pipeline_length, graph.n_vertices))
         self.serializable = bool(serializable)
 
@@ -99,8 +103,12 @@ class DynamicEngine(Engine):
     def _step(self, state: EngineState) -> EngineState:
         prev_vdata = state.graph.vertex_data
         mask = self._select(state.prio)
-        graph, residual = apply_phase(self.program, state.graph, mask,
-                                      state.globals_)
+        # Fused GAS path when the program declares registry gathers: the
+        # top-k selection concentrates work, so active-block skipping is at
+        # its most effective here (k vertices → ≤ k row blocks of edges).
+        graph, residual, et = apply_phase(
+            self.program, state.graph, mask, state.globals_,
+            edges=self._full_edges, interpret=self.gas_interpret)
         prio = schedule_phase(self.program, self.structure, state.prio, mask,
                               residual)
         state = state.replace(
@@ -108,6 +116,7 @@ class DynamicEngine(Engine):
             prio=prio,
             update_count=state.update_count + mask.astype(jnp.int32),
             total_updates=state.total_updates + jnp.sum(mask.astype(jnp.int32)),
+            edges_touched=state.edges_touched + et,
             step_index=state.step_index + 1)
         return self._run_syncs(state, prev_vdata)
 

@@ -21,7 +21,10 @@ import numpy as np
 
 from repro.core.graph import DataGraph, segment_combine, scatter_to_neighbors
 from repro.core.sync_op import SyncOp, run_syncs
-from repro.core.update import VertexProgram, edge_ctx, masked_update
+from repro.core.update import (VertexProgram, edge_ctx, fused_edge_weight,
+                               fused_gather_leaves, masked_update,
+                               supports_fused_gather)
+from repro.kernels.gas.ops import EdgeSet, active_row_blocks, gather_combine
 
 Pytree = Any
 
@@ -34,6 +37,7 @@ class EngineState:
     update_count: jnp.ndarray  # [N] i32 — paper Fig. 1(b) statistic
     step_index: jnp.ndarray    # scalar i32
     total_updates: jnp.ndarray  # scalar i64-ish (i32 fine for tests)
+    edges_touched: jnp.ndarray  # scalar i64-ish — gathered-edge accounting
     globals_: Pytree           # sync-op outputs readable by update fns
 
     def replace(self, **kw) -> "EngineState":
@@ -56,6 +60,7 @@ def init_state(
         update_count=jnp.zeros(n, jnp.int32),
         step_index=jnp.zeros((), jnp.int32),
         total_updates=jnp.zeros((), jnp.int32),
+        edges_touched=jnp.zeros((), jnp.int32),
         globals_=globals_,
     )
 
@@ -65,19 +70,29 @@ def apply_phase(
     graph: DataGraph,
     mask: jnp.ndarray,
     glob: Pytree,
-) -> Tuple[DataGraph, jnp.ndarray]:
+    *,
+    edges: Optional[EdgeSet] = None,
+    interpret: Optional[bool] = None,
+) -> Tuple[DataGraph, jnp.ndarray, jnp.ndarray]:
     """Executes ``f(v, S_v)`` for every vertex in ``mask`` simultaneously.
 
     Gather → ⊕-combine → apply (masked write-back) → edge_out (masked to
-    out-edges of updated vertices).  Returns (new graph, residual·mask).
+    out-edges of updated vertices).  Returns (new graph, residual·mask,
+    edges touched).  Passing ``edges`` (a prepared ``EdgeSet``) routes the
+    gather⊕combine through the fused GAS kernel with active-block skipping
+    (DESIGN.md §3.5); the dense path gathers all E edges regardless of mask.
     """
+    if edges is not None:
+        return fused_apply_phase(program, graph, mask, glob, edges,
+                                 interpret=interpret)
     st = graph.structure
     receivers = jnp.asarray(st.receivers)
     senders = jnp.asarray(st.senders)
 
     ctx = edge_ctx(graph)
     msgs = program.gather(ctx)
-    acc = segment_combine(msgs, receivers, st.n_vertices, program.combiner)
+    acc = segment_combine(msgs, receivers, st.n_vertices, program.combiner,
+                          receivers_np=st.receivers)
 
     new_v, residual = program.apply(graph.vertex_data, acc, glob)
     vdata = masked_update(graph.vertex_data, new_v, mask)
@@ -95,7 +110,56 @@ def apply_phase(
         graph = graph.replace(edge_data=edata)
 
     residual = jnp.where(mask, residual.astype(jnp.float32), 0.0)
-    return graph, residual
+    return graph, residual, jnp.asarray(st.n_edges, jnp.int32)
+
+
+def fused_apply_phase(
+    program: VertexProgram,
+    graph: DataGraph,
+    mask: jnp.ndarray,
+    glob: Pytree,
+    edges: EdgeSet,
+    *,
+    interpret: Optional[bool] = None,
+) -> Tuple[DataGraph, jnp.ndarray, jnp.ndarray]:
+    """The fused GAS path: one kernel per declared gather leaf, no edge_ctx,
+    no [E, D] message materialization, inactive row blocks skipped.
+
+    Per leaf: the per-vertex feature table ``[N, ...]`` and the per-edge
+    scalar weight ``[E]`` are formed outside the kernel (both sub-[E, D]),
+    the kernel streams the ``edges`` subset and accumulates in VMEM.  Rows
+    outside active blocks come back as zeros; they belong to unscheduled
+    vertices whose apply output is discarded by ``masked_update`` and whose
+    residual is masked below, so the fixed point matches the dense path.
+    """
+    st = graph.structure
+    leaves, treedef = fused_gather_leaves(program)
+    block_active = active_row_blocks(mask)
+    # out-degree of each full-edge source — only degree_normalized_src
+    # leaves consult it, so don't gather/ship an [E] array otherwise
+    src_deg = jnp.asarray(st.out_degree[st.senders]) if any(
+        leaf.kind == "degree_normalized_src" for leaf in leaves) else None
+
+    acc_leaves = []
+    for leaf in leaves:
+        feat = leaf.feature(graph.vertex_data)
+        trailing = feat.shape[1:]
+        feat2 = feat.reshape(st.n_vertices, -1)
+        w = fused_edge_weight(leaf, graph.edge_data, st.n_edges, src_deg)
+        if edges.perm is not None:
+            w = w[edges.perm]
+        acc = gather_combine(feat2, w, edges, block_active=block_active,
+                             interpret=interpret)
+        acc_leaves.append(acc.reshape((st.n_vertices,) + trailing))
+    acc = jax.tree.unflatten(treedef, acc_leaves)
+
+    new_v, residual = program.apply(graph.vertex_data, acc, glob)
+    vdata = masked_update(graph.vertex_data, new_v, mask)
+    graph = graph.replace(vertex_data=vdata)
+    residual = jnp.where(mask, residual.astype(jnp.float32), 0.0)
+    edges_touched = jnp.sum(
+        jnp.where(block_active > 0, edges.block_counts, 0)).astype(jnp.int32)
+    return graph, residual, edges_touched
 
 
 def schedule_phase(
@@ -115,7 +179,15 @@ def schedule_phase(
 
 
 class Engine:
-    """Base: subclasses define ``_step``; ``step`` is its jitted form."""
+    """Base: subclasses define ``_step``; ``step`` is its jitted form.
+
+    ``use_fused`` selects the fused GAS gather⊕combine path (DESIGN.md §3.5)
+    for programs that declare registry gathers: None (default) auto-enables
+    it when the program qualifies, False forces the seed dense path, True
+    requests it but still falls back when the program is non-fuseable (the
+    LBP case).  ``gas_interpret`` threads the Pallas interpret flag to the
+    kernel — tests use it to exercise the real kernel body on CPU.
+    """
 
     def __init__(
         self,
@@ -123,12 +195,31 @@ class Engine:
         graph: DataGraph,
         tolerance: float = 1e-3,
         sync_ops: Sequence[SyncOp] = (),
+        *,
+        use_fused: Optional[bool] = None,
+        gas_interpret: Optional[bool] = None,
     ):
         self.program = program
         self.structure = graph.structure
         self.tolerance = float(tolerance)
         self.sync_ops = tuple(sync_ops)
+        fusable = supports_fused_gather(program)
+        self.use_fused = fusable if use_fused is None \
+            else bool(use_fused) and fusable
+        self.gas_interpret = gas_interpret
+        self._full_edges_cache: Optional[EdgeSet] = None
         self._jit_step = jax.jit(self._step)
+
+    @property
+    def _full_edges(self) -> Optional[EdgeSet]:
+        """Full-graph EdgeSet for fused engines, built on first use — the
+        chromatic engine only ever uses its per-color subsets and must not
+        pay for (or hold) the full-graph metadata twice."""
+        if self.use_fused and self._full_edges_cache is None:
+            st = self.structure
+            self._full_edges_cache = EdgeSet.build(
+                st.senders, st.receivers, st.n_vertices)
+        return self._full_edges_cache if self.use_fused else None
 
     # -- to be provided by subclasses ---------------------------------------
     def _step(self, state: EngineState) -> EngineState:
@@ -169,6 +260,7 @@ class Engine:
                 rec = dict(trace_fn(state))
                 rec.setdefault("step", int(state.step_index))
                 rec.setdefault("total_updates", int(state.total_updates))
+                rec.setdefault("edges_touched", int(state.edges_touched))
                 trace.append(rec)
         return state, trace
 

@@ -17,7 +17,7 @@ them under a distance-2 coloring / distance-2 exclusion instead.
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple, Optional
+from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -25,6 +25,80 @@ import jax.numpy as jnp
 from repro.core.consistency import Consistency
 
 Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+# Fuseable gather registry (DESIGN.md §3.5)
+# ---------------------------------------------------------------------------
+
+#: The registry of gather shapes the fused GAS kernel can compute in-kernel.
+#: Every kind reduces to ``acc[v] = Σ_{u→v} w_e · feature(u)`` for a
+#: per-vertex feature table and a per-edge scalar weight — the pieces the
+#: kernel consumes without ever materializing the [E, D] messages:
+#:   weighted_src_sum      w_e = ``weight(edge_data)``
+#:   src_copy              w_e = 1
+#:   degree_normalized_src w_e = 1 / max(out_degree(u), 1)
+FUSED_GATHER_KINDS = ("weighted_src_sum", "src_copy", "degree_normalized_src")
+
+
+class FusedGather(NamedTuple):
+    """Declares one ``gather`` output leaf as a registry op.
+
+    ``feature`` maps vertex data to a per-vertex array ``[N, ...]`` (any
+    trailing shape — it is flattened for the kernel and restored on the
+    accumulator); ``weight`` maps edge data to a per-edge scalar ``[E]``
+    (``weighted_src_sum`` only).  The declaration must compute exactly what
+    ``gather`` computes — engines fuse it, tests cross-check the two.
+    """
+
+    kind: str
+    feature: Callable[[Pytree], jnp.ndarray]
+    weight: Optional[Callable[[Pytree], jnp.ndarray]] = None
+
+
+def fused_gather_leaves(program) -> Optional[Tuple[list, Any]]:
+    """Flattens ``program.fused_gather()`` into (leaves, treedef), validating
+    each leaf against the registry; None when the program stays dense."""
+    spec = program.fused_gather()
+    if spec is None:
+        return None
+    leaves, treedef = jax.tree.flatten(
+        spec, is_leaf=lambda x: isinstance(x, FusedGather))
+    for leaf in leaves:
+        if not isinstance(leaf, FusedGather):
+            raise TypeError(f"fused_gather leaves must be FusedGather, "
+                            f"got {type(leaf).__name__}")
+        if leaf.kind not in FUSED_GATHER_KINDS:
+            raise ValueError(f"unknown fused gather kind {leaf.kind!r} "
+                             f"(registry: {FUSED_GATHER_KINDS})")
+        if leaf.kind == "weighted_src_sum" and leaf.weight is None:
+            raise ValueError("weighted_src_sum needs a weight fn")
+    return leaves, treedef
+
+
+def supports_fused_gather(program) -> bool:
+    """The fallback rule: a program runs the fused GAS path iff it declares
+    registry gathers, ⊕ is sum, and it never writes adjacent edges (edge
+    writes both mutate the weights' source data and need the dense ctx)."""
+    return (program.combiner == "sum" and not program.has_edge_out
+            and program.fused_gather() is not None)
+
+
+def fused_edge_weight(leaf: FusedGather, edge_data: Pytree, n_edges: int,
+                      src_deg: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Per-edge scalar weight [E] for a registry leaf (f32).
+
+    ``src_deg`` (out-degree of each edge's source) is only consulted by
+    ``degree_normalized_src`` — callers materialize it lazily so the common
+    weighted/copy kinds never pay an O(E) degree gather."""
+    if leaf.kind == "weighted_src_sum":
+        return leaf.weight(edge_data).astype(jnp.float32)
+    if leaf.kind == "src_copy":
+        return jnp.ones(n_edges, jnp.float32)
+    if leaf.kind == "degree_normalized_src":
+        assert src_deg is not None, "degree_normalized_src needs src_deg"
+        return 1.0 / jnp.maximum(src_deg.astype(jnp.float32), 1.0)
+    raise ValueError(leaf.kind)
 
 
 class EdgeCtx(NamedTuple):
@@ -61,6 +135,14 @@ class VertexProgram:
     def gather(self, ctx: EdgeCtx) -> Pytree:
         """Per-edge message; combined with ``combiner`` into acc[dst]."""
         raise NotImplementedError
+
+    def fused_gather(self) -> Optional[Pytree]:
+        """Optional: declare ``gather`` as a pytree of ``FusedGather``
+        registry ops (same tree structure as the gather output).  Engines
+        then run the fused GAS kernel path — per-edge messages are computed
+        inside the kernel and inactive row blocks are skipped — instead of
+        materializing ``edge_ctx``.  None (default) keeps the dense path."""
+        return None
 
     def zero_acc(self, vertex_data: Pytree) -> Pytree:
         """Accumulator for isolated vertices (segment_sum default: zeros)."""

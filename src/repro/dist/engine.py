@@ -39,10 +39,14 @@ from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.core.coloring import coloring_for
-from repro.core.graph import DataGraph, segment_combine
+from repro.core.graph import DataGraph, csr_block_offsets, segment_combine
 from repro.dist.compat import shard_map
 from repro.core.partition import overpartition, place_vertices
-from repro.core.update import EdgeCtx, VertexProgram, masked_update
+from repro.core.update import (EdgeCtx, VertexProgram, fused_edge_weight,
+                               fused_gather_leaves, masked_update,
+                               supports_fused_gather)
+from repro.kernels.gas.gas import EDGE_BLOCK, ROW_BLOCK
+from repro.kernels.gas.ops import EdgeSet, active_row_blocks, gather_combine
 
 Pytree = Any
 
@@ -252,6 +256,8 @@ class DistributedEngine:
         method: str = "hash",
         tolerance: float = 1e-3,
         seed: int = 0,
+        use_fused: Optional[bool] = None,
+        gas_interpret: Optional[bool] = None,
     ):
         if getattr(program, "sync_ops", None):
             raise NotImplementedError("sync ops on the shard_map path")
@@ -279,6 +285,45 @@ class DistributedEngine:
         # pads every machine to the same shapes, so that is fine.
         self.layout = _build_layout(
             graph, np.asarray(machine_of, np.int32), S, use_rev)
+
+        # Fused GAS local compute (DESIGN.md §3.5): per-machine CSR block
+        # metadata over the *local* edge rows.  Within a machine the real
+        # edge rows keep the global receiver-sorted order and local receiver
+        # ids are monotone in global ids, so the local receiver array is
+        # sorted; pad rows route past every row block.  Same knobs as the
+        # shared-memory engines: use_fused=False forces the seed dense
+        # shard_map body, gas_interpret=True runs the kernel body on CPU.
+        fusable = supports_fused_gather(program)
+        self._use_fused = fusable if use_fused is None \
+            else bool(use_fused) and fusable
+        self._gas_interpret = gas_interpret
+        self._gas_max_eblk = 0
+        if self._use_fused:
+            self._gas_leaves, self._gas_treedef = fused_gather_leaves(program)
+            lay = self.layout
+            e_loc, n_loc = lay.e_loc, lay.n_loc
+            e_pad = max(-(-e_loc // EDGE_BLOCK), 1) * EDGE_BLOCK
+            rl = lay.tables["receivers_local"].reshape(S, e_loc)
+            em = lay.tables["edge_mask"].reshape(S, e_loc)
+            sl = lay.tables["senders_local"].reshape(S, e_loc)
+            pad_r = np.int32(n_loc + ROW_BLOCK)
+            rk = np.pad(np.where(em, rl, pad_r).astype(np.int32),
+                        ((0, 0), (0, e_pad - e_loc)), constant_values=pad_r)
+            sk = np.pad(np.where(em, sl, 0).astype(np.int32),
+                        ((0, 0), (0, e_pad - e_loc)))
+            starts, neblks = [], []
+            for m in range(S):
+                assert (np.diff(rk[m]) >= 0).all(), \
+                    "local receivers must be sorted for the GAS kernel"
+                st_m, ne_m, mx = csr_block_offsets(
+                    rk[m], n_loc, ROW_BLOCK, EDGE_BLOCK)
+                starts.append(st_m)
+                neblks.append(ne_m)
+                self._gas_max_eblk = max(self._gas_max_eblk, mx)
+            lay.tables["gas_send"] = sk.reshape(-1)
+            lay.tables["gas_recv"] = rk.reshape(-1)
+            lay.tables["gas_start"] = np.concatenate(starts).astype(np.int32)
+            lay.tables["gas_neblk"] = np.concatenate(neblks).astype(np.int32)
 
         if colors is None:
             colors = coloring_for(st, program.consistency)
@@ -347,6 +392,11 @@ class DistributedEngine:
         use_rev = lay.has_rev
         ax, tol = self.axis, self.tolerance
         num_colors = self.num_colors
+        use_fused = self._use_fused
+        if use_fused:
+            gas_leaves, gas_treedef = self._gas_leaves, self._gas_treedef
+            gas_max_eblk = self._gas_max_eblk
+            gas_interpret = self._gas_interpret
 
         def exchange(payload, changed, send_idx, send_mask, budget):
             """Versioned all_to_all: ship only rows whose vertex/edge
@@ -381,37 +431,64 @@ class DistributedEngine:
             for c in range(num_colors):
                 v_all = jax.tree.map(
                     lambda o, g: jnp.concatenate([o, g], 0), vown, vghost)
-                if use_rev:
-                    e_all = jax.tree.map(
-                        lambda o, g: jnp.concatenate([o, g], 0), edata,
-                        eghost)
-                    rp = jnp.maximum(tb["rev_local"], 0)
-                    has_rev = tb["rev_local"] >= 0
-
-                    def _rev(x):
-                        y = x[rp]
-                        m = has_rev.reshape((-1,) + (1,) * (y.ndim - 1))
-                        return jnp.where(m, y, jnp.zeros_like(y))
-
-                    rev_edata = jax.tree.map(_rev, e_all)
-                else:
-                    # program declared it never reads ctx.rev_edata
-                    rev_edata = jax.tree.map(jnp.zeros_like, edata)
-
-                ctx = EdgeCtx(
-                    edata=edata,
-                    rev_edata=rev_edata,
-                    src=jax.tree.map(lambda x: x[sl], v_all),
-                    dst=jax.tree.map(lambda x: x[rl], vown),
-                    src_deg=tb["src_deg_e"],
-                    dst_deg=tb["dst_deg_e"])
-                msgs = prog.gather(ctx)
-                acc = segment_combine(msgs, recv_idx, n_loc, prog.combiner,
-                                      indices_are_sorted=False)
-
                 active = jnp.logical_and(
                     tb["own_mask"],
                     jnp.logical_and(tb["colors_own"] == c, prio > tol))
+
+                if use_fused:
+                    # fused local compute: per-leaf feature table over
+                    # own+ghost rows, per-edge scalar weight, one GAS
+                    # gather⊕combine per leaf — no [e_loc, D] messages, and
+                    # row blocks with no scheduled own vertex are skipped.
+                    blk_active = active_row_blocks(active)
+                    es = EdgeSet(
+                        n_vertices=n_loc, n_edges=e_loc,
+                        senders=tb["gas_send"], receivers=tb["gas_recv"],
+                        eblk_start=tb["gas_start"], n_eblk=tb["gas_neblk"],
+                        max_eblk=gas_max_eblk)
+                    accs = []
+                    for leaf in gas_leaves:
+                        feat = leaf.feature(v_all)
+                        trailing = feat.shape[1:]
+                        w = fused_edge_weight(leaf, edata, e_loc,
+                                              tb["src_deg_e"])
+                        w = jnp.where(tb["edge_mask"], w, 0.0)
+                        a = gather_combine(
+                            feat.reshape(feat.shape[0], -1), w, es,
+                            block_active=blk_active,
+                            interpret=gas_interpret)
+                        accs.append(a.reshape((n_loc,) + trailing))
+                    acc = jax.tree.unflatten(gas_treedef, accs)
+                else:
+                    if use_rev:
+                        e_all = jax.tree.map(
+                            lambda o, g: jnp.concatenate([o, g], 0), edata,
+                            eghost)
+                        rp = jnp.maximum(tb["rev_local"], 0)
+                        has_rev = tb["rev_local"] >= 0
+
+                        def _rev(x):
+                            y = x[rp]
+                            m = has_rev.reshape((-1,) + (1,) * (y.ndim - 1))
+                            return jnp.where(m, y, jnp.zeros_like(y))
+
+                        rev_edata = jax.tree.map(_rev, e_all)
+                    else:
+                        # program declared it never reads ctx.rev_edata
+                        rev_edata = jax.tree.map(jnp.zeros_like, edata)
+
+                    ctx = EdgeCtx(
+                        edata=edata,
+                        rev_edata=rev_edata,
+                        src=jax.tree.map(lambda x: x[sl], v_all),
+                        dst=jax.tree.map(lambda x: x[rl], vown),
+                        src_deg=tb["src_deg_e"],
+                        dst_deg=tb["dst_deg_e"])
+                    msgs = prog.gather(ctx)
+                    acc = segment_combine(msgs, recv_idx, n_loc,
+                                          prog.combiner,
+                                          indices_are_sorted=False)
+
                 new_v, residual = prog.apply(vown, acc, None)
                 vown = masked_update(vown, new_v, active)
                 contrib = jnp.where(

@@ -1,0 +1,3 @@
+from repro.kernels.gas.ops import EdgeSet, active_row_blocks, gather_combine
+
+__all__ = ["EdgeSet", "active_row_blocks", "gather_combine"]

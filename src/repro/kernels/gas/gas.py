@@ -1,0 +1,152 @@
+"""Pallas TPU kernel: fused gather⊕combine (GAS) with active-block skipping.
+
+The engines' hot path (paper Sec. 3.2/4.2) is ``acc[v] = ⊕_{u→v} w_e ·
+f(u)``: gather a per-edge message from the source vertex, ⊕-combine into the
+receiver.  The dense path materializes the ``[E, D]`` messages array in HBM
+(plus the src/dst/rev views of ``edge_ctx``); this kernel fuses the whole
+chain so the messages only ever exist as one ``[EDGE_BLOCK, D]`` VMEM tile:
+
+  - edges are receiver-sorted (the data graph invariant), so each
+    ``ROW_BLOCK``-row output block owns a *contiguous* edge range — the
+    per-row-block edge-block offsets are scalar-prefetch data
+    (``core/graph.py:csr_block_offsets``, the segsum pattern);
+  - the source-feature gather is the embedding_bag idiom: the ``[N, D]``
+    per-vertex feature table stays in HBM (``memory_space=ANY``); sender ids
+    are scalar-prefetched and each edge's feature row moves to VMEM via an
+    explicit ``make_async_copy`` DMA, double-buffered two-deep;
+  - the per-edge message is formed *in VMEM* (``w[:, None] * rows``) and
+    ⊕-combined by the one-hot MXU matmul of the segsum kernel
+    (``onehot[RB, EB] @ msgs[EB, D]``);
+  - an **active-block bitmap** (scalar prefetch, derived from the scheduler
+    mask) skips the gather/DMA/matmul for row blocks with no scheduled
+    vertex: a color-step touching 1% of vertices reads ~1% of edges.  The
+    accumulator init and flush still run, so skipped blocks emit exact
+    zeros (their rows are masked out downstream by ``masked_update``).
+
+VMEM per step: msgs EB*D*4 + onehot RB*EB*4 + acc RB*D*4 ≈ 0.9 MB at
+(RB, EB, D) = (128, 512, 128) — the feature width is kept un-tiled (one
+block spans the padded D), which bounds supported D at MAX_FEAT (wide-D
+programs keep the dense path; registry programs are all ≤ 256).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+ROW_BLOCK = 128
+EDGE_BLOCK = 512
+FEAT_ALIGN = 128
+MAX_FEAT = 1024     # widest padded feature the un-tiled layout supports
+
+
+def _kernel(snd_ref, start_ref, neblk_ref, act_ref,   # scalar prefetch
+            feat_hbm,                                 # ANY [N, d_pad]
+            w_ref, recv_ref,                          # VMEM blocks [EB]
+            out_ref,                                  # VMEM block [RB, d_pad]
+            msg_ref, acc_ref, sem):                   # scratch
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    n_eblk = neblk_ref[i]
+    base = (start_ref[i] + jnp.minimum(j, n_eblk - 1)) * EDGE_BLOCK
+
+    @pl.when((act_ref[i] > 0) & (j < n_eblk))
+    def _gather_combine():
+        # Stage the EDGE_BLOCK source-feature rows: HBM → msg_ref, two-deep
+        # DMA pipeline (issue row r+1's copy while waiting on row r).
+        def issue(r):
+            idx = snd_ref[base + r]
+            return pltpu.make_async_copy(
+                feat_hbm.at[pl.ds(idx, 1), :],
+                msg_ref.at[pl.ds(r, 1), :],
+                sem.at[jax.lax.rem(r, 2)])
+
+        issue(0).start()
+
+        def body(r, _):
+            @pl.when(r + 1 < EDGE_BLOCK)
+            def _prefetch():
+                issue(r + 1).start()
+
+            issue(r).wait()  # reconstructs the same sem to wait on
+            return ()
+
+        jax.lax.fori_loop(0, EDGE_BLOCK, body, (), unroll=False)
+
+        # message formation (VPU) + ⊕-combine (one-hot MXU matmul); padding
+        # edges carry w == 0 and receiver >= n_rows + ROW_BLOCK, so they
+        # contribute exactly nothing through either factor.
+        w = w_ref[...].astype(jnp.float32)                    # [EB]
+        msgs = msg_ref[...].astype(jnp.float32) * w[:, None]  # [EB, d_pad]
+        local = recv_ref[...] - i * ROW_BLOCK
+        valid = (local >= 0) & (local < ROW_BLOCK)
+        rows = jax.lax.broadcasted_iota(jnp.int32, (ROW_BLOCK, EDGE_BLOCK), 0)
+        onehot = jnp.where(
+            valid[None, :] & (rows == local[None, :]), 1.0, 0.0)
+        acc_ref[...] += jax.lax.dot_general(
+            onehot, msgs, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(j == jnp.maximum(n_eblk, 1) - 1)
+    def _flush():
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+
+
+def gas_gather_combine_pallas(
+    feat: jnp.ndarray,         # [N, D] source-feature table (HBM-resident)
+    weights: jnp.ndarray,      # [E_pad] f32, pad rows 0
+    senders: jnp.ndarray,      # [E_pad] i32, pad rows 0
+    receivers: jnp.ndarray,    # [E_pad] i32 sorted, pad rows >= n + ROW_BLOCK
+    n_rows: int,
+    eblk_start: jnp.ndarray,   # [n_row_blocks] i32 (host or traced)
+    n_eblk: jnp.ndarray,       # [n_row_blocks] i32, entries >= 1
+    max_eblk: int,
+    block_active: jnp.ndarray,  # [n_row_blocks] i32 bitmap
+    interpret: bool = False,
+) -> jnp.ndarray:
+    E, = weights.shape
+    assert E % EDGE_BLOCK == 0, (E,)
+    N, D = feat.shape
+    d_pad = max(-(-D // FEAT_ALIGN) * FEAT_ALIGN, FEAT_ALIGN)
+    assert d_pad <= MAX_FEAT, (d_pad, "wide features keep the dense path")
+    if d_pad != D:
+        feat = jnp.pad(feat, ((0, 0), (0, d_pad - D)))
+    n_pad_rows = -(-n_rows // ROW_BLOCK) * ROW_BLOCK
+    grid = (n_pad_rows // ROW_BLOCK, max_eblk)
+
+    out = pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=4,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec(memory_space=pltpu.ANY),   # feat stays in HBM
+                pl.BlockSpec(
+                    (EDGE_BLOCK,),
+                    lambda i, j, snd, s, n, a: (s[i] + jnp.minimum(j, n[i] - 1),)),
+                pl.BlockSpec(
+                    (EDGE_BLOCK,),
+                    lambda i, j, snd, s, n, a: (s[i] + jnp.minimum(j, n[i] - 1),)),
+            ],
+            out_specs=pl.BlockSpec((ROW_BLOCK, d_pad),
+                                   lambda i, j, snd, s, n, a: (i, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((EDGE_BLOCK, d_pad), feat.dtype),   # staged msgs
+                pltpu.VMEM((ROW_BLOCK, d_pad), jnp.float32),   # accumulator
+                pltpu.SemaphoreType.DMA((2,)),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((n_pad_rows, d_pad), feat.dtype),
+        interpret=interpret,
+    )(senders.astype(jnp.int32), eblk_start.astype(jnp.int32),
+      n_eblk.astype(jnp.int32), block_active.astype(jnp.int32),
+      feat, weights.astype(jnp.float32), receivers.astype(jnp.int32))
+    return out[:n_rows, :D]

@@ -1,0 +1,132 @@
+"""Dispatch layer for the fused gather⊕combine (GAS) kernel.
+
+``EdgeSet`` packages a (possibly color-restricted) receiver-sorted edge
+subset with its padded device arrays and the scalar-prefetch CSR block
+metadata; engines build them once per structure (or once per color) on host.
+``gather_combine`` then dispatches one fused ``acc[v] = Σ w_e · feat[u]``:
+
+    TPU            → Pallas kernel (gas.py)
+    CPU, tests     → Pallas kernel in interpret mode (``interpret=True``)
+    CPU, production→ jnp oracle (ref.py)
+
+The active-block bitmap (``active_row_blocks`` of the scheduler mask) is
+honored identically by both targets: inactive row blocks produce exact
+zeros and — on the kernel path — cost no HBM reads.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.gas.gas import (EDGE_BLOCK, ROW_BLOCK,
+                                   gas_gather_combine_pallas)
+from repro.kernels.gas.ref import gather_combine_ref
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class EdgeSet:
+    """A receiver-sorted edge subset prepared for the GAS kernel.
+
+    Padded to a multiple of ``EDGE_BLOCK`` (always >= one block, so E == 0
+    degenerates to one all-padding block): pad senders are 0, pad weights 0,
+    pad receivers ``n_vertices + ROW_BLOCK`` (outside every row block).
+    ``perm`` maps the subset back into the *full* edge arrays so per-edge
+    quantities (weights) evaluated on full edge data can be sliced in-trace.
+    ``block_counts[i]`` is the number of real subset edges whose receiver
+    lies in row block i — the honest edges-touched accounting unit.
+    """
+
+    n_vertices: int
+    n_edges: int                      # real (unpadded) subset size
+    senders: jnp.ndarray              # [E_pad] i32
+    receivers: jnp.ndarray            # [E_pad] i32, non-decreasing
+    eblk_start: jnp.ndarray           # [n_row_blocks] i32
+    n_eblk: jnp.ndarray               # [n_row_blocks] i32 (>= 1)
+    max_eblk: int
+    perm: Optional[jnp.ndarray] = None        # [E] into full edge arrays
+    block_counts: Optional[jnp.ndarray] = None  # [n_row_blocks] i32
+
+    @property
+    def n_row_blocks(self) -> int:
+        return max(-(-self.n_vertices // ROW_BLOCK), 1)
+
+    @staticmethod
+    def build(
+        senders: np.ndarray,
+        receivers: np.ndarray,
+        n_vertices: int,
+        perm: Optional[np.ndarray] = None,
+    ) -> "EdgeSet":
+        # deferred: core.__init__ imports the engines, which import this
+        # module — a top-level import back into repro.core would cycle
+        from repro.core.graph import csr_block_offsets
+
+        senders = np.asarray(senders, np.int32)
+        receivers = np.asarray(receivers, np.int32)
+        assert senders.shape == receivers.shape and senders.ndim == 1
+        if receivers.size:
+            assert (np.diff(receivers) >= 0).all(), "receivers must be sorted"
+        E = int(senders.size)
+        e_pad = max(-(-E // EDGE_BLOCK), 1) * EDGE_BLOCK
+        pad_r = np.int32(n_vertices + ROW_BLOCK)
+        s = np.concatenate([senders, np.zeros(e_pad - E, np.int32)])
+        r = np.concatenate([receivers, np.full(e_pad - E, pad_r, np.int32)])
+        start, n_eblk, max_eblk = csr_block_offsets(
+            r, n_vertices, ROW_BLOCK, EDGE_BLOCK)
+        nblk = start.shape[0]
+        counts = np.bincount(
+            np.minimum(receivers // ROW_BLOCK, nblk - 1), minlength=nblk
+        ).astype(np.int32) if E else np.zeros(nblk, np.int32)
+        return EdgeSet(
+            n_vertices=int(n_vertices), n_edges=E,
+            senders=jnp.asarray(s), receivers=jnp.asarray(r),
+            eblk_start=jnp.asarray(start), n_eblk=jnp.asarray(n_eblk),
+            max_eblk=max_eblk,
+            perm=None if perm is None else jnp.asarray(perm, jnp.int32),
+            block_counts=jnp.asarray(counts))
+
+
+def active_row_blocks(mask: jnp.ndarray,
+                      row_block: int = ROW_BLOCK) -> jnp.ndarray:
+    """[N] scheduler mask → [n_row_blocks] i32 bitmap (1 ⇔ any active)."""
+    n = mask.shape[0]
+    nblk = max(-(-n // row_block), 1)
+    m = jnp.pad(mask.astype(jnp.int32), (0, nblk * row_block - n))
+    return m.reshape(nblk, row_block).max(axis=1)
+
+
+def gather_combine(
+    feat: jnp.ndarray,             # [N, D] per-vertex source features
+    weights: jnp.ndarray,          # [E] or [E_pad] per-edge scalars
+    edges: EdgeSet,
+    *,
+    block_active: Optional[jnp.ndarray] = None,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Fused ``acc[v] = Σ_{u→v} w_e · feat[u]`` over ``edges`` → [N, D].
+
+    ``interpret`` falsy (None/False) is the production dispatch: compiled
+    kernel on TPU, oracle elsewhere.  ``interpret=True`` forces the kernel
+    body through the Pallas interpreter on any backend (how tests validate
+    it on CPU).
+    """
+    assert feat.ndim == 2, feat.shape
+    e_pad = edges.senders.shape[0]
+    w = weights.astype(jnp.float32)
+    if w.shape[0] != e_pad:
+        w = jnp.pad(w, (0, e_pad - w.shape[0]))
+    if block_active is None:
+        block_active = jnp.ones((edges.n_row_blocks,), jnp.int32)
+
+    if not interpret and jax.default_backend() != "tpu":
+        return gather_combine_ref(
+            feat, w, edges.senders, edges.receivers, edges.n_vertices,
+            block_active)
+    return gas_gather_combine_pallas(
+        feat, w, edges.senders, edges.receivers, edges.n_vertices,
+        edges.eblk_start, edges.n_eblk, edges.max_eblk, block_active,
+        interpret=bool(interpret))

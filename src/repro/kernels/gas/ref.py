@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the fused gather⊕combine (GAS) kernel.
+
+This *is* the production CPU path (the issue's dispatch rule: TPU → Pallas,
+CPU → oracle) and the ground truth the interpret-mode kernel tests validate
+against.  It deliberately materializes the ``[E, D]`` messages array — the
+very thing the kernel avoids — which is fine on CPU and makes it an
+independent reference.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gas.gas import ROW_BLOCK
+
+
+def gather_combine_ref(
+    feat: jnp.ndarray,          # [N, D] per-vertex source features
+    weights: jnp.ndarray,       # [E] per-edge scalar (pad rows 0)
+    senders: jnp.ndarray,       # [E] i32 (pad rows 0)
+    receivers: jnp.ndarray,     # [E] i32 sorted; entries >= n are padding
+    n_rows: int,
+    block_active: Optional[jnp.ndarray] = None,  # [n_row_blocks] bitmap
+    row_block: int = ROW_BLOCK,
+) -> jnp.ndarray:
+    """acc[v] = Σ_{e: recv(e)=v} w_e · feat[send(e)], f32 accumulation.
+
+    Rows in inactive row blocks are zeroed exactly as the kernel's
+    active-block skipping produces them, so the two dispatch targets are
+    interchangeable inside an engine step.
+    """
+    w = weights.astype(jnp.float32)
+    ok = receivers < n_rows
+    w = jnp.where(ok, w, 0.0)
+    r = jnp.clip(receivers, 0, max(n_rows - 1, 0))
+    msgs = w[:, None] * feat[senders].astype(jnp.float32)      # the [E, D]
+    acc = jax.ops.segment_sum(msgs, r, num_segments=n_rows,
+                              indices_are_sorted=True)
+    if block_active is not None:
+        act = jnp.repeat(block_active.astype(bool), row_block)[:n_rows]
+        acc = jnp.where(act[:, None], acc, 0.0)
+    return acc.astype(feat.dtype)

@@ -1,8 +1,8 @@
 """jit'd wrapper for the sorted segment-sum kernel.
 
-On TPU, dispatches to the Pallas kernel; elsewhere (this CPU container)
-falls back to the jnp oracle.  ``interpret=True`` forces the kernel body to
-execute in Python on CPU (how tests validate it)."""
+Dispatch rule (same as kernels/gas): TPU → compiled Pallas kernel;
+``interpret=True`` → Pallas kernel through the interpreter (how tests
+validate it on CPU); otherwise (CPU production) → the jnp oracle."""
 from __future__ import annotations
 
 from functools import partial
@@ -29,20 +29,17 @@ def segment_sum_sorted(
     is static (paper Sec. 3.1), so this holds for every engine/GNN use.
     """
     receivers_np = np.asarray(receivers)
+    if not interpret and jax.default_backend() != "tpu":
+        # production CPU path: the oracle (interpret mode is for tests)
+        return segment_sum_sorted_ref(msgs, jnp.asarray(receivers_np), n_rows)
+
     E, D = msgs.shape
     e_pad = k.pl.cdiv(E, k.EDGE_BLOCK) * k.EDGE_BLOCK
     if e_pad != E:
-        msgs = jnp.pad(msgs, ((0, 0), (0, 0)) if False else
-                       ((0, e_pad - E), (0, 0)))
+        msgs = jnp.pad(msgs, ((0, e_pad - E), (0, 0)))
         receivers_np = np.concatenate(
             [receivers_np,
              np.full(e_pad - E, n_rows + k.ROW_BLOCK, np.int32)])
-
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
-    if interpret and jax.default_backend() != "tpu":
-        # production CPU path: oracle (interpret mode is for tests)
-        pass
 
     start, n_eblk, max_eblk = k.block_offsets(
         receivers_np, n_rows, e_pad)

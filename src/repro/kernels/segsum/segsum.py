@@ -71,13 +71,20 @@ def _kernel(eblk_start_ref, n_eblk_ref,      # scalar prefetch [n_row_blocks]
 
 def block_offsets(receivers: np.ndarray, n_rows: int,
                   n_edges: int) -> Tuple[np.ndarray, np.ndarray, int]:
-    """Host-side: per output row block, (first edge block, #edge blocks)."""
+    """Host-side: per output row block, (first edge block, #edge blocks).
+
+    Clamped to the real edge-block range: a row block beginning past the
+    last edge (edge_pos == n_edges with n_edges an exact EDGE_BLOCK
+    multiple) must not index one block past the end — the clamped block's
+    receivers fall outside the row block and contribute nothing."""
+    n_edge_blocks = max(pl.cdiv(n_edges, EDGE_BLOCK), 1)
     n_row_blocks = pl.cdiv(n_rows, ROW_BLOCK)
     bounds = np.arange(n_row_blocks + 1) * ROW_BLOCK
     edge_pos = np.searchsorted(receivers, bounds)
-    start = edge_pos[:-1] // EDGE_BLOCK
-    end = np.maximum(pl.cdiv(edge_pos[1:], EDGE_BLOCK), start + 1)
-    n_eblk = (end - start).astype(np.int32)
+    start = np.minimum(edge_pos[:-1] // EDGE_BLOCK, n_edge_blocks - 1)
+    end = np.minimum(np.maximum(pl.cdiv(edge_pos[1:], EDGE_BLOCK), start + 1),
+                     n_edge_blocks)
+    n_eblk = np.maximum(end - start, 1).astype(np.int32)
     return start.astype(np.int32), n_eblk, int(n_eblk.max(initial=1))
 
 
