@@ -17,6 +17,7 @@ import time
 
 from benchmarks import gas_bench
 from benchmarks import paper_figures as pf
+from benchmarks import pipeline_bench
 
 HARNESSES = {
     "fig1a": pf.fig1a_async_vs_sync_convergence,
@@ -28,6 +29,7 @@ HARNESSES = {
     "fig9a": pf.fig9a_dynamic_vs_static_als,
     "table2": pf.table2_throughput,
     "gas": gas_bench.gas_microbenchmark,
+    "pipeline": pipeline_bench.pipeline_sweep,
 }
 
 

@@ -7,6 +7,9 @@ from repro.core.dynamic import DynamicEngine
 from repro.core.engine_base import Engine, EngineState, init_state
 from repro.core.graph import (DataGraph, GraphStructure, gather_scope,
                               scatter_to_neighbors, segment_combine)
+from repro.core.scheduler import (FifoScheduler, MultiQueueScheduler,
+                                  PriorityScheduler, Scheduler,
+                                  SweepScheduler)
 from repro.core.sequential import SequentialEngine
 from repro.core.snapshot import (AsyncSnapshotDriver, SnapshotState,
                                  SyncSnapshotDriver, init_snapshot,
@@ -18,9 +21,10 @@ from repro.core.update import (ApplyOut, EdgeCtx, FusedGather, VertexProgram,
 __all__ = [
     "ApplyOut", "AsyncSnapshotDriver", "BSPEngine", "ChromaticEngine",
     "ClusterModel", "Consistency", "DataGraph", "DynamicEngine", "EdgeCtx",
-    "Engine", "EngineState", "FnSyncOp", "FusedGather", "GraphStructure",
-    "SequentialEngine", "SimulatedCluster", "SnapshotState", "SyncOp",
-    "SyncSnapshotDriver", "VertexProgram", "gather_scope", "init_snapshot",
-    "init_state", "restore_engine_state", "scatter_to_neighbors",
-    "segment_combine", "supports_fused_gather",
+    "Engine", "EngineState", "FifoScheduler", "FnSyncOp", "FusedGather",
+    "GraphStructure", "MultiQueueScheduler", "PriorityScheduler",
+    "Scheduler", "SequentialEngine", "SimulatedCluster", "SnapshotState",
+    "SweepScheduler", "SyncOp", "SyncSnapshotDriver", "VertexProgram",
+    "gather_scope", "init_snapshot", "init_state", "restore_engine_state",
+    "scatter_to_neighbors", "segment_combine", "supports_fused_gather",
 ]

@@ -19,12 +19,13 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.engine_base import (Engine, EngineState, apply_phase,
-                                    schedule_phase)
+from repro.core.engine_base import Engine, EngineState
 
 
 class BSPEngine(Engine):
-    """Synchronous Jacobi execution of a VertexProgram.
+    """Synchronous Jacobi execution of a VertexProgram: the scheduler is a
+    single-color sweep (``Engine``'s default), so every scheduled vertex
+    updates simultaneously against the previous barrier's data.
 
     Serializability note: BSP is *not* serializable for programs whose
     correctness needs edge consistency (paper Fig. 1(d)); it corresponds to
@@ -40,22 +41,3 @@ class BSPEngine(Engine):
             for x in jax.tree.leaves(state.graph.vertex_data))
         deg = jnp.asarray(self.structure.out_degree)
         return jnp.sum(jnp.where(active, deg, 0)) * vbytes
-
-    def _step(self, state: EngineState) -> EngineState:
-        prev_vdata = state.graph.vertex_data
-        mask = state.prio > self.tolerance
-        # Jacobi: gather/apply against the previous barrier's data for ALL
-        # active vertices at once (single color = vertex consistency).
-        graph, residual, et = apply_phase(
-            self.program, state.graph, mask, state.globals_,
-            edges=self._full_edges, interpret=self.gas_interpret)
-        prio = schedule_phase(self.program, self.structure, state.prio, mask,
-                              residual)
-        state = state.replace(
-            graph=graph,
-            prio=prio,
-            update_count=state.update_count + mask.astype(jnp.int32),
-            total_updates=state.total_updates + jnp.sum(mask.astype(jnp.int32)),
-            edges_touched=state.edges_touched + et,
-            step_index=state.step_index + 1)
-        return self._run_syncs(state, prev_vdata)

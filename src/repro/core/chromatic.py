@@ -24,21 +24,22 @@ from __future__ import annotations
 
 from typing import Optional, Sequence
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.coloring import coloring_for, verify_coloring
-from repro.core.consistency import Consistency
-from repro.core.engine_base import (Engine, EngineState, apply_phase,
-                                    schedule_phase)
+from repro.core.engine_base import Engine
 from repro.core.graph import DataGraph
+from repro.core.scheduler import SweepScheduler
 from repro.core.sync_op import SyncOp
 from repro.core.update import VertexProgram
 from repro.kernels.gas.ops import EdgeSet
 
 
 class ChromaticEngine(Engine):
+    """One engine step = one sweep, one ``SweepScheduler`` phase per color
+    (paper: T is drained color by color; the sync operation runs safely
+    between color-steps)."""
+
     def __init__(
         self,
         program: VertexProgram,
@@ -50,8 +51,6 @@ class ChromaticEngine(Engine):
         use_fused: Optional[bool] = None,
         gas_interpret: Optional[bool] = None,
     ):
-        super().__init__(program, graph, tolerance, sync_ops,
-                         use_fused=use_fused, gas_interpret=gas_interpret)
         if colors is None:
             colors = coloring_for(graph.structure, program.consistency)
         colors = np.asarray(colors, dtype=np.int32)
@@ -60,8 +59,13 @@ class ChromaticEngine(Engine):
             raise ValueError(
                 f"coloring does not satisfy {program.consistency} "
                 f"(radius {radius})")
-        self.colors = jnp.asarray(colors)
-        self.num_colors = int(colors.max()) + 1 if colors.size else 1
+        super().__init__(
+            program, graph, tolerance, sync_ops,
+            scheduler=SweepScheduler(program, graph.structure, tolerance,
+                                     colors),
+            use_fused=use_fused, gas_interpret=gas_interpret)
+        self.colors = self.scheduler.colors
+        self.num_colors = self.scheduler.num_phases
 
         self._color_edges: Optional[list] = None
         if self.use_fused:
@@ -74,28 +78,7 @@ class ChromaticEngine(Engine):
                     st.senders[idx], st.receivers[idx], st.n_vertices,
                     perm=idx))
 
-    def _step(self, state: EngineState) -> EngineState:
-        """One sweep = one color-step per color (paper: T is drained color by
-        color; the sync operation runs safely between color-steps)."""
-        graph, prio = state.graph, state.prio
-        count, total = state.update_count, state.total_updates
-        edges_t = state.edges_touched
-        prev_vdata = graph.vertex_data
-        glob = state.globals_
-
-        for c in range(self.num_colors):  # unrolled: num_colors is small
-            mask = jnp.logical_and(self.colors == c, prio > self.tolerance)
-            edges = self._color_edges[c] if self._color_edges else None
-            graph, residual, et = apply_phase(
-                self.program, graph, mask, glob, edges=edges,
-                interpret=self.gas_interpret)
-            prio = schedule_phase(self.program, self.structure, prio, mask,
-                                  residual)
-            count = count + mask.astype(jnp.int32)
-            total = total + jnp.sum(mask.astype(jnp.int32))
-            edges_t = edges_t + et
-
-        state = state.replace(
-            graph=graph, prio=prio, update_count=count, total_updates=total,
-            edges_touched=edges_t, step_index=state.step_index + 1)
-        return self._run_syncs(state, prev_vdata)
+    def _phase_edges(self, phase: int) -> Optional[EdgeSet]:
+        """Per-color edge range (DESIGN.md §3.5): a color-step streams only
+        the receiver-sorted edges whose receiver has that color."""
+        return self._color_edges[phase] if self._color_edges else None

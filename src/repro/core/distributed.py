@@ -148,7 +148,7 @@ class SimulatedCluster:
         clock = 0.0
         prev_counts = np.asarray(state.update_count)
         for i in range(max_steps):
-            if float(jnp.max(state.prio)) <= self.engine.tolerance:
+            if bool(self.engine.scheduler.done(state.sched, state.prio)):
                 break
             if sync_snapshot_at is not None and i == sync_snapshot_at:
                 # stop-the-world capture: advance the clock, no updates

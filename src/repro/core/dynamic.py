@@ -5,7 +5,7 @@ engine cannot: (a) **dynamically prioritized** scheduling and (b) latency
 hiding through a **pipeline** of in-flight lock requests of depth p.  Neither
 per-vertex readers-writer locks nor callback-chained RPC exist under XLA
 SPMD, so we adapt the *mechanism* while preserving the observable semantics
-(DESIGN.md §3.3):
+(DESIGN.md §3.3, §3.8):
 
   - The scheduler's priority queue becomes a priority array; each engine
     step executes the ``pipeline_length`` highest-priority scheduled
@@ -18,10 +18,15 @@ SPMD, so we adapt the *mechanism* while preserving the observable semantics
   - Serializability: lock acquisition in canonical order collapses, in the
     bulk-synchronous view, to one round of neighborhood arbitration: a
     selected vertex executes iff it holds the highest rank in its exclusion
-    neighborhood (distance 1 for edge consistency, distance 2 for full).
-    Losers keep their priority and retry next step — exactly a vertex whose
-    lock request is still queued in the pipeline.  ``serializable=False``
-    skips arbitration and races (used to reproduce Fig. 1(d)).
+    neighborhood (distance 1 for edge consistency, distance 2 for full,
+    none for vertex consistency).  Losers keep their priority and retry
+    next step — exactly a vertex whose lock request is still queued in the
+    pipeline.  ``serializable=False`` skips arbitration and races (used to
+    reproduce Fig. 1(d)).
+
+All of that machinery now lives in ``core/scheduler.py`` as the
+``PriorityScheduler``; this engine is the thin binding of it to the shared
+phase loop (the distributed twin is ``dist/locking.py``).
 """
 from __future__ import annotations
 
@@ -29,22 +34,12 @@ from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core.consistency import Consistency
-from repro.core.engine_base import (Engine, EngineState, apply_phase,
-                                    schedule_phase)
+from repro.core.engine_base import Engine, EngineState
 from repro.core.graph import DataGraph
+from repro.core.scheduler import PriorityScheduler
 from repro.core.sync_op import SyncOp
 from repro.core.update import VertexProgram
-
-
-def _neighbor_min(key: jnp.ndarray, senders, receivers, n: int) -> jnp.ndarray:
-    """min over in/out neighbors of ``key`` (symmetrized one-hop)."""
-    big = jnp.full((n,), jnp.inf, key.dtype)
-    m1 = jax.ops.segment_min(key[senders], receivers, n, indices_are_sorted=True)
-    m2 = jax.ops.segment_min(key[receivers], senders, n)
-    return jnp.minimum(jnp.minimum(m1, big), jnp.minimum(m2, big))
 
 
 class DynamicEngine(Engine):
@@ -60,65 +55,20 @@ class DynamicEngine(Engine):
         use_fused: Optional[bool] = None,
         gas_interpret: Optional[bool] = None,
     ):
-        super().__init__(program, graph, tolerance, sync_ops,
-                         use_fused=use_fused, gas_interpret=gas_interpret)
-        self.pipeline_length = int(min(pipeline_length, graph.n_vertices))
-        self.serializable = bool(serializable)
+        super().__init__(
+            program, graph, tolerance, sync_ops,
+            scheduler=PriorityScheduler(program, graph.structure, tolerance,
+                                        pipeline_length, serializable),
+            use_fused=use_fused, gas_interpret=gas_interpret)
+        self.pipeline_length = self.scheduler.pipeline_length
+        self.serializable = self.scheduler.serializable
 
-    # -- selection ------------------------------------------------------------
+    # -- selection (kept for accounting callers) ------------------------------
     def _select(self, prio: jnp.ndarray) -> jnp.ndarray:
-        """Top-k scheduled vertices, then lock arbitration (if serializable).
-
-        Rank (0 = highest priority, ties by lower vertex id — the paper's
-        canonical ordering (owner(v), v)) is the arbitration key; a selected
-        vertex wins iff no selected exclusion-neighbor has a smaller rank.
-        """
-        n = prio.shape[0]
-        k = self.pipeline_length
-        scheduled = prio > self.tolerance
-        masked = jnp.where(scheduled, prio, -jnp.inf)
-        _, top_idx = jax.lax.top_k(masked, k)
-        in_top = jnp.zeros(n, bool).at[top_idx].set(True)
-        selected = jnp.logical_and(in_top, scheduled)
-        if not self.serializable:
-            return selected
-
-        # rank key: position in the top-k list (exact, no float ties)
-        rank = jnp.full((n,), jnp.inf, jnp.float32)
-        ranks = jnp.arange(k, dtype=jnp.float32)
-        rank = rank.at[top_idx].set(jnp.where(
-            scheduled[top_idx], ranks, jnp.inf))
-
-        senders = jnp.asarray(self.structure.senders)
-        receivers = jnp.asarray(self.structure.receivers)
-        nb_min = _neighbor_min(rank, senders, receivers, n)
-        if self.program.consistency == Consistency.FULL:
-            # distance-2 exclusion: also beat the best rank two hops away
-            nb_min = jnp.minimum(
-                nb_min, _neighbor_min(nb_min, senders, receivers, n))
-        win = rank < nb_min  # strict: ranks are unique among selected
-        return jnp.logical_and(selected, win)
-
-    # -- step -----------------------------------------------------------------
-    def _step(self, state: EngineState) -> EngineState:
-        prev_vdata = state.graph.vertex_data
-        mask = self._select(state.prio)
-        # Fused GAS path when the program declares registry gathers: the
-        # top-k selection concentrates work, so active-block skipping is at
-        # its most effective here (k vertices → ≤ k row blocks of edges).
-        graph, residual, et = apply_phase(
-            self.program, state.graph, mask, state.globals_,
-            edges=self._full_edges, interpret=self.gas_interpret)
-        prio = schedule_phase(self.program, self.structure, state.prio, mask,
-                              residual)
-        state = state.replace(
-            graph=graph,
-            prio=prio,
-            update_count=state.update_count + mask.astype(jnp.int32),
-            total_updates=state.total_updates + jnp.sum(mask.astype(jnp.int32)),
-            edges_touched=state.edges_touched + et,
-            step_index=state.step_index + 1)
-        return self._run_syncs(state, prev_vdata)
+        """Top-k scheduled vertices, then lock arbitration (if serializable);
+        the fused GAS path benefits most here — top-k selection concentrates
+        work, so at most k row blocks of edges stay active."""
+        return self.scheduler.select((), prio)[0]
 
     # -- accounting (ghost-delta traffic, DESIGN.md §3.4) ----------------------
     def active_gather_bytes(self, state: EngineState) -> jnp.ndarray:

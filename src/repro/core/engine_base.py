@@ -1,25 +1,29 @@
 """Shared engine machinery (paper Sec. 3.3 execution model, Sec. 4.2 engines).
 
 ``EngineState`` is the distributed program state: the data graph, the
-scheduler T (a priority array — active ⇔ prio > tolerance), per-vertex
+scheduler T (a priority array — active ⇔ prio > tolerance, plus the
+scheduler's own pytree state for stateful schedulers like FIFO), per-vertex
 update counts (Fig. 1(b)) and the sync operation's global values.
 
-Engines implement ``step(state) -> state`` (jitted) and share ``run`` — a
-host loop with convergence tracing — plus ``run_while`` — a fully-jitted
-``lax.while_loop`` used by the dry-run path ("all vertices in T are
-eventually executed" is the only ordering requirement the paper imposes).
+An engine IS a scheduler choice (DESIGN.md §3.8): the base ``_step`` runs
+``scheduler.num_phases`` select → apply → reschedule phases and subclasses
+only pick the scheduler (BSP = single-color sweep, chromatic = color-range
+sweep, dynamic = prioritized pipeline) plus per-phase extras such as the
+chromatic per-color edge ranges.  ``run`` is the shared host loop with
+convergence tracing; ``run_while`` the fully-jitted ``lax.while_loop`` used
+by the dry-run path ("all vertices in T are eventually executed" is the
+only ordering requirement the paper imposes).
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core.graph import DataGraph, segment_combine, scatter_to_neighbors
+from repro.core.graph import DataGraph, segment_combine
+from repro.core.scheduler import Scheduler, SweepScheduler, reschedule_prio
 from repro.core.sync_op import SyncOp, run_syncs
 from repro.core.update import (VertexProgram, edge_ctx, fused_edge_weight,
                                fused_gather_leaves, masked_update,
@@ -39,6 +43,7 @@ class EngineState:
     total_updates: jnp.ndarray  # scalar i64-ish (i32 fine for tests)
     edges_touched: jnp.ndarray  # scalar i64-ish — gathered-edge accounting
     globals_: Pytree           # sync-op outputs readable by update fns
+    sched: Pytree = ()         # scheduler-private state (() if stateless)
 
     def replace(self, **kw) -> "EngineState":
         return dataclasses.replace(self, **kw)
@@ -49,6 +54,7 @@ def init_state(
     graph: DataGraph,
     initial_prio: Optional[jnp.ndarray] = None,
     sync_ops: Sequence[SyncOp] = (),
+    scheduler: Optional[Scheduler] = None,
 ) -> EngineState:
     n = graph.n_vertices
     prio = (jnp.asarray(initial_prio, jnp.float32) if initial_prio is not None
@@ -62,6 +68,7 @@ def init_state(
         total_updates=jnp.zeros((), jnp.int32),
         edges_touched=jnp.zeros((), jnp.int32),
         globals_=globals_,
+        sched=scheduler.init(prio) if scheduler is not None else (),
     )
 
 
@@ -162,24 +169,19 @@ def fused_apply_phase(
     return graph, residual, edges_touched
 
 
-def schedule_phase(
-    program: VertexProgram,
-    structure,
-    prio: jnp.ndarray,
-    mask: jnp.ndarray,
-    residual: jnp.ndarray,
-) -> jnp.ndarray:
-    """T ← (T \\ executed) ∪ T' — executed vertices consume their priority;
-    their priority contribution is scattered to neighbors (Alg. 1 pattern)."""
-    prio = jnp.where(mask, 0.0, prio)
-    if program.schedule_neighbors:
-        contrib = jnp.where(mask, program.priority(residual), 0.0)
-        prio = prio + scatter_to_neighbors(contrib, structure, "out")
-    return prio
+# Back-compat name: the reschedule rule now lives in the scheduler
+# subsystem (core/scheduler.py, DESIGN.md §3.8).
+schedule_phase = reschedule_prio
 
 
 class Engine:
-    """Base: subclasses define ``_step``; ``step`` is its jitted form.
+    """Base: an engine is a scheduler plus the shared phase loop.
+
+    ``_step`` runs ``scheduler.num_phases`` select → apply → reschedule
+    phases (``step`` is its jitted form); subclasses choose the scheduler —
+    pass one via ``scheduler=`` or override ``_make_scheduler`` — and may
+    override ``_phase_edges`` to hand each phase its own prepared
+    ``EdgeSet`` (the chromatic per-color edge ranges).
 
     ``use_fused`` selects the fused GAS gather⊕combine path (DESIGN.md §3.5)
     for programs that declare registry gathers: None (default) auto-enables
@@ -196,6 +198,7 @@ class Engine:
         tolerance: float = 1e-3,
         sync_ops: Sequence[SyncOp] = (),
         *,
+        scheduler: Optional[Scheduler] = None,
         use_fused: Optional[bool] = None,
         gas_interpret: Optional[bool] = None,
     ):
@@ -208,26 +211,67 @@ class Engine:
             else bool(use_fused) and fusable
         self.gas_interpret = gas_interpret
         self._full_edges_cache: Optional[EdgeSet] = None
+        self.scheduler = (scheduler if scheduler is not None
+                          else self._make_scheduler())
         self._jit_step = jax.jit(self._step)
+
+    def _make_scheduler(self) -> Scheduler:
+        """Default schedule when none is passed: a single-color sweep
+        (execute everything scheduled — the BSP/vertex-consistency case)."""
+        return SweepScheduler(self.program, self.structure, self.tolerance)
 
     @property
     def _full_edges(self) -> Optional[EdgeSet]:
         """Full-graph EdgeSet for fused engines, built on first use — the
         chromatic engine only ever uses its per-color subsets and must not
-        pay for (or hold) the full-graph metadata twice."""
+        pay for (or hold) the full-graph metadata twice.
+
+        First use usually happens while tracing ``_step``; without
+        ``ensure_compile_time_eval`` the cached index arrays would be that
+        trace's tracers and leak into any later retrace (``run_while``
+        after ``run``, or a second jit shape)."""
         if self.use_fused and self._full_edges_cache is None:
             st = self.structure
-            self._full_edges_cache = EdgeSet.build(
-                st.senders, st.receivers, st.n_vertices)
+            with jax.ensure_compile_time_eval():
+                self._full_edges_cache = EdgeSet.build(
+                    st.senders, st.receivers, st.n_vertices)
         return self._full_edges_cache if self.use_fused else None
 
-    # -- to be provided by subclasses ---------------------------------------
+    # -- the shared phase loop ------------------------------------------------
+    def _phase_edges(self, phase: int) -> Optional[EdgeSet]:
+        """Prepared EdgeSet for one phase (chromatic overrides per color)."""
+        return self._full_edges
+
     def _step(self, state: EngineState) -> EngineState:
-        raise NotImplementedError
+        prev_vdata = state.graph.vertex_data
+        graph, prio, sched = state.graph, state.prio, state.sched
+        count, total = state.update_count, state.total_updates
+        edges_t = state.edges_touched
+        glob = state.globals_
+
+        # unrolled: num_phases is 1 for all but the chromatic sweep, whose
+        # color count is small; the sync op runs safely between phases
+        for phase in range(self.scheduler.num_phases):
+            mask, sched = self.scheduler.select(sched, prio, phase)
+            graph, residual, et = apply_phase(
+                self.program, graph, mask, glob,
+                edges=self._phase_edges(phase), interpret=self.gas_interpret)
+            prio, sched = self.scheduler.reschedule(sched, prio, mask,
+                                                    residual)
+            count = count + mask.astype(jnp.int32)
+            total = total + jnp.sum(mask.astype(jnp.int32))
+            edges_t = edges_t + et
+
+        state = state.replace(
+            graph=graph, prio=prio, sched=sched, update_count=count,
+            total_updates=total, edges_touched=edges_t,
+            step_index=state.step_index + 1)
+        return self._run_syncs(state, prev_vdata)
 
     # -- shared driver --------------------------------------------------------
     def init(self, graph: DataGraph, initial_prio=None) -> EngineState:
-        return init_state(self.program, graph, initial_prio, self.sync_ops)
+        return init_state(self.program, graph, initial_prio, self.sync_ops,
+                          scheduler=self.scheduler)
 
     def step(self, state: EngineState) -> EngineState:
         return self._jit_step(state)
@@ -245,7 +289,8 @@ class Engine:
         max_steps: int = 100,
         trace_fn: Optional[Callable[[EngineState], Dict[str, float]]] = None,
     ) -> Tuple[EngineState, List[Dict[str, float]]]:
-        """Host loop: step until the scheduler empties (max prio ≤ tol).
+        """Host loop: step until the scheduler reports itself empty
+        (default: max prio ≤ tol).
 
         Termination here is the bulk-synchronous collapse of the paper's
         distributed consensus algorithm [26]: "all schedulers empty" is a
@@ -253,7 +298,7 @@ class Engine:
         """
         trace: List[Dict[str, float]] = []
         for _ in range(max_steps):
-            if float(jnp.max(state.prio)) <= self.tolerance:
+            if bool(self.scheduler.done(state.sched, state.prio)):
                 break
             state = self.step(state)
             if trace_fn is not None:
@@ -269,6 +314,7 @@ class Engine:
 
         def cond(s):
             return jnp.logical_and(
-                s.step_index < max_steps, jnp.max(s.prio) > self.tolerance)
+                s.step_index < max_steps,
+                jnp.logical_not(self.scheduler.done(s.sched, s.prio)))
 
         return jax.lax.while_loop(cond, self._step, state)

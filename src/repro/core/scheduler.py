@@ -1,0 +1,385 @@
+"""The Scheduler subsystem (paper Secs. 3.3, 4.2.2; DESIGN.md §3.8).
+
+GraphLab separates *what* an update computes (the VertexProgram) from *when*
+it runs (the scheduler T).  The paper ships a family of schedulers — sweep,
+FIFO, prioritized, and the distributed locking engine's per-machine queues
+with a pipeline of in-flight lock requests — and every engine consumes the
+same ``T ← (T \\ executed) ∪ T'`` contract.
+
+On TPU the scheduler is array-native: T is a priority array (active ⇔
+``prio > tolerance``) and a scheduler is four operations over it:
+
+  init(prio)                        -> sched state (pytree; () if stateless)
+  select(sched, prio, phase)        -> (execute mask, sched)
+  reschedule(sched, prio, mask, r)  -> (prio, sched)   # T \\ executed ∪ T'
+  done(sched, prio)                 -> scalar bool      # scheduler empty
+
+``select`` may be called ``num_phases`` times per engine step (the chromatic
+sweep's color-steps); stateless schedulers ignore ``sched``.
+
+Lock arbitration (paper Sec. 4.2.2): a parallel step may only execute an
+independent set under the program's consistency model.  The pipelined
+selection assigns each selected vertex a unique finite *rank* (0 = highest
+priority — the canonical order (owner(v), v) of the paper's deadlock-free
+lock acquisition); a vertex wins iff it holds the minimum rank in its
+exclusion neighborhood (distance 1 for edge consistency, distance 2 for
+full, none for vertex consistency).  Losers keep their priority and retry —
+exactly a lock request still queued in the pipeline.  The same primitives
+run inside ``shard_map`` for the distributed locking engine
+(``dist/locking.py``), where ghost ranks arrive through the versioned
+ghost-exchange tables instead of a shared array.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import GraphStructure, scatter_to_neighbors
+
+Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+# Pure primitives — shared by the class API below and the shard_map bodies
+# ---------------------------------------------------------------------------
+
+def scheduled_mask(prio: jnp.ndarray, tolerance: float) -> jnp.ndarray:
+    """Membership in T: a vertex is scheduled iff its priority exceeds tol."""
+    return prio > tolerance
+
+
+def sweep_mask(colors: jnp.ndarray, prio: jnp.ndarray, tolerance: float,
+               phase: int) -> jnp.ndarray:
+    """One color-step of the sweep schedule: scheduled ∧ color == phase."""
+    return jnp.logical_and(colors == phase, scheduled_mask(prio, tolerance))
+
+
+def pipeline_select(prio: jnp.ndarray, k: int, tolerance: float
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-k scheduled vertices — the pipeline of in-flight lock requests.
+
+    Returns ``(selected [N] bool, top_idx [k])``; ties break toward lower
+    vertex id (``lax.top_k`` is stable), the paper's canonical ordering.
+    """
+    n = prio.shape[0]
+    masked = jnp.where(scheduled_mask(prio, tolerance), prio, -jnp.inf)
+    _, top_idx = jax.lax.top_k(masked, k)
+    in_top = jnp.zeros(n, bool).at[top_idx].set(True)
+    selected = jnp.logical_and(in_top, scheduled_mask(prio, tolerance))
+    return selected, top_idx
+
+
+def pipeline_ranks(prio: jnp.ndarray, top_idx: jnp.ndarray, tolerance: float,
+                   *, stride: int = 1, offset: int = 0) -> jnp.ndarray:
+    """Arbitration rank per vertex: position in the top-k list (exact, no
+    float ties), +inf for unselected.  ``stride``/``offset`` interleave ranks
+    across disjoint selectors (per-machine queues use ``slot * S + m`` so
+    ranks stay globally unique and comparable).
+
+    Ranks are f32 so +inf can be the segment_min identity; they are exact
+    only below 2**24 — beyond that adjacent ranks collide and tied
+    exclusion neighbors would both lose every round (livelock).  Scheduler
+    constructors enforce the bound (`check_rank_range`) so the failure is
+    loud, not silent."""
+    n = prio.shape[0]
+    k = top_idx.shape[0]
+    ranks = jnp.arange(k, dtype=jnp.float32) * stride + offset
+    rank = jnp.full((n,), jnp.inf, jnp.float32)
+    return rank.at[top_idx].set(
+        jnp.where(scheduled_mask(prio, tolerance)[top_idx], ranks, jnp.inf))
+
+
+def check_rank_range(max_rank: int, what: str) -> None:
+    """Reject configurations whose arbitration ranks exceed f32 integer
+    precision (2**24): colliding ranks make tied neighbors both lose
+    arbitration forever."""
+    if max_rank >= 2 ** 24:
+        raise ValueError(
+            f"{what}: arbitration rank range {max_rank} exceeds f32 "
+            f"integer precision (2**24); ranks would collide and tied "
+            f"exclusion neighbors would livelock")
+
+
+def neighbor_min(key: jnp.ndarray, senders, receivers, n: int) -> jnp.ndarray:
+    """min over in/out neighbors of ``key`` (symmetrized one-hop);
+    ``segment_min``'s identity is already +inf, so empty neighborhoods come
+    back +inf with no extra clamp."""
+    m1 = jax.ops.segment_min(key[senders], receivers, n,
+                             indices_are_sorted=True)
+    m2 = jax.ops.segment_min(key[receivers], senders, n)
+    return jnp.minimum(m1, m2)
+
+
+def _closed_neighborhood_two_mins(rank, senders, receivers, n):
+    """(c1, c2): smallest and second-smallest rank over each vertex's
+    *closed* neighborhood N[u] = {u} ∪ N(u).  Finite ranks are unique, so
+    "second" is well defined; all-inf neighborhoods give (inf, inf)."""
+    c1 = jnp.minimum(rank, neighbor_min(rank, senders, receivers, n))
+
+    def drop(vals, ref):
+        return jnp.where(vals == ref, jnp.inf, vals)
+
+    m1 = jax.ops.segment_min(drop(rank[senders], c1[receivers]), receivers,
+                             n, indices_are_sorted=True)
+    m2 = jax.ops.segment_min(drop(rank[receivers], c1[senders]), senders, n)
+    c2 = jnp.minimum(drop(rank, c1), jnp.minimum(m1, m2))
+    return c1, c2
+
+
+def exclusion_min(rank: jnp.ndarray, senders, receivers, n: int,
+                  radius: int) -> jnp.ndarray:
+    """min rank over each vertex's distance-≤``radius`` exclusion
+    neighborhood, **excluding the vertex itself** (+inf when radius is 0).
+
+    Radius 2 must not count v's own rank reached over a v→u→v path — doing
+    so deadlocks every non-isolated vertex (rank[v] < ... ≤ rank[v] is
+    unsatisfiable).  We therefore relay, per middle vertex u, the min over
+    N[u] *excluding the destination*: c1[u] unless that min *is* rank[v],
+    in which case the second-min c2[u].
+    """
+    if radius <= 0:
+        return jnp.full((n,), jnp.inf, rank.dtype)
+    d1 = neighbor_min(rank, senders, receivers, n)
+    if radius == 1:
+        return d1
+    c1, c2 = _closed_neighborhood_two_mins(rank, senders, receivers, n)
+
+    def relay(mid, dst):
+        return jnp.where(c1[mid] == rank[dst], c2[mid], c1[mid])
+
+    d2 = jnp.minimum(
+        jax.ops.segment_min(relay(senders, receivers), receivers, n,
+                            indices_are_sorted=True),
+        jax.ops.segment_min(relay(receivers, senders), senders, n))
+    return jnp.minimum(d1, d2)
+
+
+def exclusion_winners(selected: jnp.ndarray, rank: jnp.ndarray, senders,
+                      receivers, n: int, radius: int) -> jnp.ndarray:
+    """Lock arbitration: a selected vertex wins iff it strictly beats every
+    rank in its exclusion neighborhood.  The global minimum-rank vertex
+    always wins, so every arbitration round makes progress."""
+    if radius <= 0:
+        return selected
+    nb = exclusion_min(rank, senders, receivers, n, radius)
+    return jnp.logical_and(selected, rank < nb)
+
+
+def reschedule_prio(program, structure, prio: jnp.ndarray, mask: jnp.ndarray,
+                    residual: jnp.ndarray) -> jnp.ndarray:
+    """T ← (T \\ executed) ∪ T' — executed vertices consume their priority;
+    their priority contribution is scattered to neighbors (Alg. 1 pattern)."""
+    prio = jnp.where(mask, 0.0, prio)
+    if program.schedule_neighbors:
+        contrib = jnp.where(mask, program.priority(residual), 0.0)
+        prio = prio + scatter_to_neighbors(contrib, structure, "out")
+    return prio
+
+
+def marker_wave(pending: jnp.ndarray, done: jnp.ndarray, structure
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """The snapshot update's prioritized phase (paper Alg. 5) as a scheduler
+    primitive: the frontier is the scheduled-and-unexecuted set, and its
+    reschedule step marks every unmarked neighbor (both edge directions —
+    markers flood the undirected skeleton)."""
+    frontier = jnp.logical_and(pending, jnp.logical_not(done))
+    reached = scatter_to_neighbors(
+        frontier.astype(jnp.int32), structure, "both") > 0
+    return frontier, jnp.logical_or(pending, reached)
+
+
+# ---------------------------------------------------------------------------
+# The Scheduler API
+# ---------------------------------------------------------------------------
+
+class Scheduler:
+    """Base: holds the program (priority fn + consistency), the static
+    structure (exclusion neighborhoods, T' scatter) and the tolerance that
+    defines membership in T."""
+
+    num_phases: int = 1
+
+    def __init__(self, program, structure: GraphStructure, tolerance: float):
+        self.program = program
+        self.structure = structure
+        self.tolerance = float(tolerance)
+        self._senders = jnp.asarray(structure.senders)
+        self._receivers = jnp.asarray(structure.receivers)
+
+    # -- API ------------------------------------------------------------------
+    def init(self, prio: jnp.ndarray) -> Pytree:
+        return ()
+
+    def select(self, sched: Pytree, prio: jnp.ndarray, phase: int = 0
+               ) -> Tuple[jnp.ndarray, Pytree]:
+        raise NotImplementedError
+
+    def reschedule(self, sched: Pytree, prio: jnp.ndarray, mask: jnp.ndarray,
+                   residual: jnp.ndarray) -> Tuple[jnp.ndarray, Pytree]:
+        return reschedule_prio(self.program, self.structure, prio, mask,
+                               residual), sched
+
+    def done(self, sched: Pytree, prio: jnp.ndarray) -> jnp.ndarray:
+        return jnp.max(prio) <= self.tolerance
+
+    # -- shared arbitration ----------------------------------------------------
+    def _arbitrate(self, selected: jnp.ndarray, rank: jnp.ndarray
+                   ) -> jnp.ndarray:
+        return exclusion_winners(
+            selected, rank, self._senders, self._receivers,
+            self.structure.n_vertices,
+            self.program.consistency.exclusion_radius)
+
+
+class SweepScheduler(Scheduler):
+    """Color-range sweep (paper Sec. 4.2.1): phase c executes every
+    scheduled vertex of color c.  A single color (vertex consistency) is the
+    BSP schedule; a proper / distance-2 coloring realizes edge / full
+    consistency.  Stateless."""
+
+    def __init__(self, program, structure, tolerance,
+                 colors: Optional[np.ndarray] = None):
+        super().__init__(program, structure, tolerance)
+        if colors is None:
+            colors = np.zeros(structure.n_vertices, np.int32)
+        colors = np.asarray(colors, np.int32)
+        self.colors = jnp.asarray(colors)
+        self.num_phases = int(colors.max()) + 1 if colors.size else 1
+
+    def select(self, sched, prio, phase=0):
+        return sweep_mask(self.colors, prio, self.tolerance, phase), sched
+
+
+class PriorityScheduler(Scheduler):
+    """Dynamically prioritized top-k pipeline + lock arbitration (paper
+    Sec. 4.2.2), lifted from the DynamicEngine.  ``pipeline_length`` is the
+    depth p of in-flight lock requests: k = 1 is exact serial priority
+    order, large k trades strict priority order for machine efficiency
+    (Fig. 3(b)/8(b)).  ``serializable=False`` skips arbitration and races
+    (Fig. 1(d)).  Stateless."""
+
+    def __init__(self, program, structure, tolerance, pipeline_length: int,
+                 serializable: bool = True):
+        super().__init__(program, structure, tolerance)
+        self.pipeline_length = int(min(pipeline_length, structure.n_vertices))
+        self.serializable = bool(serializable)
+        if self.serializable:
+            check_rank_range(self.pipeline_length, "PriorityScheduler")
+
+    def select(self, sched, prio, phase=0):
+        selected, top_idx = pipeline_select(
+            prio, self.pipeline_length, self.tolerance)
+        if not self.serializable:
+            return selected, sched
+        rank = pipeline_ranks(prio, top_idx, self.tolerance)
+        return self._arbitrate(selected, rank), sched
+
+
+class FifoScheduler(Scheduler):
+    """FIFO queue approximation: vertices are served in enqueue-round order
+    (ties toward lower id), k at a time, with the same lock arbitration.
+    Stateful — ``sched`` carries per-vertex enqueue rounds and the clock."""
+
+    def __init__(self, program, structure, tolerance, pipeline_length: int,
+                 serializable: bool = True):
+        super().__init__(program, structure, tolerance)
+        self.pipeline_length = int(min(pipeline_length, structure.n_vertices))
+        self.serializable = bool(serializable)
+
+    def init(self, prio):
+        n = self.structure.n_vertices
+        enq = jnp.where(scheduled_mask(prio, self.tolerance),
+                        jnp.zeros(n, jnp.int32), jnp.iinfo(jnp.int32).max)
+        return {"enq": enq, "clock": jnp.ones((), jnp.int32)}
+
+    def select(self, sched, prio, phase=0):
+        n = self.structure.n_vertices
+        in_t = scheduled_mask(prio, self.tolerance)
+        # oldest first: top_k of the negated round, stable ties by lower id
+        key = jnp.where(in_t, -sched["enq"], jnp.iinfo(jnp.int32).min)
+        _, top_idx = jax.lax.top_k(key, self.pipeline_length)
+        selected = jnp.logical_and(
+            jnp.zeros(n, bool).at[top_idx].set(True), in_t)
+        if not self.serializable:
+            return selected, sched
+        rank = pipeline_ranks(prio, top_idx, self.tolerance)
+        return self._arbitrate(selected, rank), sched
+
+    def reschedule(self, sched, prio, mask, residual):
+        was_in = scheduled_mask(prio, self.tolerance)
+        prio = reschedule_prio(self.program, self.structure, prio, mask,
+                               residual)
+        now_in = scheduled_mask(prio, self.tolerance)
+        # (re-)enqueue at the current clock anything that entered T this
+        # round: executed-and-rescheduled vertices go to the back of the
+        # queue, vertices that stayed scheduled keep their round
+        fresh = jnp.logical_and(now_in, jnp.logical_or(
+            mask, jnp.logical_not(was_in)))
+        enq = jnp.where(fresh, sched["clock"],
+                        jnp.where(now_in, sched["enq"],
+                                  jnp.iinfo(jnp.int32).max))
+        return prio, {"enq": enq, "clock": sched["clock"] + 1}
+
+
+class MultiQueueScheduler(Scheduler):
+    """The paper's per-machine schedulers (Sec. 4.2.2): vertex v lives in
+    queue ``machine_of[v]``; each of the S queues independently pops its
+    top-p scheduled vertices, and arbitration runs over the union with the
+    globally unique rank ``slot * S + machine`` — the canonical order
+    (owner(v), v).  This is the shared-memory twin of
+    ``dist/locking.py``'s per-shard selection.  Stateless."""
+
+    def __init__(self, program, structure, tolerance, machine_of: np.ndarray,
+                 pipeline_length: int, serializable: bool = True):
+        super().__init__(program, structure, tolerance)
+        machine_of = np.asarray(machine_of, np.int32)
+        if machine_of.shape != (structure.n_vertices,):
+            raise ValueError("machine_of must be [n_vertices]")
+        self.n_machines = int(machine_of.max()) + 1 if machine_of.size else 1
+        counts = np.bincount(machine_of, minlength=self.n_machines)
+        n_loc = max(int(counts.max()), 1)
+        self.pipeline_length = int(min(pipeline_length, n_loc))
+        self.serializable = bool(serializable)
+        if self.serializable:
+            check_rank_range(self.pipeline_length * self.n_machines,
+                             "MultiQueueScheduler")
+        # static machine-major padded layout: queue m owns row block m
+        order = np.argsort(machine_of, kind="stable")
+        slot = np.zeros(structure.n_vertices, np.int64)
+        offs = np.concatenate([[0], np.cumsum(counts)])
+        slot[order] = np.arange(structure.n_vertices) - offs[
+            machine_of[order]]
+        row_of = machine_of.astype(np.int64) * n_loc + slot
+        gid = np.full(self.n_machines * n_loc, -1, np.int64)
+        gid[row_of] = np.arange(structure.n_vertices)
+        self._n_loc = n_loc
+        self._gid = jnp.asarray(np.maximum(gid, 0), jnp.int32)
+        self._pad = jnp.asarray(gid >= 0)
+
+    def select(self, sched, prio, phase=0):
+        n, S, k = self.structure.n_vertices, self.n_machines, \
+            self.pipeline_length
+        in_t = scheduled_mask(prio, self.tolerance)
+        # [S, n_loc] padded priority matrix; batched per-queue top-k
+        grid = jnp.where(self._pad, in_t[self._gid], False)
+        pgrid = jnp.where(grid, prio[self._gid], -jnp.inf).reshape(
+            S, self._n_loc)
+        _, top = jax.lax.top_k(pgrid, k)                    # [S, k]
+        rows = (jnp.arange(S)[:, None] * self._n_loc + top).reshape(-1)
+        slot_rank = jnp.tile(jnp.arange(k, dtype=jnp.float32), (S, 1))
+        qrank = (slot_rank * S
+                 + jnp.arange(S, dtype=jnp.float32)[:, None]).reshape(-1)
+        vids = self._gid[rows]
+        ok = jnp.logical_and(self._pad[rows], in_t[vids])
+        # padded queue rows alias vertex 0: accumulate with max/min so a
+        # pad row can never clobber a real selection
+        selected = jnp.zeros(n, jnp.int32).at[vids].max(
+            ok.astype(jnp.int32)) > 0
+        rank = jnp.full((n,), jnp.inf, jnp.float32).at[vids].min(
+            jnp.where(ok, qrank, jnp.inf))
+        if not self.serializable:
+            return selected, sched
+        return self._arbitrate(selected, rank), sched

@@ -32,6 +32,7 @@ import numpy as np
 
 from repro.core.engine_base import Engine, EngineState
 from repro.core.graph import DataGraph
+from repro.core.scheduler import marker_wave
 
 Pytree = Any
 
@@ -68,14 +69,15 @@ def _snapshot_update(snap: SnapshotState, graph: DataGraph,
                      step: jnp.ndarray) -> SnapshotState:
     """One prioritized snapshot phase (paper Alg. 5, bulk form).
 
-    Frontier = pending ∧ ¬done.  Saves the frontier's vertex data and the
-    out-edges it owns (the update at v owns writes to its adjacent edges),
-    marks it done, and schedules all unmarked neighbors.
+    The scheduling is the scheduler subsystem's ``marker_wave`` (DESIGN.md
+    §3.8): the frontier (pending ∧ ¬done) is the phase's select mask, and
+    its reschedule step marks every unmarked neighbor.  The phase saves the
+    frontier's vertex data and the out-edges it owns (the update at v owns
+    writes to its adjacent edges), then marks the frontier done.
     """
     st = graph.structure
     senders = jnp.asarray(st.senders)
-    receivers = jnp.asarray(st.receivers)
-    frontier = jnp.logical_and(snap.pending, jnp.logical_not(snap.done))
+    frontier, pending = marker_wave(snap.pending, snap.done, st)
 
     def _save_v(saved, live):
         m = frontier.reshape((-1,) + (1,) * (live.ndim - 1))
@@ -93,12 +95,6 @@ def _snapshot_update(snap: SnapshotState, graph: DataGraph,
     saved_e = jax.tree.map(_save_e, snap.saved_e, graph.edge_data)
 
     done = jnp.logical_or(snap.done, frontier)
-    # marker propagation: frontier schedules every unmarked neighbor
-    f32 = frontier.astype(jnp.int32)
-    tofrom = jax.ops.segment_max(
-        f32[senders], receivers, st.n_vertices, indices_are_sorted=True) > 0
-    toto = jax.ops.segment_max(f32[receivers], senders, st.n_vertices) > 0
-    pending = jnp.logical_or(snap.pending, jnp.logical_or(tofrom, toto))
     save_step = jnp.where(frontier, step, snap.save_step)
     return SnapshotState(
         pending=pending, done=done, save_step=save_step,
@@ -127,7 +123,7 @@ class AsyncSnapshotDriver:
         snap: Optional[SnapshotState] = None
         trace: List[Dict[str, float]] = []
         for _ in range(max_steps):
-            if float(jnp.max(state.prio)) <= self.engine.tolerance:
+            if bool(self.engine.scheduler.done(state.sched, state.prio)):
                 break
             if int(state.step_index) == snapshot_at_step:
                 snap = init_snapshot(state.graph, list(initiators))
@@ -161,7 +157,7 @@ class SyncSnapshotDriver:
         trace: List[Dict[str, float]] = []
         step = 0
         while step < max_steps:
-            if float(jnp.max(state.prio)) <= self.engine.tolerance:
+            if bool(self.engine.scheduler.done(state.sched, state.prio)):
                 break
             if int(state.step_index) == snapshot_at_step and snap is None:
                 # barrier: all channels flushed; journal the graph

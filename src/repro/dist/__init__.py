@@ -15,9 +15,11 @@ Two layers, mirroring the paper's split between *data placement* and
 """
 from repro.dist.sharding import (AxisRules, SERVE_RULES, TRAIN_RULES,
                                  logical_spec, shard_constraint)
-from repro.dist.engine import DistributedEngine, DistState
+from repro.dist.engine import DistState, DistributedEngine, ShardEngineBase
+from repro.dist.locking import DistributedLockingEngine
 
 __all__ = [
-    "AxisRules", "DistState", "DistributedEngine", "SERVE_RULES",
+    "AxisRules", "DistState", "DistributedEngine",
+    "DistributedLockingEngine", "SERVE_RULES", "ShardEngineBase",
     "TRAIN_RULES", "logical_spec", "shard_constraint",
 ]

@@ -1,4 +1,4 @@
-"""DistributedEngine: a real VertexProgram under ``shard_map`` (DESIGN §3.7).
+"""Sharded vertex-program engines under ``shard_map`` (DESIGN §3.7).
 
 Where ``core/distributed.py`` *models* the paper's cluster (real values,
 simulated time), this module *is* the cluster on a device mesh: vertices are
@@ -7,19 +7,26 @@ mesh slice along the ``data`` axis plays one machine, and ghosts — boundary
 vertices a machine reads but does not own — live in a versioned remote
 cache refreshed by explicit ``all_to_all`` exchanges.
 
-The execution schedule is the Chromatic Engine's (Sec. 4.2.1): one engine
-step sweeps the colors; within a color every machine updates its scheduled
-own vertices of that color.  Because a proper coloring makes same-color
-vertices non-adjacent, refreshing ghosts once per color-step reproduces the
-shared-memory engine's reads exactly, so the distributed fixed point matches
-``ChromaticEngine`` to float tolerance (tests/test_dist_engine.py).
+``ShardEngineBase`` owns everything schedule-independent: the partition
+layout, the versioned ghost exchange, and the **phase update** (local
+gather⊕combine → apply → exchange → reschedule → adjacent-edge writes) for
+one caller-supplied active mask.  The engines are scheduler choices over
+it, mirroring the shared-memory layer (core/scheduler.py, DESIGN §3.8):
+
+  ``DistributedEngine``         chromatic sweep (Sec. 4.2.1): one step
+                                sweeps the colors; same-color vertices are
+                                non-adjacent, so the fixed point matches
+                                ``ChromaticEngine`` to float tolerance.
+  ``dist/locking.py``           the pipelined locking engine (Sec. 4.2.2):
+                                per-machine top-p selection with ghost-rank
+                                arbitration.
 
 Versioned ghost exchange (Sec. 5.1: "each machine receives each modified
 vertex data at most once"): the send tables enumerate (owner row, caching
 machine) pairs once; at each exchange a row ships only if its vertex
-updated this color-step.  Unchanged ghosts keep their cached value; a
-per-machine counter accounts the rows actually shipped, which is the
-quantity the paper's Fig. 6(c) network curves measure.
+updated this phase.  Unchanged ghosts keep their cached value; per-machine
+counters account the rows actually shipped, which is the quantity the
+paper's Fig. 6(c) network curves measure.
 
 Adjacent-edge writes (LBP messages) ride the same machinery: an edge lives
 with its receiver's machine, its reverse edge may live elsewhere, so edge
@@ -40,6 +47,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.coloring import coloring_for
 from repro.core.graph import DataGraph, csr_block_offsets, segment_combine
+from repro.core.scheduler import sweep_mask
 from repro.dist.compat import shard_map
 from repro.core.partition import overpartition, place_vertices
 from repro.core.update import (EdgeCtx, VertexProgram, fused_edge_weight,
@@ -65,6 +73,7 @@ class DistState:
     update_count: jnp.ndarray  # [S*n_loc] i32
     traffic_v: jnp.ndarray  # [S] i32 — ghost vertex rows actually shipped
     traffic_e: jnp.ndarray  # [S] i32 — ghost edge rows actually shipped
+    traffic_r: jnp.ndarray  # [S] i32 — arbitration rank rows shipped
     step_index: jnp.ndarray  # scalar i32
 
     def replace(self, **kw) -> "DistState":
@@ -235,13 +244,15 @@ def _take_rows(tree: Pytree, idx: np.ndarray) -> Pytree:
     return jax.tree.map(one, tree)
 
 
-class DistributedEngine:
-    """Runs ``program`` on ``graph`` over the mesh ``data`` axis.
+class ShardEngineBase:
+    """Schedule-independent half of a sharded engine: partition layout,
+    versioned ghost exchange, and the per-phase local update.
 
-    One mesh slice along ``axis`` = one paper machine.  ``step(state)`` is
-    one chromatic sweep; ``run`` drives to convergence like the other
-    engines.  Sync ops are not supported on this path yet (the global
-    reduction belongs to the checkpoint/sync subsystem, DESIGN §3.8).
+    One mesh slice along ``axis`` = one paper machine.  Subclasses build
+    ``_make_step`` from ``_make_phase_helpers`` — each phase executes one
+    caller-chosen active mask — and finish ``__init__`` with
+    ``_finalize()``.  Sync ops are not supported on this path yet (the
+    global reduction belongs to the checkpoint/sync subsystem, DESIGN §3.9).
     """
 
     def __init__(
@@ -251,7 +262,6 @@ class DistributedEngine:
         mesh,
         *,
         axis: str = "data",
-        colors: Optional[np.ndarray] = None,
         k_atoms: Optional[int] = None,
         method: str = "hash",
         tolerance: float = 1e-3,
@@ -325,22 +335,15 @@ class DistributedEngine:
             lay.tables["gas_start"] = np.concatenate(starts).astype(np.int32)
             lay.tables["gas_neblk"] = np.concatenate(neblks).astype(np.int32)
 
-        if colors is None:
-            colors = coloring_for(st, program.consistency)
-        colors = np.asarray(colors, np.int32)
-        self.num_colors = int(colors.max()) + 1 if colors.size else 1
-        self.colors = colors
-
         self._shard = NamedSharding(mesh, P(axis))
         self._rep = NamedSharding(mesh, P())
+
+    def _finalize(self) -> None:
+        """Device-put the (possibly subclass-extended) tables and jit the
+        step.  Subclasses call this at the end of ``__init__``."""
         self._tables = {
             k: jax.device_put(jnp.asarray(v), self._shard)
             for k, v in self.layout.tables.items()}
-        colors_own = np.zeros(S * self.layout.n_loc, np.int32)
-        ok = self.layout.own_gid >= 0
-        colors_own[ok] = colors[self.layout.own_gid[ok]]
-        self._tables["colors_own"] = jax.device_put(
-            jnp.asarray(colors_own), self._shard)
         self._jit_step = jax.jit(self._make_step())
 
     # -- state ---------------------------------------------------------------
@@ -355,7 +358,7 @@ class DistributedEngine:
                                    self.graph.structure.receivers)):
             raise ValueError(
                 "init() graph structure differs from the one this engine "
-                "was partitioned for; build a new DistributedEngine")
+                "was partitioned for; build a new engine")
         lay = self.layout
         S = lay.n_machines
         vdata = jax.tree.map(np.asarray, graph.vertex_data)
@@ -382,16 +385,28 @@ class DistributedEngine:
             update_count=put(np.zeros(S * lay.n_loc, np.int32)),
             traffic_v=put(np.zeros(S, np.int32)),
             traffic_e=put(np.zeros(S, np.int32)),
+            traffic_r=put(np.zeros(S, np.int32)),
             step_index=jax.device_put(jnp.zeros((), jnp.int32), self._rep))
 
-    # -- the sharded step -----------------------------------------------------
-    def _make_step(self):
+    # -- the shared phase machinery -------------------------------------------
+    def _make_phase_helpers(self):
+        """Builds ``(exchange, phase_update)`` closures for a shard_map body.
+
+        ``exchange(payload, changed, send_idx, send_mask, budget)`` is the
+        versioned all_to_all: ship only rows whose vertex/edge changed;
+        returns (recv payload, recv changed, rows shipped).
+
+        ``phase_update(tb, carry, active)`` executes one phase for the given
+        active mask: local gather⊕combine → apply → versioned vdata/contrib
+        exchange → reschedule (losers keep their priority untouched) →
+        adjacent-edge writes with their own versioned exchange.  ``carry``
+        is the dict {vown, vghost, edata, eghost, prio, count, tv, te}.
+        """
         lay, prog = self.layout, self.program
         S, n_loc, B = lay.n_machines, lay.n_loc, lay.budget
         e_loc, EB = lay.e_loc, lay.e_budget
         use_rev = lay.has_rev
-        ax, tol = self.axis, self.tolerance
-        num_colors = self.num_colors
+        ax = self.axis
         use_fused = self._use_fused
         if use_fused:
             gas_leaves, gas_treedef = self._gas_leaves, self._gas_treedef
@@ -399,8 +414,6 @@ class DistributedEngine:
             gas_interpret = self._gas_interpret
 
         def exchange(payload, changed, send_idx, send_mask, budget):
-            """Versioned all_to_all: ship only rows whose vertex/edge
-            changed; returns (recv payload, recv changed, rows shipped)."""
             ship = jnp.logical_and(send_mask, changed[send_idx])
 
             def a2a(rows):
@@ -417,150 +430,149 @@ class DistributedEngine:
             recv_changed = a2a(ship)
             return recv, recv_changed, jnp.sum(ship, dtype=jnp.int32)
 
-        def body(state: DistState, tb: Dict[str, jnp.ndarray]) -> DistState:
-            vown, vghost = state.vown, state.vghost
-            edata, eghost = state.edata, state.eghost
-            prio, count = state.prio, state.update_count
-            tv, te = state.traffic_v, state.traffic_e
+        def phase_update(tb, carry, active):
+            vown, vghost = carry["vown"], carry["vghost"]
+            edata, eghost = carry["edata"], carry["eghost"]
+            prio, count = carry["prio"], carry["count"]
+            tv, te = carry["tv"], carry["te"]
 
             sl, rl = tb["senders_local"], tb["receivers_local"]
             emask = tb["edge_mask"]
             # masked edges aggregate into the dropped segment n_loc
             recv_idx = jnp.where(emask, rl, n_loc)
 
-            for c in range(num_colors):
-                v_all = jax.tree.map(
-                    lambda o, g: jnp.concatenate([o, g], 0), vown, vghost)
-                active = jnp.logical_and(
-                    tb["own_mask"],
-                    jnp.logical_and(tb["colors_own"] == c, prio > tol))
+            v_all = jax.tree.map(
+                lambda o, g: jnp.concatenate([o, g], 0), vown, vghost)
 
-                if use_fused:
-                    # fused local compute: per-leaf feature table over
-                    # own+ghost rows, per-edge scalar weight, one GAS
-                    # gather⊕combine per leaf — no [e_loc, D] messages, and
-                    # row blocks with no scheduled own vertex are skipped.
-                    blk_active = active_row_blocks(active)
-                    es = EdgeSet(
-                        n_vertices=n_loc, n_edges=e_loc,
-                        senders=tb["gas_send"], receivers=tb["gas_recv"],
-                        eblk_start=tb["gas_start"], n_eblk=tb["gas_neblk"],
-                        max_eblk=gas_max_eblk)
-                    accs = []
-                    for leaf in gas_leaves:
-                        feat = leaf.feature(v_all)
-                        trailing = feat.shape[1:]
-                        w = fused_edge_weight(leaf, edata, e_loc,
-                                              tb["src_deg_e"])
-                        w = jnp.where(tb["edge_mask"], w, 0.0)
-                        a = gather_combine(
-                            feat.reshape(feat.shape[0], -1), w, es,
-                            block_active=blk_active,
-                            interpret=gas_interpret)
-                        accs.append(a.reshape((n_loc,) + trailing))
-                    acc = jax.tree.unflatten(gas_treedef, accs)
+            if use_fused:
+                # fused local compute: per-leaf feature table over
+                # own+ghost rows, per-edge scalar weight, one GAS
+                # gather⊕combine per leaf — no [e_loc, D] messages, and
+                # row blocks with no scheduled own vertex are skipped.
+                blk_active = active_row_blocks(active)
+                es = EdgeSet(
+                    n_vertices=n_loc, n_edges=e_loc,
+                    senders=tb["gas_send"], receivers=tb["gas_recv"],
+                    eblk_start=tb["gas_start"], n_eblk=tb["gas_neblk"],
+                    max_eblk=gas_max_eblk)
+                accs = []
+                for leaf in gas_leaves:
+                    feat = leaf.feature(v_all)
+                    trailing = feat.shape[1:]
+                    w = fused_edge_weight(leaf, edata, e_loc,
+                                          tb["src_deg_e"])
+                    w = jnp.where(tb["edge_mask"], w, 0.0)
+                    a = gather_combine(
+                        feat.reshape(feat.shape[0], -1), w, es,
+                        block_active=blk_active,
+                        interpret=gas_interpret)
+                    accs.append(a.reshape((n_loc,) + trailing))
+                acc = jax.tree.unflatten(gas_treedef, accs)
+            else:
+                if use_rev:
+                    e_all = jax.tree.map(
+                        lambda o, g: jnp.concatenate([o, g], 0), edata,
+                        eghost)
+                    rp = jnp.maximum(tb["rev_local"], 0)
+                    has_rev = tb["rev_local"] >= 0
+
+                    def _rev(x):
+                        y = x[rp]
+                        m = has_rev.reshape((-1,) + (1,) * (y.ndim - 1))
+                        return jnp.where(m, y, jnp.zeros_like(y))
+
+                    rev_edata = jax.tree.map(_rev, e_all)
                 else:
-                    if use_rev:
-                        e_all = jax.tree.map(
-                            lambda o, g: jnp.concatenate([o, g], 0), edata,
-                            eghost)
-                        rp = jnp.maximum(tb["rev_local"], 0)
-                        has_rev = tb["rev_local"] >= 0
+                    # program declared it never reads ctx.rev_edata
+                    rev_edata = jax.tree.map(jnp.zeros_like, edata)
 
-                        def _rev(x):
-                            y = x[rp]
-                            m = has_rev.reshape((-1,) + (1,) * (y.ndim - 1))
-                            return jnp.where(m, y, jnp.zeros_like(y))
+                ctx = EdgeCtx(
+                    edata=edata,
+                    rev_edata=rev_edata,
+                    src=jax.tree.map(lambda x: x[sl], v_all),
+                    dst=jax.tree.map(lambda x: x[rl], vown),
+                    src_deg=tb["src_deg_e"],
+                    dst_deg=tb["dst_deg_e"])
+                msgs = prog.gather(ctx)
+                acc = segment_combine(msgs, recv_idx, n_loc,
+                                      prog.combiner,
+                                      indices_are_sorted=False)
 
-                        rev_edata = jax.tree.map(_rev, e_all)
-                    else:
-                        # program declared it never reads ctx.rev_edata
-                        rev_edata = jax.tree.map(jnp.zeros_like, edata)
+            new_v, residual = prog.apply(vown, acc, None)
+            vown = masked_update(vown, new_v, active)
+            contrib = jnp.where(
+                active, prog.priority(residual.astype(jnp.float32)), 0.0)
 
-                    ctx = EdgeCtx(
-                        edata=edata,
-                        rev_edata=rev_edata,
-                        src=jax.tree.map(lambda x: x[sl], v_all),
-                        dst=jax.tree.map(lambda x: x[rl], vown),
-                        src_deg=tb["src_deg_e"],
-                        dst_deg=tb["dst_deg_e"])
-                    msgs = prog.gather(ctx)
-                    acc = segment_combine(msgs, recv_idx, n_loc,
-                                          prog.combiner,
-                                          indices_are_sorted=False)
+            # versioned ghost exchange: vdata (+acc for edge writes,
+            # +contrib for remote scheduling) of *changed* rows only
+            payload = {"v": vown, "contrib": contrib}
+            if prog.has_edge_out:
+                payload["acc"] = acc
+            recv, recv_ch, shipped = exchange(
+                payload, active, tb["send_idx"], tb["send_mask"], B)
+            tv = tv + shipped
 
-                new_v, residual = prog.apply(vown, acc, None)
-                vown = masked_update(vown, new_v, active)
-                contrib = jnp.where(
-                    active, prog.priority(residual.astype(jnp.float32)), 0.0)
+            def _merge(old, new):
+                m = recv_ch.reshape((-1,) + (1,) * (old.ndim - 1))
+                return jnp.where(m, new.astype(old.dtype), old)
 
-                # versioned ghost exchange: vdata (+acc for edge writes,
-                # +contrib for remote scheduling) of *changed* rows only
-                payload = {"v": vown, "contrib": contrib}
-                if prog.has_edge_out:
-                    payload["acc"] = acc
-                recv, recv_ch, shipped = exchange(
-                    payload, active, tb["send_idx"], tb["send_mask"], B)
-                tv = tv + shipped
+            vghost = jax.tree.map(_merge, vghost, recv["v"])
+            ghost_contrib = jnp.where(recv_ch, recv["contrib"], 0.0)
 
-                def _merge(old, new):
-                    m = recv_ch.reshape((-1,) + (1,) * (old.ndim - 1))
-                    return jnp.where(m, new.astype(old.dtype), old)
+            # T ← (T \ executed) ∪ T': winners consume their priority,
+            # losers/remotes keep theirs (a still-queued lock request)
+            prio = jnp.where(active, 0.0, prio)
+            if prog.schedule_neighbors:
+                contrib_all = jnp.concatenate([contrib, ghost_contrib])
+                vals = jnp.where(emask, contrib_all[sl], 0.0)
+                prio = prio + jax.ops.segment_sum(
+                    vals, recv_idx, n_loc + 1)[:n_loc]
 
-                vghost = jax.tree.map(_merge, vghost, recv["v"])
-                ghost_contrib = jnp.where(recv_ch, recv["contrib"], 0.0)
+            if prog.has_edge_out:
+                v_all2 = jax.tree.map(
+                    lambda o, g: jnp.concatenate([o, g], 0), vown,
+                    vghost)
+                acc_all = jax.tree.map(
+                    lambda a, g: jnp.concatenate([a, g], 0), acc,
+                    recv["acc"])
+                changed_all = jnp.concatenate(
+                    [active, recv_ch.astype(active.dtype)])
+                ctx2 = ctx._replace(
+                    src=jax.tree.map(lambda x: x[sl], v_all2),
+                    dst=jax.tree.map(lambda x: x[rl], vown))
+                new_src = jax.tree.map(lambda x: x[sl], v_all2)
+                src_acc = jax.tree.map(lambda x: x[sl], acc_all)
+                new_e = prog.edge_out(ctx2, new_src, src_acc)
+                wmask = jnp.logical_and(changed_all[sl], emask)
+                edata = masked_update(edata, new_e, wmask)
 
-                prio = jnp.where(active, 0.0, prio)
-                if prog.schedule_neighbors:
-                    contrib_all = jnp.concatenate([contrib, ghost_contrib])
-                    vals = jnp.where(emask, contrib_all[sl], 0.0)
-                    prio = prio + jax.ops.segment_sum(
-                        vals, recv_idx, n_loc + 1)[:n_loc]
+                if use_rev:  # refresh remote reverse-message caches
+                    erecv, erecv_ch, eshipped = exchange(
+                        edata, wmask, tb["esend_idx"],
+                        tb["esend_mask"], EB)
+                    te = te + eshipped
 
-                if prog.has_edge_out:
-                    v_all2 = jax.tree.map(
-                        lambda o, g: jnp.concatenate([o, g], 0), vown,
-                        vghost)
-                    acc_all = jax.tree.map(
-                        lambda a, g: jnp.concatenate([a, g], 0), acc,
-                        recv["acc"])
-                    changed_all = jnp.concatenate(
-                        [active, recv_ch.astype(active.dtype)])
-                    ctx2 = ctx._replace(
-                        src=jax.tree.map(lambda x: x[sl], v_all2),
-                        dst=jax.tree.map(lambda x: x[rl], vown))
-                    new_src = jax.tree.map(lambda x: x[sl], v_all2)
-                    src_acc = jax.tree.map(lambda x: x[sl], acc_all)
-                    new_e = prog.edge_out(ctx2, new_src, src_acc)
-                    wmask = jnp.logical_and(changed_all[sl], emask)
-                    edata = masked_update(edata, new_e, wmask)
+                    def _emerge(old, new):
+                        m = erecv_ch.reshape(
+                            (-1,) + (1,) * (old.ndim - 1))
+                        return jnp.where(m, new.astype(old.dtype), old)
 
-                    if use_rev:  # refresh remote reverse-message caches
-                        erecv, erecv_ch, eshipped = exchange(
-                            edata, wmask, tb["esend_idx"],
-                            tb["esend_mask"], EB)
-                        te = te + eshipped
+                    eghost = jax.tree.map(_emerge, eghost, erecv)
 
-                        def _emerge(old, new):
-                            m = erecv_ch.reshape(
-                                (-1,) + (1,) * (old.ndim - 1))
-                            return jnp.where(m, new.astype(old.dtype), old)
+            count = count + active.astype(jnp.int32)
+            return dict(vown=vown, vghost=vghost, edata=edata, eghost=eghost,
+                        prio=prio, count=count, tv=tv, te=te)
 
-                        eghost = jax.tree.map(_emerge, eghost, erecv)
+        return exchange, phase_update
 
-                count = count + active.astype(jnp.int32)
-
-            return DistState(
-                vown=vown, vghost=vghost, edata=edata, eghost=eghost,
-                prio=prio, update_count=count,
-                traffic_v=tv, traffic_e=te,
-                step_index=state.step_index)
-
+    def _wrap_step(self, body):
+        """shard_map-wraps a ``body(state, tables) -> state`` and appends
+        the replicated step-index bump."""
         spec = P(self.axis)
         state_specs = DistState(
             vown=spec, vghost=spec, edata=spec, eghost=spec, prio=spec,
             update_count=spec, traffic_v=spec, traffic_e=spec,
-            step_index=P())
+            traffic_r=spec, step_index=P())
         sharded = shard_map(
             body, mesh=self.mesh,
             in_specs=(state_specs, spec), out_specs=state_specs,
@@ -571,6 +583,9 @@ class DistributedEngine:
             return out.replace(step_index=state.step_index + 1)
 
         return step
+
+    def _make_step(self):
+        raise NotImplementedError
 
     # -- drivers --------------------------------------------------------------
     def step(self, state: DistState) -> DistState:
@@ -587,6 +602,7 @@ class DistributedEngine:
                 "step": int(state.step_index),
                 "updates": int(jnp.sum(state.update_count)),
                 "ghost_rows": int(jnp.sum(state.traffic_v)),
+                "rank_rows": int(jnp.sum(state.traffic_r)),
             })
         return state, trace
 
@@ -611,7 +627,70 @@ class DistributedEngine:
     def ghost_edge_rows_sent(self, state: DistState) -> int:
         return int(np.asarray(state.traffic_e).sum())
 
+    def rank_rows_sent(self, state: DistState) -> int:
+        """Arbitration rank rows shipped (the locking engine's lock-request
+        traffic; always 0 for the sweep-scheduled engine)."""
+        return int(np.asarray(state.traffic_r).sum())
+
     def total_ghost_slots(self) -> int:
         """Distinct (vertex, caching machine) pairs — the per-sweep upper
         bound on versioned traffic when every vertex updates."""
         return int(self.layout.tables["send_mask"].sum())
+
+
+class DistributedEngine(ShardEngineBase):
+    """The sweep-scheduled distributed engine (paper Sec. 4.2.1 under
+    shard_map): ``step(state)`` is one chromatic sweep; within a color every
+    machine updates its scheduled own vertices of that color.  Because a
+    proper coloring makes same-color vertices non-adjacent, refreshing
+    ghosts once per color-step reproduces the shared-memory engine's reads
+    exactly, so the distributed fixed point matches ``ChromaticEngine`` to
+    float tolerance (tests/test_dist_engine.py)."""
+
+    def __init__(
+        self,
+        program: VertexProgram,
+        graph: DataGraph,
+        mesh,
+        *,
+        colors: Optional[np.ndarray] = None,
+        **kw,
+    ):
+        super().__init__(program, graph, mesh, **kw)
+        st = graph.structure
+        if colors is None:
+            colors = coloring_for(st, program.consistency)
+        colors = np.asarray(colors, np.int32)
+        self.num_colors = int(colors.max()) + 1 if colors.size else 1
+        self.colors = colors
+
+        colors_own = np.zeros(
+            self.layout.n_machines * self.layout.n_loc, np.int32)
+        ok = self.layout.own_gid >= 0
+        colors_own[ok] = colors[self.layout.own_gid[ok]]
+        self.layout.tables["colors_own"] = colors_own
+        self._finalize()
+
+    def _make_step(self):
+        _, phase_update = self._make_phase_helpers()
+        num_colors, tol = self.num_colors, self.tolerance
+
+        def body(state: DistState, tb: Dict[str, jnp.ndarray]) -> DistState:
+            carry = dict(vown=state.vown, vghost=state.vghost,
+                         edata=state.edata, eghost=state.eghost,
+                         prio=state.prio, count=state.update_count,
+                         tv=state.traffic_v, te=state.traffic_e)
+            for c in range(num_colors):
+                active = jnp.logical_and(
+                    tb["own_mask"],
+                    sweep_mask(tb["colors_own"], carry["prio"], tol, c))
+                carry = phase_update(tb, carry, active)
+            return DistState(
+                vown=carry["vown"], vghost=carry["vghost"],
+                edata=carry["edata"], eghost=carry["eghost"],
+                prio=carry["prio"], update_count=carry["count"],
+                traffic_v=carry["tv"], traffic_e=carry["te"],
+                traffic_r=state.traffic_r,
+                step_index=state.step_index)
+
+        return self._wrap_step(body)

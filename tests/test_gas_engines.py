@@ -192,3 +192,22 @@ class TestRegistryKinds:
     def test_kind_matches_dense(self, kind):
         res = self._run_kind(kind)
         assert np.abs(res[True] - res[False]).max() <= TOL
+
+
+class TestFullEdgesRetrace:
+    def test_run_while_after_run_does_not_leak_tracers(self):
+        """Regression: the lazy full-graph EdgeSet is first built while
+        tracing the jitted step; without ensure_compile_time_eval the
+        cached index arrays were that trace's tracers, and any second
+        trace (run_while's while_loop body) crashed with an
+        UnexpectedTracerError."""
+        st = power_law_graph(120, avg_degree=4, seed=0)
+        g = make_pagerank_graph(st)
+        prog = PageRankProgram(0.15, st.n_vertices)
+        eng = DynamicEngine(prog, g, pipeline_length=32, tolerance=1e-6)
+        assert eng.use_fused
+        s, _ = eng.run(eng.init(g), max_steps=500)        # first trace
+        sw = eng.run_while(eng.init(g), max_steps=500)    # second trace
+        assert np.abs(np.asarray(sw.graph.vertex_data["rank"])
+                      - np.asarray(s.graph.vertex_data["rank"])).max() \
+            <= 1e-5

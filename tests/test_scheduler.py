@@ -1,0 +1,273 @@
+"""Scheduler subsystem tests (core/scheduler.py, DESIGN.md §3.8).
+
+Covers the array-native Scheduler API: top-k pipeline selection, lock
+arbitration safety under all three consistency models (the hypothesis
+property the paper's locking engine guarantees: a parallel step only
+executes an independent set under the model's exclusion radius), progress
+(the minimum-rank selected vertex always wins — the FULL-consistency
+regression: the old self-including two-hop min livelocked every
+non-isolated vertex), FIFO ordering, and per-machine multi-queue selection.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.apps.pagerank import (PageRankProgram, exact_pagerank,
+                                 make_pagerank_graph)
+from repro.core import (Consistency, DynamicEngine, Engine, FifoScheduler,
+                        MultiQueueScheduler, PriorityScheduler,
+                        SweepScheduler)
+from repro.core.graph import GraphStructure
+from repro.core.scheduler import (exclusion_min, marker_wave, neighbor_min,
+                                  pipeline_ranks, pipeline_select)
+from repro.graphs.generators import power_law_graph
+
+TOL = 1e-3
+
+
+def random_graph(n, avg_deg, seed):
+    st_ = power_law_graph(n, avg_degree=avg_deg, seed=seed)
+    if st_.n_edges == 0:
+        st_, _ = GraphStructure.undirected([0], [1], n)
+    return st_
+
+
+def program_with(model, n):
+    class P(PageRankProgram):
+        consistency = model
+    return P(0.15, n)
+
+
+def conflict_matrix(st_, radius):
+    """Dense distance-≤radius conflict matrix (diagonal cleared)."""
+    n = st_.n_vertices
+    a = np.zeros((n, n), bool)
+    a[st_.senders, st_.receivers] = True
+    a |= a.T
+    d = a.copy() if radius >= 1 else np.zeros((n, n), bool)
+    if radius >= 2:
+        d |= (a.astype(np.int32) @ a.astype(np.int32)) > 0
+    np.fill_diagonal(d, False)
+    return d
+
+
+def random_prio(n, seed):
+    rng = np.random.default_rng(seed)
+    prio = rng.uniform(0, 1, n).astype(np.float32)
+    prio[rng.uniform(0, 1, n) < 0.3] = 0.0  # some unscheduled
+    return prio
+
+
+# ---------------------------------------------------------------------------
+# arbitration safety + progress (the satellite property test)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(n=st.integers(10, 60), seed=st.integers(0, 10**6),
+       pipeline=st.integers(1, 32),
+       model=st.sampled_from([Consistency.VERTEX, Consistency.EDGE,
+                              Consistency.FULL]))
+def test_priority_scheduler_winners_respect_exclusion(n, seed, pipeline,
+                                                      model):
+    st_ = random_graph(n, 4, seed)
+    prog = program_with(model, st_.n_vertices)
+    sched = PriorityScheduler(prog, st_, TOL, pipeline)
+    prio = random_prio(st_.n_vertices, seed)
+    win = np.asarray(sched.select((), jnp.asarray(prio))[0])
+
+    # winners are scheduled top-k members
+    assert not win[prio <= TOL].any()
+    # no two winners within the model's exclusion radius
+    d = conflict_matrix(st_, model.exclusion_radius)
+    ids = np.nonzero(win)[0]
+    assert not d[np.ix_(ids, ids)].any(), \
+        f"winners within radius {model.exclusion_radius} co-executed"
+    # progress: something scheduled => something wins (the old FULL
+    # arbitration livelocked here by counting v's own rank over v→u→v)
+    if (prio > TOL).any():
+        assert win.any(), "arbitration made no progress"
+
+
+@settings(max_examples=8, deadline=None)
+@given(n=st.integers(10, 60), seed=st.integers(0, 10**6),
+       machines=st.integers(1, 5),
+       model=st.sampled_from([Consistency.VERTEX, Consistency.EDGE,
+                              Consistency.FULL]))
+def test_multi_queue_winners_respect_exclusion(n, seed, machines, model):
+    st_ = random_graph(n, 4, seed)
+    rng = np.random.default_rng(seed + 1)
+    machine_of = rng.integers(0, machines, st_.n_vertices)
+    prog = program_with(model, st_.n_vertices)
+    sched = MultiQueueScheduler(prog, st_, TOL, machine_of,
+                                pipeline_length=4)
+    prio = random_prio(st_.n_vertices, seed)
+    win = np.asarray(sched.select((), jnp.asarray(prio))[0])
+
+    assert not win[prio <= TOL].any()
+    d = conflict_matrix(st_, model.exclusion_radius)
+    ids = np.nonzero(win)[0]
+    assert not d[np.ix_(ids, ids)].any()
+    if (prio > TOL).any():
+        assert win.any()
+
+
+@settings(max_examples=8, deadline=None)
+@given(n=st.integers(8, 50), seed=st.integers(0, 10**6))
+def test_multi_queue_selects_per_machine_topk(n, seed):
+    """Before arbitration, each queue independently pops its top-p — the
+    paper's per-machine schedulers."""
+    st_ = random_graph(n, 4, seed)
+    rng = np.random.default_rng(seed + 2)
+    machine_of = rng.integers(0, 3, st_.n_vertices)
+    prog = program_with(Consistency.VERTEX, st_.n_vertices)  # no exclusion
+    p = 3
+    sched = MultiQueueScheduler(prog, st_, TOL, machine_of, pipeline_length=p)
+    prio = random_prio(st_.n_vertices, seed)
+    win = np.asarray(sched.select((), jnp.asarray(prio))[0])
+    for m in range(3):
+        mine = np.nonzero((machine_of == m) & (prio > TOL))[0]
+        expect = set(mine[np.argsort(-prio[mine], kind="stable")][:p])
+        assert set(np.nonzero(win & (machine_of == m))[0]) == expect
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+def test_neighbor_min_matches_bruteforce():
+    st_ = random_graph(30, 4, 5)
+    rng = np.random.default_rng(0)
+    key = rng.uniform(0, 1, st_.n_vertices).astype(np.float32)
+    got = np.asarray(neighbor_min(jnp.asarray(key),
+                                  jnp.asarray(st_.senders),
+                                  jnp.asarray(st_.receivers),
+                                  st_.n_vertices))
+    nbrs = [set() for _ in range(st_.n_vertices)]
+    for u, v in zip(st_.senders, st_.receivers):
+        nbrs[v].add(u)
+        nbrs[u].add(v)
+    expect = np.array([min((key[u] for u in nb), default=np.inf)
+                       for nb in nbrs], np.float32)
+    np.testing.assert_array_equal(got, expect)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(5, 40), seed=st.integers(0, 10**6))
+def test_exclusion_min_radius2_excludes_self(n, seed):
+    """exclusion_min at radius 2 = min rank over all *other* vertices within
+    distance ≤ 2 — never the vertex's own rank echoed over v→u→v."""
+    st_ = random_graph(n, 3, seed)
+    rng = np.random.default_rng(seed)
+    # unique finite ranks on a random subset
+    rank = np.full(st_.n_vertices, np.inf, np.float32)
+    sel = rng.uniform(0, 1, st_.n_vertices) < 0.6
+    rank[sel] = rng.permutation(sel.sum()).astype(np.float32)
+    got = np.asarray(exclusion_min(
+        jnp.asarray(rank), jnp.asarray(st_.senders),
+        jnp.asarray(st_.receivers), st_.n_vertices, 2))
+    d2 = conflict_matrix(st_, 2)
+    for v in range(st_.n_vertices):
+        others = rank[d2[v]]
+        expect = others.min() if others.size else np.inf
+        assert got[v] == expect, (v, got[v], expect)
+
+
+def test_pipeline_select_is_topk_with_id_ties():
+    prio = jnp.asarray([0.5, 0.9, 0.9, 0.0, 0.2])
+    selected, top_idx = pipeline_select(prio, 2, TOL)
+    assert np.asarray(selected).tolist() == [False, True, True, False, False]
+    rank = np.asarray(pipeline_ranks(prio, top_idx, TOL))
+    assert rank[1] == 0.0 and rank[2] == 1.0  # tie broken toward lower id
+    assert np.isinf(rank[[0, 3, 4]]).all()
+
+
+def test_marker_wave_floods_both_directions():
+    st_, _ = GraphStructure.from_edges([0, 1, 2], [1, 2, 3], 5)
+    pending = jnp.zeros(5, bool).at[2].set(True)
+    done = jnp.zeros(5, bool)
+    frontier, new_pending = marker_wave(pending, done, st_)
+    assert np.asarray(frontier).tolist() == [False, False, True, False, False]
+    # both the in-neighbor (1) and the out-neighbor (3) get marked; 4 is
+    # isolated and stays unmarked
+    assert np.asarray(new_pending).tolist() == [False, True, True, True,
+                                                False]
+
+
+# ---------------------------------------------------------------------------
+# engines consume the subsystem
+# ---------------------------------------------------------------------------
+
+def test_engine_schedulers_are_the_subsystem():
+    st_ = random_graph(40, 4, 1)
+    g = make_pagerank_graph(st_)
+    prog = PageRankProgram(0.15, st_.n_vertices)
+    from repro.core import BSPEngine, ChromaticEngine
+    assert isinstance(BSPEngine(prog, g).scheduler, SweepScheduler)
+    assert BSPEngine(prog, g).scheduler.num_phases == 1  # single color
+    ce = ChromaticEngine(prog, g)
+    assert isinstance(ce.scheduler, SweepScheduler)
+    assert ce.scheduler.num_phases == ce.num_colors
+    de = DynamicEngine(prog, g, pipeline_length=7)
+    assert isinstance(de.scheduler, PriorityScheduler)
+    assert de.scheduler.pipeline_length == 7
+
+
+def test_dynamic_engine_full_consistency_converges():
+    """Regression: distance-2 arbitration used to livelock every vertex
+    with a neighbor (self-rank echoed over v→u→v); the fixed point must now
+    be reached and match the exact solution."""
+    st_ = random_graph(80, 4, 11)
+    g = make_pagerank_graph(st_)
+    prog = program_with(Consistency.FULL, st_.n_vertices)
+    eng = DynamicEngine(prog, g, pipeline_length=16, tolerance=1e-7)
+    s, _ = eng.run(eng.init(g), max_steps=5000)
+    assert float(jnp.max(s.prio)) <= 1e-7, "FULL-consistency run livelocked"
+    np.testing.assert_allclose(
+        np.asarray(s.graph.vertex_data["rank"]),
+        exact_pagerank(st_, 0.15, 500), atol=1e-5)
+
+
+def test_engine_accepts_custom_scheduler():
+    """The generic Engine runs any Scheduler — here FIFO and multi-queue
+    drive PageRank to the same fixed point as the priority pipeline."""
+    st_ = random_graph(60, 4, 2)
+    g = make_pagerank_graph(st_)
+    exact = exact_pagerank(st_, 0.15, 500)
+    prog = PageRankProgram(0.15, st_.n_vertices)
+    rng = np.random.default_rng(0)
+    for sched in (
+            FifoScheduler(prog, st_, 1e-7, pipeline_length=8),
+            MultiQueueScheduler(prog, st_, 1e-7,
+                                rng.integers(0, 3, st_.n_vertices),
+                                pipeline_length=8)):
+        eng = Engine(prog, g, tolerance=1e-7, scheduler=sched)
+        s, _ = eng.run(eng.init(g), max_steps=5000)
+        assert float(jnp.max(s.prio)) <= 1e-7
+        np.testing.assert_allclose(
+            np.asarray(s.graph.vertex_data["rank"]), exact, atol=1e-5)
+
+
+def test_fifo_scheduler_serves_oldest_first():
+    """With no rescheduling, FIFO at k=1 drains the initial queue in id
+    order; re-entering vertices go to the back of the queue."""
+    st_, _ = GraphStructure.from_edges([0, 1, 2, 3], [1, 2, 3, 4], 5)
+    prog = PageRankProgram(0.15, 5)
+    f = FifoScheduler(prog, st_, TOL, pipeline_length=1, serializable=False)
+    prio = jnp.asarray([1.0, 1.0, 1.0, 0.0, 0.0])
+    sched = f.init(prio)
+    order = []
+    for _ in range(3):
+        mask, sched = f.select(sched, prio)
+        order.append(int(np.asarray(mask).nonzero()[0][0]))
+        prio, sched = f.reschedule(sched, prio, mask,
+                                   jnp.zeros(5, jnp.float32))
+    assert order == [0, 1, 2]
+    # 0 re-enters at round 5 while 4 has waited since round 2: FIFO serves
+    # the older entry first even though 0 has the lower id
+    prio = prio.at[0].set(1.0).at[4].set(1.0)
+    enq = np.asarray(sched["enq"]).copy()
+    enq[0], enq[4] = 5, 2
+    sched = {"enq": jnp.asarray(enq), "clock": sched["clock"]}
+    mask, _ = f.select(sched, prio)
+    assert int(np.asarray(mask).nonzero()[0][0]) == 4
