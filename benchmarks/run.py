@@ -18,6 +18,7 @@ import time
 from benchmarks import gas_bench
 from benchmarks import paper_figures as pf
 from benchmarks import pipeline_bench
+from benchmarks import snapshot_bench
 
 HARNESSES = {
     "fig1a": pf.fig1a_async_vs_sync_convergence,
@@ -30,6 +31,7 @@ HARNESSES = {
     "table2": pf.table2_throughput,
     "gas": gas_bench.gas_microbenchmark,
     "pipeline": pipeline_bench.pipeline_sweep,
+    "snapshot": snapshot_bench.snapshot_overhead,
 }
 
 

@@ -54,7 +54,11 @@ def checkpointing_worth_it(job_length_s: float, t_checkpoint_s: float,
     return young_interval(t_checkpoint_s, t_mtbf_node_s, n_nodes) < job_length_s
 
 
-def _flatten_with_paths(tree: Pytree) -> Dict[str, np.ndarray]:
+def flatten_with_paths(tree: Pytree) -> Dict[str, np.ndarray]:
+    """Leaves keyed by their slash-joined tree path, in ``tree_flatten``
+    leaf order.  The one path→key rule of the checkpoint layer: the
+    trainer journals, the sharded snapshot journals (dist/snapshot.py) and
+    both restore paths all go through it, so keys always round-trip."""
     flat: Dict[str, np.ndarray] = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
@@ -86,12 +90,49 @@ class CheckpointManager:
     # -- public API -------------------------------------------------------------
     def save(self, step: int, state: Pytree, blocking: bool = False) -> None:
         """Capture at the barrier (host copy), journal in the background."""
-        flat = _flatten_with_paths(state)  # device->host: the only sync part
+        flat = flatten_with_paths(state)  # device->host: the only sync part
         treedef = jax.tree_util.tree_structure(state)
         if self.async_writes and not blocking:
-            self._q.put((step, flat, str(treedef)))
+            self._q.put((self._write, (step, flat, str(treedef))))
         else:
             self._write(step, flat, str(treedef))
+
+    def save_shards(self, step: int, shards: List[Dict[str, np.ndarray]],
+                    blocking: bool = False) -> None:
+        """Per-machine journals (paper Sec. 4.3's "each machine
+        incrementally flushes to the DFS"): ``shard_<m>.npz`` per entry
+        under one ``ckpt_<step>`` directory, committed atomically — a
+        crash mid-write leaves only an invisible tmp directory, never a
+        torn checkpoint a restore could select."""
+        flats = [{k: np.asarray(v) for k, v in shard.items()}
+                 for shard in shards]  # host copy: the only sync part
+        if self.async_writes and not blocking:
+            self._q.put((self._write_shards, (step, flats)))
+        else:
+            self._write_shards(step, flats)
+
+    def restore_shards(self, step: Optional[int] = None
+                       ) -> Tuple[int, List[Dict[str, np.ndarray]]]:
+        """Loads every shard journal of the latest (or given) committed
+        checkpoint.  The shard count is whatever was written — restoring
+        onto a different machine count is the caller's re-shard problem
+        (dist/snapshot.py stitches via the embedded gid maps)."""
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(
+                f"no committed checkpoint in {self.directory}")
+        path = os.path.join(self.directory, f"ckpt_{step:010d}")
+        names = sorted(n for n in os.listdir(path)
+                       if n.startswith("shard_") and n.endswith(".npz"))
+        if not names:
+            raise FileNotFoundError(f"no shard journals in {path}")
+        shards = []
+        for name in names:
+            with np.load(os.path.join(path, name)) as z:
+                shards.append({k: z[k] for k in z.files})
+        return step, shards
 
     def wait(self) -> None:
         """Drain pending async writes (call before exit / before restore)."""
@@ -123,44 +164,42 @@ class CheckpointManager:
         path = os.path.join(self.directory, f"ckpt_{step:010d}",
                             f"shard_{self.process_index:05d}.npz")
         z = np.load(path)
-        flat_like = _flatten_with_paths(like)
         restored = {}
-        for key in flat_like:
+        for key in flatten_with_paths(like):
             zkey = key.replace("/", "__")
             if zkey not in z:
                 raise KeyError(f"checkpoint missing leaf {key}")
             restored[key] = z[zkey]
         leaves_like, treedef = jax.tree_util.tree_flatten(like)
-        paths = [
-            "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in pth)
-            for pth, _ in jax.tree_util.tree_flatten_with_path(like)[0]
-        ]
+        # flatten_with_paths iterates in tree_flatten leaf order
         new_leaves = [restored[p].astype(np.asarray(l).dtype)
-                      for p, l in zip(paths, leaves_like)]
+                      for p, l in zip(restored, leaves_like)]
         return step, jax.tree_util.tree_unflatten(treedef, new_leaves)
 
     # -- internals ----------------------------------------------------------------
     def _loop(self) -> None:
         while True:
-            item = self._q.get()
+            fn, args = self._q.get()
             try:
-                self._write(*item)
+                fn(*args)
             except BaseException as e:  # surfaced on wait()
                 self._errors.append(e)
             finally:
                 self._q.task_done()
 
-    def _write(self, step: int, flat: Dict[str, np.ndarray],
-               treedef: str) -> None:
+    def _commit_dir(self, step: int, payload_fn) -> None:
+        """The atomic-commit protocol, shared by both journal layouts:
+        ``payload_fn(tmp_dir) -> meta dict`` writes the shard files into a
+        hidden tmp directory; meta.json + the COMMITTED marker land there
+        too, then one rename makes the checkpoint visible.  Any failure
+        (including mid-payload) removes the tmp dir — a torn checkpoint is
+        never visible."""
         final = os.path.join(self.directory, f"ckpt_{step:010d}")
         tmp = tempfile.mkdtemp(dir=self.directory, prefix=".tmp_ckpt_")
         try:
-            np.savez(
-                os.path.join(tmp, f"shard_{self.process_index:05d}.npz"),
-                **{k.replace("/", "__"): v for k, v in flat.items()})
+            meta = payload_fn(tmp)
             with open(os.path.join(tmp, "meta.json"), "w") as f:
-                json.dump({"step": step, "treedef": treedef,
-                           "time": time.time()}, f)
+                json.dump({"step": step, "time": time.time(), **meta}, f)
             with open(os.path.join(tmp, "COMMITTED"), "w") as f:
                 f.write("ok")
             if os.path.exists(final):
@@ -170,6 +209,25 @@ class CheckpointManager:
             shutil.rmtree(tmp, ignore_errors=True)
             raise
         self._gc()
+
+    def _write(self, step: int, flat: Dict[str, np.ndarray],
+               treedef: str) -> None:
+        def payload(tmp: str) -> Dict:
+            np.savez(
+                os.path.join(tmp, f"shard_{self.process_index:05d}.npz"),
+                **{k.replace("/", "__"): v for k, v in flat.items()})
+            return {"treedef": treedef}
+
+        self._commit_dir(step, payload)
+
+    def _write_shards(self, step: int,
+                      flats: List[Dict[str, np.ndarray]]) -> None:
+        def payload(tmp: str) -> Dict:
+            for m, flat in enumerate(flats):
+                np.savez(os.path.join(tmp, f"shard_{m:05d}.npz"), **flat)
+            return {"n_shards": len(flats)}
+
+        self._commit_dir(step, payload)
 
     def _gc(self) -> None:
         steps = self.all_steps()

@@ -191,6 +191,25 @@ def marker_wave(pending: jnp.ndarray, done: jnp.ndarray, structure
     return frontier, jnp.logical_or(pending, reached)
 
 
+def marker_wave_local(marked_src: jnp.ndarray, pending: jnp.ndarray,
+                      senders_local: jnp.ndarray, recv_idx: jnp.ndarray,
+                      n_out: int) -> jnp.ndarray:
+    """One hop of the marker wave over a machine's *local* edge tables —
+    the shard_map half of ``marker_wave`` (dist/snapshot.py).
+
+    ``marked_src`` indexes own+ghost rows (sources newly marked this step:
+    the local frontier plus markers that just arrived over the ghost
+    channels); receivers of a newly marked source become pending.  Pad edge
+    rows must route to segment ``n_out`` via ``recv_idx``.  Only the
+    sender→receiver direction floods here: the reverse hop rides the
+    reverse edge, so the distributed wave requires a symmetrized structure
+    (enforced by ``ShardEngineBase.start_snapshot``)."""
+    reached = jax.ops.segment_max(
+        marked_src[senders_local].astype(jnp.int32), recv_idx,
+        num_segments=n_out + 1)[:n_out] > 0
+    return jnp.logical_or(pending, reached)
+
+
 # ---------------------------------------------------------------------------
 # The Scheduler API
 # ---------------------------------------------------------------------------

@@ -37,6 +37,38 @@ from repro.core.scheduler import marker_wave
 Pytree = Any
 
 
+def capture_rows(saved: Pytree, live: Pytree, new_mask: jnp.ndarray) -> Pytree:
+    """First-capture-wins row copy: rows entering ``new_mask`` take their
+    *current* live value, previously captured rows are left untouched.
+
+    This is the single capture primitive of the fault-tolerance layer
+    (DESIGN.md §3.10): the local snapshot update uses it for frontier
+    scopes and owned out-edges; the distributed marker phase
+    (dist/snapshot.py) uses it for the same plus the channel-state capture
+    at marker arrival."""
+
+    def one(s, l):
+        m = new_mask.reshape((-1,) + (1,) * (l.ndim - 1))
+        return jnp.where(m, l, s)
+
+    return jax.tree.map(one, saved, live)
+
+
+def stitch_rows(rows: Pytree, gid: np.ndarray, n: int) -> Pytree:
+    """Scatter machine-major padded rows back to global order: row i lands
+    at ``gid[i]``; pad rows (gid < 0) are dropped.  Shared by the engine
+    readback, snapshot assembly, and the sharded-journal restore path."""
+    ok = np.asarray(gid) >= 0
+
+    def one(x):
+        x = np.asarray(x)
+        out = np.zeros((n,) + x.shape[1:], x.dtype)
+        out[gid[ok]] = x[ok]
+        return out
+
+    return jax.tree.map(one, rows)
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class SnapshotState:
@@ -79,20 +111,11 @@ def _snapshot_update(snap: SnapshotState, graph: DataGraph,
     senders = jnp.asarray(st.senders)
     frontier, pending = marker_wave(snap.pending, snap.done, st)
 
-    def _save_v(saved, live):
-        m = frontier.reshape((-1,) + (1,) * (live.ndim - 1))
-        return jnp.where(m, live, saved)
-
-    saved_v = jax.tree.map(_save_v, snap.saved_v, graph.vertex_data)
+    saved_v = capture_rows(snap.saved_v, graph.vertex_data, frontier)
 
     e_front = frontier[senders]
     e_new = jnp.logical_and(e_front, jnp.logical_not(snap.saved_e_mask))
-
-    def _save_e(saved, live):
-        m = e_new.reshape((-1,) + (1,) * (live.ndim - 1))
-        return jnp.where(m, live, saved)
-
-    saved_e = jax.tree.map(_save_e, snap.saved_e, graph.edge_data)
+    saved_e = capture_rows(snap.saved_e, graph.edge_data, e_new)
 
     done = jnp.logical_or(snap.done, frontier)
     save_step = jnp.where(frontier, step, snap.save_step)

@@ -17,9 +17,15 @@ from repro.dist.sharding import (AxisRules, SERVE_RULES, TRAIN_RULES,
                                  logical_spec, shard_constraint)
 from repro.dist.engine import DistState, DistributedEngine, ShardEngineBase
 from repro.dist.locking import DistributedLockingEngine
+from repro.dist.snapshot import (DistSnapshotDriver, DistSnapshotState,
+                                 load_snapshot, save_snapshot,
+                                 snapshot_from_journals)
+from repro.dist.faults import kill_machine, run_kill_restore
 
 __all__ = [
-    "AxisRules", "DistState", "DistributedEngine",
-    "DistributedLockingEngine", "SERVE_RULES", "ShardEngineBase",
-    "TRAIN_RULES", "logical_spec", "shard_constraint",
+    "AxisRules", "DistState", "DistSnapshotDriver", "DistSnapshotState",
+    "DistributedEngine", "DistributedLockingEngine", "SERVE_RULES",
+    "ShardEngineBase", "TRAIN_RULES", "kill_machine", "load_snapshot",
+    "logical_spec", "run_kill_restore", "save_snapshot",
+    "shard_constraint", "snapshot_from_journals",
 ]

@@ -48,7 +48,11 @@ from jax.sharding import PartitionSpec as P
 from repro.core.coloring import coloring_for
 from repro.core.graph import DataGraph, csr_block_offsets, segment_combine
 from repro.core.scheduler import sweep_mask
+from repro.core.snapshot import SnapshotState, stitch_rows
 from repro.dist.compat import shard_map
+from repro.dist.snapshot import (assemble_snapshot as _assemble_snapshot,
+                                 init_dist_snapshot, make_marker_phase,
+                                 mark_stale)
 from repro.core.partition import overpartition, place_vertices
 from repro.core.update import (EdgeCtx, VertexProgram, fused_edge_weight,
                                fused_gather_leaves, masked_update,
@@ -75,6 +79,7 @@ class DistState:
     traffic_e: jnp.ndarray  # [S] i32 — ghost edge rows actually shipped
     traffic_r: jnp.ndarray  # [S] i32 — arbitration rank rows shipped
     step_index: jnp.ndarray  # scalar i32
+    snap: Pytree = None     # DistSnapshotState while a snapshot is live
 
     def replace(self, **kw) -> "DistState":
         return dataclasses.replace(self, **kw)
@@ -386,7 +391,8 @@ class ShardEngineBase:
             traffic_v=put(np.zeros(S, np.int32)),
             traffic_e=put(np.zeros(S, np.int32)),
             traffic_r=put(np.zeros(S, np.int32)),
-            step_index=jax.device_put(jnp.zeros((), jnp.int32), self._rep))
+            step_index=jax.device_put(jnp.zeros((), jnp.int32), self._rep),
+            snap=None)
 
     # -- the shared phase machinery -------------------------------------------
     def _make_phase_helpers(self):
@@ -400,7 +406,10 @@ class ShardEngineBase:
         active mask: local gather⊕combine → apply → versioned vdata/contrib
         exchange → reschedule (losers keep their priority untouched) →
         adjacent-edge writes with their own versioned exchange.  ``carry``
-        is the dict {vown, vghost, edata, eghost, prio, count, tv, te}.
+        is the dict {vown, vghost, edata, eghost, prio, count, tv, te,
+        snap}; with a live snapshot attached, every phase also records
+        which rows now carry post-snapshot data (``mark_stale`` —
+        DESIGN.md §3.10's machine-checked consistency accounting).
         """
         lay, prog = self.layout, self.program
         S, n_loc, B = lay.n_machines, lay.n_loc, lay.budget
@@ -519,6 +528,13 @@ class ShardEngineBase:
             vghost = jax.tree.map(_merge, vghost, recv["v"])
             ghost_contrib = jnp.where(recv_ch, recv["contrib"], 0.0)
 
+            # live snapshot: record post-cut rows (updated-after-save own
+            # rows, rows arriving from already-saved remote vertices)
+            # BEFORE any later capture could read them
+            snap = carry["snap"]
+            if snap is not None:
+                snap = mark_stale(snap, active, recv_ch)
+
             # T ← (T \ executed) ∪ T': winners consume their priority,
             # losers/remotes keep theirs (a still-queued lock request)
             prio = jnp.where(active, 0.0, prio)
@@ -561,20 +577,40 @@ class ShardEngineBase:
 
             count = count + active.astype(jnp.int32)
             return dict(vown=vown, vghost=vghost, edata=edata, eghost=eghost,
-                        prio=prio, count=count, tv=tv, te=te)
+                        prio=prio, count=count, tv=tv, te=te, snap=snap)
 
         return exchange, phase_update
 
     def _wrap_step(self, body):
         """shard_map-wraps a ``body(state, tables) -> state`` and appends
-        the replicated step-index bump."""
+        the replicated step-index bump.
+
+        When a snapshot is live (``state.snap`` is a ``DistSnapshotState``
+        rather than None — a trace-time distinction), the Chandy-Lamport
+        marker phase runs first, as the paper's prioritized snapshot
+        update (Alg. 5): scope + channel-state capture and the marker
+        exchange all precede the step's regular phases, so captures read
+        pre-step values and post-cut rows can never enter a saved scope.
+        The ``snap=spec`` entry is a pytree prefix: zero leaves when snap
+        is None, all machine-sharded rows otherwise."""
         spec = P(self.axis)
+        marker_phase = make_marker_phase(
+            self._make_phase_helpers()[0], self.layout.n_loc,
+            self.layout.budget)
+
+        def full_body(state: DistState, tb) -> DistState:
+            if state.snap is not None:
+                state = state.replace(snap=marker_phase(
+                    tb, state.snap, state.vown, state.edata,
+                    state.step_index))
+            return body(state, tb)
+
         state_specs = DistState(
             vown=spec, vghost=spec, edata=spec, eghost=spec, prio=spec,
             update_count=spec, traffic_v=spec, traffic_e=spec,
-            traffic_r=spec, step_index=P())
+            traffic_r=spec, step_index=P(), snap=spec)
         sharded = shard_map(
-            body, mesh=self.mesh,
+            full_body, mesh=self.mesh,
             in_specs=(state_specs, spec), out_specs=state_specs,
             check_vma=False)
 
@@ -606,20 +642,85 @@ class ShardEngineBase:
             })
         return state, trace
 
+    # -- snapshots (paper Sec. 4.3; DESIGN.md §3.10) ---------------------------
+    def start_snapshot(self, state: DistState,
+                       initiators=(0,)) -> DistState:
+        """Attaches a fresh Chandy-Lamport snapshot: the next ``step``
+        runs the prioritized marker phase with the given initiator
+        vertices' scopes as the first frontier.  Markers flood the
+        sender→receiver direction of the local edge tables plus the ghost
+        channels, so reaching every vertex requires a symmetrized
+        structure (the reverse hop rides the reverse edge — same
+        requirement, and same error, as the locking engine's
+        arbitration)."""
+        if state.snap is not None:
+            raise ValueError("a snapshot is already in flight; clear or "
+                             "complete it first")
+        if not self.graph.structure.is_symmetric():
+            raise ValueError(
+                "distributed snapshot markers flood via reverse edges: "
+                "the structure must be symmetrized (every edge's reverse "
+                "present) or the wave cannot reach every vertex")
+        lay = self.layout
+        rows = lay.row_of[np.asarray(list(initiators), np.int64)]
+        pending = np.zeros(lay.n_machines * lay.n_loc, bool)
+        pending[rows] = True
+        snap = init_dist_snapshot(
+            jnp.asarray(pending), state.vown, state.edata,
+            e_rows=lay.n_machines * lay.e_loc,
+            g_rows=lay.n_machines * (lay.n_machines * lay.budget),
+            n_machines=lay.n_machines)
+        put = lambda t: jax.tree.map(
+            lambda x: jax.device_put(x, self._shard), t)
+        return state.replace(snap=put(snap))
+
+    def clear_snapshot(self, state: DistState) -> DistState:
+        """Detaches the snapshot state (after journaling a completed cut
+        — or to abandon one); subsequent steps skip the marker phase."""
+        return state.replace(snap=None)
+
+    def snapshot_complete(self, state: DistState) -> bool:
+        """All owned vertex scopes saved (pad rows don't count)."""
+        if state.snap is None:
+            return False
+        done = np.asarray(state.snap.done)
+        return bool(np.all(done | ~self.layout.tables["own_mask"]))
+
+    def snapshot_done_frac(self, state: DistState) -> float:
+        if state.snap is None:
+            return 0.0
+        own = self.layout.tables["own_mask"]
+        return float(np.asarray(state.snap.done)[own].mean())
+
+    def snapshot_violations(self, state: DistState) -> int:
+        """Post-snapshot rows read by a capture — 0 iff the saved cut is
+        consistent (the machine-checked invariant)."""
+        if state.snap is None:
+            return 0
+        return int(np.asarray(state.snap.violations).sum())
+
+    def marker_rows_sent(self, state: DistState) -> int:
+        """Marker rows shipped over the ghost channels; bounded by
+        ``total_ghost_slots`` (each pair ships its marker at most once)."""
+        if state.snap is None:
+            return 0
+        return int(np.asarray(state.snap.traffic_m).sum())
+
+    def assemble_snapshot(self, state: DistState) -> SnapshotState:
+        """The sharded cut stitched to a global ``SnapshotState`` —
+        ``core.snapshot.restore_engine_state`` restarts any engine (any
+        mesh shape) from it."""
+        if state.snap is None:
+            raise ValueError("no snapshot attached")
+        st = self.graph.structure
+        return _assemble_snapshot(self.layout, state.snap, st.n_vertices,
+                                  st.n_edges)
+
     # -- readback -------------------------------------------------------------
     def vertex_data(self, state: DistState) -> Pytree:
         """Owned rows stitched back to global vertex order [N, ...]."""
-        lay = self.layout
-        ok = lay.own_gid >= 0
-
-        def one(x):
-            x = np.asarray(x)
-            out = np.zeros((self.graph.structure.n_vertices,) + x.shape[1:],
-                           x.dtype)
-            out[lay.own_gid[ok]] = x[ok]
-            return out
-
-        return jax.tree.map(one, state.vown)
+        return stitch_rows(state.vown, self.layout.own_gid,
+                           self.graph.structure.n_vertices)
 
     def ghost_rows_sent(self, state: DistState) -> int:
         return int(np.asarray(state.traffic_v).sum())
@@ -679,7 +780,8 @@ class DistributedEngine(ShardEngineBase):
             carry = dict(vown=state.vown, vghost=state.vghost,
                          edata=state.edata, eghost=state.eghost,
                          prio=state.prio, count=state.update_count,
-                         tv=state.traffic_v, te=state.traffic_e)
+                         tv=state.traffic_v, te=state.traffic_e,
+                         snap=state.snap)
             for c in range(num_colors):
                 active = jnp.logical_and(
                     tb["own_mask"],
@@ -691,6 +793,6 @@ class DistributedEngine(ShardEngineBase):
                 prio=carry["prio"], update_count=carry["count"],
                 traffic_v=carry["tv"], traffic_e=carry["te"],
                 traffic_r=state.traffic_r,
-                step_index=state.step_index)
+                step_index=state.step_index, snap=carry["snap"])
 
         return self._wrap_step(body)

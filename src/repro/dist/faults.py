@@ -1,0 +1,144 @@
+"""Failure injection + recovery for the sharded engines (paper Sec. 4.3;
+DESIGN.md §3.10).
+
+The paper's recovery story: machines journal asynchronous Chandy-Lamport
+snapshots to a distributed filesystem; when a machine is lost, the cluster
+restores the latest complete snapshot and resumes — possibly on fewer
+machines, since the two-phase atom placement re-shards the same atom set
+onto whatever cluster remains.
+
+``kill_machine`` is the fault: machine m's shard of every row-sharded
+leaf — owned vertex data, ghost caches, edge rows, the scheduler's
+priority block, its traffic counters — is destroyed (NaN-poisoned for
+floats, zeroed otherwise, so the loss is loud rather than silent), and any
+in-flight snapshot dies with it (a marker wave cannot complete through a
+dead machine).
+
+``run_kill_restore`` is the full chaos scenario used by
+tests/test_faults.py and CI's deterministic chaos step: run with the
+Young-interval snapshot driver journaling cuts through a
+``CheckpointManager``, kill a (seed-chosen) machine mid-run, restore the
+latest committed journal set — onto the same engine, or onto
+``restore_engine`` built over a smaller mesh for the elastic 4→2 path —
+and reconverge.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core.snapshot import restore_engine_state
+from repro.dist.engine import DistState, ShardEngineBase
+from repro.dist.snapshot import load_snapshot, save_snapshot
+
+
+def kill_machine(engine: ShardEngineBase, state: DistState,
+                 machine: int) -> DistState:
+    """Simulates the loss of one machine: every leaf block that machine
+    owned is destroyed in place.  Returns the surviving (broken) state —
+    recovery must come from a journaled snapshot, not from this."""
+    S = engine.layout.n_machines
+    if not 0 <= machine < S:
+        raise ValueError(f"machine {machine} out of range (S={S})")
+
+    def destroy(tree):
+        def one(x):
+            x = np.asarray(x).copy()
+            per = x.shape[0] // S
+            blk = x[machine * per:(machine + 1) * per]
+            if np.issubdtype(x.dtype, np.floating):
+                blk[...] = np.nan
+            else:
+                blk[...] = 0
+            return jax.device_put(jnp.asarray(x), engine._shard)
+
+        return jax.tree.map(one, tree)
+
+    return state.replace(
+        vown=destroy(state.vown), vghost=destroy(state.vghost),
+        edata=destroy(state.edata), eghost=destroy(state.eghost),
+        prio=destroy(state.prio), update_count=destroy(state.update_count),
+        traffic_v=destroy(state.traffic_v),
+        traffic_e=destroy(state.traffic_e),
+        traffic_r=destroy(state.traffic_r),
+        snap=None)  # the in-flight wave died with the machine
+
+
+def machine_data_lost(engine: ShardEngineBase, state: DistState,
+                      machine: int) -> bool:
+    """True iff the machine's owned float vertex rows are NaN-poisoned —
+    the loud evidence ``kill_machine`` leaves behind."""
+    S, n_loc = engine.layout.n_machines, engine.layout.n_loc
+    own = engine.layout.tables["own_mask"].reshape(S, n_loc)[machine]
+    for leaf in jax.tree.leaves(state.vown):
+        x = np.asarray(leaf).reshape((S, n_loc) + np.asarray(leaf).shape[1:])
+        if np.issubdtype(x.dtype, np.floating) and own.any():
+            if not np.isnan(x[machine][own]).all():
+                return False
+    return True
+
+
+def run_kill_restore(
+    engine: ShardEngineBase,
+    manager: CheckpointManager,
+    *,
+    kill_step: int,
+    machine: Optional[int] = None,
+    seed: int = 0,
+    snapshot_at: int = 1,
+    initiators: Sequence[int] = (0,),
+    restore_engine: Optional[ShardEngineBase] = None,
+    max_steps: int = 5000,
+) -> Tuple[ShardEngineBase, DistState, Dict[str, int]]:
+    """The chaos scenario end to end.
+
+    Phase 1 runs ``engine`` with an asynchronous snapshot started at
+    ``snapshot_at`` and journaled through ``manager`` on completion.
+    Phase 2, at ``kill_step``, destroys one machine's shard (seed-chosen
+    when ``machine`` is None — CI pins the seed for determinism).  Phase 3
+    restores the latest committed journal set onto ``restore_engine``
+    (default: the same engine; pass one built over a smaller mesh for
+    elastic recovery) and runs it to convergence.
+
+    Returns ``(engine_used, final_state, info)`` where info records the
+    killed machine, the snapshot step restored, and the step the fault
+    struck."""
+    rng = np.random.default_rng(seed)
+    state = engine.init()
+    journaled = False
+    for _ in range(max_steps):
+        if int(state.step_index) >= kill_step:
+            break
+        if state.snap is None and not journaled \
+                and int(state.step_index) >= snapshot_at:
+            state = engine.start_snapshot(state, initiators)
+        state = engine.step(state)
+        if state.snap is not None and engine.snapshot_complete(state):
+            save_snapshot(manager, int(state.step_index), engine, state)
+            manager.wait()
+            state = engine.clear_snapshot(state)
+            journaled = True
+    kill_at = int(state.step_index)
+    if not journaled:
+        raise RuntimeError(
+            f"no snapshot completed before the fault at step {kill_at}; "
+            f"move kill_step later or snapshot_at earlier")
+
+    if machine is None:
+        machine = int(rng.integers(engine.layout.n_machines))
+    state = kill_machine(engine, state, machine)
+    assert machine_data_lost(engine, state, machine)
+
+    target = restore_engine if restore_engine is not None else engine
+    restored_step, cut = load_snapshot(manager, target.graph)
+    restored = restore_engine_state(target, target.graph, cut)
+    final, _ = target.run(restored, max_steps=max_steps)
+    return target, final, {
+        "killed_machine": int(machine),
+        "kill_step": kill_at,
+        "restored_step": int(restored_step),
+    }

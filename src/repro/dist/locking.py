@@ -101,7 +101,8 @@ class DistributedLockingEngine(ShardEngineBase):
             carry = dict(vown=state.vown, vghost=state.vghost,
                          edata=state.edata, eghost=state.eghost,
                          prio=state.prio, count=state.update_count,
-                         tv=state.traffic_v, te=state.traffic_e)
+                         tv=state.traffic_v, te=state.traffic_e,
+                         snap=state.snap)
             tr = state.traffic_r
 
             # -- per-machine pipeline: top-p of the local queue ------------
@@ -169,6 +170,7 @@ class DistributedLockingEngine(ShardEngineBase):
                 edata=carry["edata"], eghost=carry["eghost"],
                 prio=carry["prio"], update_count=carry["count"],
                 traffic_v=carry["tv"], traffic_e=carry["te"],
-                traffic_r=tr, step_index=state.step_index)
+                traffic_r=tr, step_index=state.step_index,
+                snap=carry["snap"])
 
         return self._wrap_step(body)

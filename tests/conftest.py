@@ -94,6 +94,19 @@ def cpu_mesh():
 
 
 @pytest.fixture(scope="session")
+def sub_mesh():
+    """Builder for a (data=n, model=1) mesh over the first n forced host
+    devices — the elastic-restore tests shrink the machine count with it."""
+    import jax
+
+    def make(n_machines):
+        devs = np.asarray(jax.devices()[:n_machines]).reshape(n_machines, 1)
+        return jax.sharding.Mesh(devs, ("data", "model"))
+
+    return make
+
+
+@pytest.fixture(scope="session")
 def small_power_law():
     """A ~200-vertex power-law graph shared across distributed tests."""
     from repro.graphs.generators import power_law_graph

@@ -1,0 +1,171 @@
+"""Distributed Chandy-Lamport snapshot (dist/snapshot.py; ISSUE 4 tentpole).
+
+The consistent-cut invariants, machine-checked across machine boundaries
+(paper Sec. 4.3, Alg. 5):
+
+  - wave property: for every edge (u, v) — including every edge crossing a
+    machine boundary — ``save_step[u] <= save_step[v] + 1``;
+  - single save + completeness: every vertex saved exactly once, every
+    edge captured;
+  - channel consistency: no post-snapshot ghost row is ever merged into a
+    saved scope (the engine's ``violations`` counter stays 0 — the
+    run-time stale-row accounting of DESIGN.md §3.10);
+  - markers ride the versioned ghost tables: each (vertex, caching
+    machine) pair ships its marker at most once, and a completed snapshot
+    ships nothing.
+
+Property-tested over random graphs × mesh shapes (2 and 4 machines) ×
+initiator sets, on both distributed engines.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.apps.pagerank import PageRankProgram, make_pagerank_graph
+from repro.core import ChromaticEngine
+from repro.core.graph import GraphStructure
+from repro.core.snapshot import restore_engine_state
+from repro.dist.engine import DistributedEngine
+from repro.dist.locking import DistributedLockingEngine
+from repro.graphs.generators import connected_power_law_graph as \
+    connected_graph
+
+pytestmark = pytest.mark.skipif(
+    jax.device_count() < 4, reason="needs 4 forced host devices "
+    "(XLA_FLAGS=--xla_force_host_platform_device_count=4)")
+
+
+def run_snapshot_to_completion(eng, state, initiators, max_steps=200):
+    state = eng.start_snapshot(state, initiators)
+    for _ in range(max_steps):
+        state = eng.step(state)
+        if eng.snapshot_complete(state):
+            return state
+    raise AssertionError("snapshot did not complete")
+
+
+def check_cut_invariants(eng, state, struct):
+    """The machine-checked consistent-cut bundle (see module docstring)."""
+    cut = eng.assemble_snapshot(state)
+    steps = np.asarray(cut.save_step)
+    assert (steps >= 0).all(), "some vertex never saved"
+    assert bool(np.asarray(cut.done).all())
+    s, r = struct.senders, struct.receivers
+    assert (steps[s] <= steps[r] + 1).all() and \
+        (steps[r] <= steps[s] + 1).all(), "marker wave skipped a neighbor"
+    # the cross-boundary half specifically (the distributed claim)
+    machine_of = eng.layout.machine_of
+    cross = machine_of[s] != machine_of[r]
+    if cross.any():
+        assert (steps[s[cross]] <= steps[r[cross]] + 1).all(), \
+            "wave property broken across a machine boundary"
+    assert bool(jnp.all(cut.saved_e_mask)), "some edge not captured"
+    assert eng.snapshot_violations(state) == 0, \
+        "a post-snapshot row was merged into a saved scope"
+    return cut
+
+
+class TestDistributedCutProperty:
+    @settings(max_examples=5, deadline=None)
+    @given(n=st.integers(16, 70), seed=st.integers(0, 10**6),
+           n_machines=st.sampled_from([2, 4]),
+           n_init=st.integers(1, 3))
+    def test_consistent_cut_invariant(self, sub_mesh, n, seed, n_machines,
+                                      n_init):
+        """Random graphs × mesh shapes × initiator sets: the distributed
+        wave + channel-capture invariants all hold."""
+        struct = connected_graph(n, seed)
+        g = make_pagerank_graph(struct)
+        prog = PageRankProgram(0.15, n)
+        eng = DistributedEngine(prog, g, sub_mesh(n_machines),
+                                tolerance=1e-9, seed=seed % 13)
+        rng = np.random.default_rng(seed)
+        initiators = rng.choice(n, size=min(n_init, n), replace=False)
+        state = eng.step(eng.init())  # snapshot starts mid-run
+        state = run_snapshot_to_completion(eng, state, initiators)
+        check_cut_invariants(eng, state, struct)
+
+    def test_locking_engine_cut(self, cpu_mesh):
+        """Same invariants under the pipelined-locking schedule, where the
+        marker phase interleaves with rank arbitration exchanges."""
+        n = 60
+        struct = connected_graph(n, 11)
+        g = make_pagerank_graph(struct)
+        prog = PageRankProgram(0.15, n)
+        eng = DistributedLockingEngine(prog, g, cpu_mesh,
+                                       pipeline_length=8, tolerance=1e-9)
+        state = eng.step(eng.init())
+        state = run_snapshot_to_completion(eng, state, (0, n - 1))
+        check_cut_invariants(eng, state, struct)
+
+
+class TestMarkerTraffic:
+    def test_markers_are_versioned(self, cpu_mesh):
+        """A marker is an empty-payload versioned row: each (vertex,
+        caching machine) pair ships one at most once, and a completed
+        snapshot ships none."""
+        n = 80
+        struct = connected_graph(n, 5)
+        g = make_pagerank_graph(struct)
+        prog = PageRankProgram(0.15, n)
+        eng = DistributedEngine(prog, g, cpu_mesh, tolerance=1e-9)
+        state = run_snapshot_to_completion(eng, eng.init(), (0,))
+        sent = eng.marker_rows_sent(state)
+        assert 0 < sent <= eng.total_ghost_slots()
+        state = eng.step(state)  # wave finished: no frontier, no markers
+        assert eng.marker_rows_sent(state) == sent
+
+    def test_asymmetric_structure_rejected(self, cpu_mesh):
+        st_, _ = GraphStructure.from_edges([0, 1, 2], [1, 2, 3], 8)
+        g = make_pagerank_graph(st_)
+        eng = DistributedEngine(PageRankProgram(0.15, 8), g, cpu_mesh)
+        with pytest.raises(ValueError, match="symmetrized"):
+            eng.start_snapshot(eng.init())
+
+
+class TestRestartEquivalence:
+    def test_restore_matches_uninterrupted_and_local_cut(self, cpu_mesh):
+        """The assembled distributed cut restarts any engine to the same
+        fixed point as the uninterrupted run — and the cut is a valid
+        ``SnapshotState`` for the *local* engines too (shared
+        wave/capture primitives, DESIGN.md §3.10)."""
+        n = 80
+        struct = connected_graph(n, 3)
+        g = make_pagerank_graph(struct)
+        prog = PageRankProgram(0.15, n)
+        eng = DistributedEngine(prog, g, cpu_mesh, tolerance=1e-9)
+        state = eng.step(eng.init())
+        state = run_snapshot_to_completion(eng, state, (0,))
+        cut = check_cut_invariants(eng, state, struct)
+        final, _ = eng.run(eng.clear_snapshot(state), max_steps=500)
+        direct = eng.vertex_data(final)["rank"]
+
+        restored, _ = eng.run(restore_engine_state(eng, g, cut),
+                              max_steps=500)
+        np.testing.assert_allclose(eng.vertex_data(restored)["rank"],
+                                   direct, atol=1e-7)
+
+        # elastic downward: the same cut restarts a shared-memory engine
+        ce = ChromaticEngine(prog, g, tolerance=1e-9)
+        cs, _ = ce.run(restore_engine_state(ce, g, cut), max_steps=500)
+        np.testing.assert_allclose(
+            np.asarray(cs.graph.vertex_data["rank"]), direct, atol=1e-7)
+
+    def test_computation_proceeds_during_snapshot(self, cpu_mesh):
+        """Fig. 4's async property at the distributed level: regular
+        updates keep accumulating while the marker wave is in flight."""
+        n = 120
+        struct = connected_graph(n, 7)
+        g = make_pagerank_graph(struct)
+        prog = PageRankProgram(0.15, n)
+        eng = DistributedEngine(prog, g, cpu_mesh, tolerance=1e-10)
+        state = eng.start_snapshot(eng.step(eng.init()), (0,))
+        updates = []
+        while not eng.snapshot_complete(state):
+            state = eng.step(state)
+            updates.append(int(np.asarray(state.update_count).sum()))
+        assert len(updates) >= 2
+        assert all(b > a for a, b in zip(updates, updates[1:])), \
+            "async snapshot flatlined the computation"

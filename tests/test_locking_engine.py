@@ -24,24 +24,12 @@ from repro.core import Consistency, DynamicEngine
 from repro.core.graph import GraphStructure
 from repro.core.snapshot import AsyncSnapshotDriver, restore_engine_state
 from repro.dist.locking import DistributedLockingEngine
-from repro.graphs.generators import power_law_graph
+from repro.graphs.generators import connected_power_law_graph as \
+    connected_graph, power_law_graph
 
 pytestmark = pytest.mark.skipif(
     jax.device_count() < 4, reason="needs 4 forced host devices "
     "(XLA_FLAGS=--xla_force_host_platform_device_count=4)")
-
-
-def connected_graph(n, seed):
-    """Marker waves flood edges; snapshot tests need a connected graph."""
-    st_ = power_law_graph(n, avg_degree=6, seed=seed)
-    u = np.arange(n - 1)
-    v = np.arange(1, n)
-    s = np.concatenate([st_.senders, u, v])
-    r = np.concatenate([st_.receivers, v, u])
-    key = np.minimum(s, r).astype(np.int64) * n + np.maximum(s, r)
-    _, idx = np.unique(key, return_index=True)
-    st2, _ = GraphStructure.undirected(s[idx], r[idx], n)
-    return st2
 
 
 class TestFixedPointParity:

@@ -14,22 +14,8 @@ from repro.checkpoint.manager import (CheckpointManager,
 from repro.core import ChromaticEngine, DynamicEngine
 from repro.core.snapshot import (AsyncSnapshotDriver, SyncSnapshotDriver,
                                  restore_engine_state)
-from repro.graphs.generators import power_law_graph
-
-
-def connected_graph(n, seed):
-    """Snapshot markers propagate along edges; use a connected graph."""
-    st_ = power_law_graph(n, avg_degree=6, seed=seed)
-    # stitch components with a path
-    u = np.arange(n - 1)
-    v = np.arange(1, n)
-    from repro.core.graph import GraphStructure
-    s = np.concatenate([st_.senders, u, v])
-    r = np.concatenate([st_.receivers, v, u])
-    key = np.minimum(s, r).astype(np.int64) * n + np.maximum(s, r)
-    _, idx = np.unique(key, return_index=True)
-    st2, _ = GraphStructure.undirected(s[idx], r[idx], n)
-    return st2
+from repro.graphs.generators import connected_power_law_graph as \
+    connected_graph
 
 
 class TestAsyncSnapshot:
