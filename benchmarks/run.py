@@ -19,6 +19,7 @@ from benchmarks import gas_bench
 from benchmarks import paper_figures as pf
 from benchmarks import pipeline_bench
 from benchmarks import snapshot_bench
+from benchmarks import stream_bench
 
 HARNESSES = {
     "fig1a": pf.fig1a_async_vs_sync_convergence,
@@ -32,6 +33,7 @@ HARNESSES = {
     "gas": gas_bench.gas_microbenchmark,
     "pipeline": pipeline_bench.pipeline_sweep,
     "snapshot": snapshot_bench.snapshot_overhead,
+    "stream": stream_bench.stream_reconvergence,
 }
 
 

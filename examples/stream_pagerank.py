@@ -1,0 +1,64 @@
+"""Evolving-web PageRank: the graph grows while the engine keeps serving.
+
+    PYTHONPATH=src python examples/stream_pagerank.py
+
+The ASYMP-shaped scenario (DESIGN.md §3.11): a web graph is converged and
+serving ranks; a new *site* — a cluster holding 10% of the web's pages —
+appears and links in.  The streaming subsystem splices the delta into the
+running engine (zero recompilations of the jitted step; only the touched
+scopes are re-scheduled) and reconverges with a fraction of the updates a
+from-scratch recompute of the grown web would cost.
+"""
+import time
+
+import numpy as np
+
+from repro.apps.pagerank import PageRankProgram
+from repro.core import Engine
+from repro.stream import (SlackConfig, apply_delta_growing,
+                          make_local_engine, readback, total_updates)
+from repro.stream.sources import pagerank_cluster_arrival
+
+TOL = 1e-6
+ALPHA = 0.8  # teleport-heavy ranking keeps perturbations local
+
+if __name__ == "__main__":
+    prefix_g, batches, full_g, in_cap = pagerank_cluster_arrival(
+        8000, growth=0.10, alpha=ALPHA, seed=0)
+    n_total = full_g.structure.n_vertices
+    prog = PageRankProgram(ALPHA, n_total)
+
+    eng, state = make_local_engine(
+        prog, prefix_g, tolerance=TOL,
+        slack=SlackConfig(vertex_frac=0.15), in_capacity=in_cap)
+    state, _ = eng.run(state, max_steps=400)
+    print(f"serving web: {prefix_g.structure.n_vertices} pages, "
+          f"{prefix_g.structure.n_edges} links, converged after "
+          f"{total_updates(eng, state)} updates")
+
+    t0 = time.time()
+    inc, recompiles, any_regrew = 0, 0, False
+    for b in batches:
+        print(f"site arrival: +{b.n_new_vertices} pages, "
+              f"+{b.n_new_edges} links")
+        eng, state, regrew = apply_delta_growing(eng, state, b)
+        any_regrew |= regrew
+        # counters re-read after splicing: a regrow returns a fresh
+        # engine whose trace/update counters start over
+        traces, base = eng._trace_count, total_updates(eng, state)
+        state, _ = eng.run(state, max_steps=400)
+        inc += total_updates(eng, state) - base
+        recompiles += eng._trace_count - traces
+    print(f"reconverged in {inc} updates, {time.time() - t0:.1f}s "
+          f"(recompilations after splicing: {recompiles})")
+
+    scratch = Engine(prog, full_g, tolerance=TOL)
+    s2, _ = scratch.run(scratch.init(full_g), max_steps=400)
+    err = np.abs(np.asarray(readback(eng, state).vertex_data["rank"])
+                 - np.asarray(s2.graph.vertex_data["rank"])).max()
+    print(f"from-scratch recompute: {int(s2.total_updates)} updates "
+          f"({int(s2.total_updates) / max(inc, 1):.1f}x more); "
+          f"fixed points agree to {err:.1e}")
+    if not any_regrew:
+        assert recompiles == 0, "delta within slack must not retrace"
+    assert err <= 1e-5

@@ -50,6 +50,7 @@ class ChromaticEngine(Engine):
         *,
         use_fused: Optional[bool] = None,
         gas_interpret: Optional[bool] = None,
+        stream_tables=None,
     ):
         if colors is None:
             colors = coloring_for(graph.structure, program.consistency)
@@ -63,12 +64,19 @@ class ChromaticEngine(Engine):
             program, graph, tolerance, sync_ops,
             scheduler=SweepScheduler(program, graph.structure, tolerance,
                                      colors),
-            use_fused=use_fused, gas_interpret=gas_interpret)
+            use_fused=use_fused, gas_interpret=gas_interpret,
+            stream_tables=stream_tables)
         self.colors = self.scheduler.colors
         self.num_colors = self.scheduler.num_phases
 
+        # Streaming mode skips the per-color edge ranges: the dynamic-
+        # tables path streams the full capacity edge set each phase (the
+        # color mask gates the write-back), since color membership of
+        # *edges* goes stale as deltas land.  The coloring itself is kept
+        # — delta edges joining same-colored vertices degrade that pair to
+        # Jacobi reads until regrow() recolors (DESIGN §3.11).
         self._color_edges: Optional[list] = None
-        if self.use_fused:
+        if self.use_fused and stream_tables is None:
             st = graph.structure
             recv_color = colors[st.receivers]
             self._color_edges = []

@@ -22,12 +22,15 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.graph import DataGraph, segment_combine
+import numpy as np
+
+from repro.core.graph import DataGraph, csr_block_offsets, segment_combine
 from repro.core.scheduler import Scheduler, SweepScheduler, reschedule_prio
 from repro.core.sync_op import SyncOp, run_syncs
-from repro.core.update import (VertexProgram, edge_ctx, fused_edge_weight,
-                               fused_gather_leaves, masked_update,
-                               supports_fused_gather)
+from repro.core.update import (EdgeCtx, VertexProgram, edge_ctx,
+                               fused_edge_weight, fused_gather_leaves,
+                               masked_update, supports_fused_gather)
+from repro.kernels.gas.gas import EDGE_BLOCK, ROW_BLOCK
 from repro.kernels.gas.ops import EdgeSet, active_row_blocks, gather_combine
 
 Pytree = Any
@@ -169,6 +172,139 @@ def fused_apply_phase(
     return graph, residual, edges_touched
 
 
+def stream_apply_phase(
+    program: VertexProgram,
+    graph: DataGraph,
+    mask: jnp.ndarray,
+    glob: Pytree,
+    tables: Dict[str, jnp.ndarray],
+    *,
+    fused_meta=None,
+    interpret: Optional[bool] = None,
+    tolerance: float = 1e-3,
+) -> Tuple[DataGraph, jnp.ndarray, jnp.ndarray, Optional[jnp.ndarray]]:
+    """``apply_phase`` over a *dynamic* edge structure (DESIGN.md §3.11).
+
+    The streaming engines trade the baked-in structure constants for the
+    ``tables`` dict of traced arrays {senders, receivers, edge_mask,
+    rev_idx, in_deg, out_deg, block_counts}: a delta batch patches the
+    table *values* (same shapes) and the jitted step never retraces.
+    Capacity (slack) edge rows carry ``edge_mask == False`` and are routed
+    to a dropped segment / zero weight, so they contribute exactly nothing.
+
+    ``fused_meta`` (from ``Engine._build_stream_fused``) carries the static
+    CSR block metadata of the capacity layout — receivers never move (slot
+    reservation per receiver), so the GAS kernel's block ranges are
+    computed once and only the senders/weights stream through the trace.
+
+    Returns ``(graph, residual, edges_touched, prio_bump)``.  For
+    edge-writing programs, ``prio_bump`` carries the *message residual*
+    scattered to each written edge's receiver (Elidan-style BP
+    scheduling): a delta edge's message jumps from its init value to a
+    real one while the writer's own residual stays zero, so without the
+    bump the reader would never re-execute and the stream would converge
+    to a stale fixed point.  ``None`` for pure-gather programs.
+    """
+    st = graph.structure
+    n = st.n_vertices
+    senders, receivers = tables["senders"], tables["receivers"]
+    emask = tables["edge_mask"]
+    e_cap = senders.shape[0]
+
+    if fused_meta is not None:
+        leaves, treedef, eblk_start, n_eblk, max_eblk, e_pad = fused_meta
+        block_active = active_row_blocks(mask)
+        snd = jnp.pad(senders, (0, e_pad - e_cap))
+        rcv = jnp.pad(receivers, (0, e_pad - e_cap),
+                      constant_values=n + ROW_BLOCK)
+        es = EdgeSet(n_vertices=n, n_edges=e_cap, senders=snd,
+                     receivers=rcv, eblk_start=eblk_start, n_eblk=n_eblk,
+                     max_eblk=max_eblk)
+        src_deg_e = tables["out_deg"][senders] if any(
+            leaf.kind == "degree_normalized_src" for leaf in leaves) else None
+        acc_leaves = []
+        for leaf in leaves:
+            feat = leaf.feature(graph.vertex_data)
+            trailing = feat.shape[1:]
+            w = fused_edge_weight(leaf, graph.edge_data, e_cap, src_deg_e)
+            w = jnp.where(emask, w, 0.0)
+            acc = gather_combine(feat.reshape(n, -1), w, es,
+                                 block_active=block_active,
+                                 interpret=interpret)
+            acc_leaves.append(acc.reshape((n,) + trailing))
+        acc = jax.tree.unflatten(treedef, acc_leaves)
+        edges_touched = jnp.sum(
+            jnp.where(block_active > 0, tables["block_counts"], 0)
+        ).astype(jnp.int32)
+    else:
+        rp = jnp.maximum(tables["rev_idx"], 0)
+        has_rev = tables["rev_idx"] >= 0
+
+        def _rev(x):
+            y = x[rp]
+            m = has_rev.reshape((-1,) + (1,) * (y.ndim - 1))
+            return jnp.where(m, y, jnp.zeros_like(y))
+
+        ctx = EdgeCtx(
+            edata=graph.edge_data,
+            rev_edata=jax.tree.map(_rev, graph.edge_data),
+            src=jax.tree.map(lambda x: x[senders], graph.vertex_data),
+            dst=jax.tree.map(lambda x: x[receivers], graph.vertex_data),
+            src_deg=tables["out_deg"][senders],
+            dst_deg=tables["in_deg"][receivers])
+        msgs = program.gather(ctx)
+        recv_idx = jnp.where(emask, receivers, n)
+        acc = segment_combine(msgs, recv_idx, n + 1, program.combiner,
+                              indices_are_sorted=False)
+        acc = jax.tree.map(lambda a: a[:n], acc)
+        edges_touched = jnp.sum(emask.astype(jnp.int32))
+
+    new_v, residual = program.apply(graph.vertex_data, acc, glob)
+    vdata = masked_update(graph.vertex_data, new_v, mask)
+    graph = graph.replace(vertex_data=vdata)
+
+    prio_bump = None
+    if program.has_edge_out:
+        assert fused_meta is None, "edge_out programs keep the dense path"
+        new_src = jax.tree.map(lambda x: x[senders], vdata)
+        src_acc = jax.tree.map(lambda a: a[senders], acc)
+        ctx2 = ctx._replace(
+            src=new_src,
+            dst=jax.tree.map(lambda x: x[receivers], vdata))
+        new_e = program.edge_out(ctx2, new_src, src_acc)
+        wmask = jnp.logical_and(mask[senders], emask)
+        prio_bump = edge_residual_bump(graph.edge_data, new_e, wmask,
+                                       receivers, emask, n, tolerance)
+        edata = masked_update(graph.edge_data, new_e, wmask)
+        graph = graph.replace(edge_data=edata)
+
+    residual = jnp.where(mask, residual.astype(jnp.float32), 0.0)
+    return graph, residual, edges_touched, prio_bump
+
+
+def edge_residual_bump(old_e: Pytree, new_e: Pytree, wmask: jnp.ndarray,
+                       receivers: jnp.ndarray, emask: jnp.ndarray,
+                       n: int, tolerance: float) -> jnp.ndarray:
+    """Per-receiver priority contribution of adjacent-edge writes: the
+    largest component change of each written edge, maxed into the vertex
+    that reads it, thresholded at the tolerance.
+
+    ``max`` rather than sum, and sub-tolerance changes dropped entirely:
+    a re-executed vertex recomputes messages that differ by a few f32
+    ulps, and summing that jitter across components/in-edges would push
+    it past the tolerance and ping-pong forever.  Super-tolerance changes
+    (a delta edge's message jumping off its init value) pass through and
+    re-schedule the reader exactly once per real change."""
+    delta = jnp.zeros(wmask.shape[0], jnp.float32)
+    for o, v in zip(jax.tree.leaves(old_e), jax.tree.leaves(new_e)):
+        d = jnp.abs(v.astype(jnp.float32) - o.astype(jnp.float32))
+        delta = jnp.maximum(delta, d.reshape(d.shape[0], -1).max(axis=1))
+    delta = jnp.where(delta > tolerance, delta, 0.0)
+    recv_idx = jnp.where(emask, receivers, n)
+    return jnp.maximum(jax.ops.segment_max(
+        jnp.where(wmask, delta, 0.0), recv_idx, n + 1), 0.0)[:n]
+
+
 # Back-compat name: the reschedule rule now lives in the scheduler
 # subsystem (core/scheduler.py, DESIGN.md §3.8).
 schedule_phase = reschedule_prio
@@ -189,6 +325,13 @@ class Engine:
     requests it but still falls back when the program is non-fuseable (the
     LBP case).  ``gas_interpret`` threads the Pallas interpret flag to the
     kernel — tests use it to exercise the real kernel body on CPU.
+
+    ``stream_tables`` (DESIGN.md §3.11, built by ``stream/ingest.py``)
+    switches the engine to *dynamic structure* mode: ``graph`` must be the
+    capacity-padded data graph of a ``StreamingGraph``, the edge arrays
+    flow through the jitted step as traced arguments instead of baked
+    constants, and ``apply_delta`` patches their values in place — zero
+    recompilations until ``regrow()``.
     """
 
     def __init__(
@@ -201,6 +344,7 @@ class Engine:
         scheduler: Optional[Scheduler] = None,
         use_fused: Optional[bool] = None,
         gas_interpret: Optional[bool] = None,
+        stream_tables: Optional[Dict[str, Any]] = None,
     ):
         self.program = program
         self.structure = graph.structure
@@ -213,12 +357,48 @@ class Engine:
         self._full_edges_cache: Optional[EdgeSet] = None
         self.scheduler = (scheduler if scheduler is not None
                           else self._make_scheduler())
+        self._tables: Optional[Dict[str, jnp.ndarray]] = None
+        self._stream_fused_meta = None
+        if stream_tables is not None:
+            if not isinstance(self.scheduler, SweepScheduler):
+                raise ValueError(
+                    "streaming supports sweep-scheduled local engines; "
+                    "dynamic/prioritized schedules stream through the dist "
+                    "engines (arbitration there reads the dynamic tables)")
+            self.set_stream_tables(stream_tables)
+            if self.use_fused:
+                self._stream_fused_meta = self._build_stream_fused()
+        self._trace_count = 0  # bumped at trace time; delta tests assert 0 new
         self._jit_step = jax.jit(self._step)
 
     def _make_scheduler(self) -> Scheduler:
         """Default schedule when none is passed: a single-color sweep
         (execute everything scheduled — the BSP/vertex-consistency case)."""
         return SweepScheduler(self.program, self.structure, self.tolerance)
+
+    # -- streaming (dynamic structure) ---------------------------------------
+    def set_stream_tables(self, tables: Dict[str, Any]) -> None:
+        """(Re)loads the dynamic structure tables after a delta batch.  The
+        treedef/shapes/dtypes never change between ``regrow()``s, so the
+        jitted step's cache entry keeps hitting."""
+        self._tables = {k: jnp.asarray(v) for k, v in tables.items()}
+
+    def _build_stream_fused(self):
+        """Static GAS metadata of the capacity layout: slot reservation per
+        receiver keeps the receiver array frozen, so the CSR block ranges
+        (and the kernel grid) are computed once, here."""
+        leaves, treedef = fused_gather_leaves(self.program)
+        st = self.structure
+        recv = np.asarray(self._tables["receivers"])
+        e_cap = recv.shape[0]
+        e_pad = max(-(-e_cap // EDGE_BLOCK), 1) * EDGE_BLOCK
+        pad_r = np.int32(st.n_vertices + ROW_BLOCK)
+        recv_p = np.pad(recv, (0, e_pad - e_cap), constant_values=pad_r)
+        with jax.ensure_compile_time_eval():
+            start, n_eblk, max_eblk = csr_block_offsets(
+                recv_p, st.n_vertices, ROW_BLOCK, EDGE_BLOCK)
+            return (leaves, treedef, jnp.asarray(start), jnp.asarray(n_eblk),
+                    int(max_eblk), int(e_pad))
 
     @property
     def _full_edges(self) -> Optional[EdgeSet]:
@@ -242,7 +422,8 @@ class Engine:
         """Prepared EdgeSet for one phase (chromatic overrides per color)."""
         return self._full_edges
 
-    def _step(self, state: EngineState) -> EngineState:
+    def _step(self, state: EngineState, tables=None) -> EngineState:
+        self._trace_count += 1
         prev_vdata = state.graph.vertex_data
         graph, prio, sched = state.graph, state.prio, state.sched
         count, total = state.update_count, state.total_updates
@@ -253,11 +434,20 @@ class Engine:
         # color count is small; the sync op runs safely between phases
         for phase in range(self.scheduler.num_phases):
             mask, sched = self.scheduler.select(sched, prio, phase)
-            graph, residual, et = apply_phase(
-                self.program, graph, mask, glob,
-                edges=self._phase_edges(phase), interpret=self.gas_interpret)
+            if tables is None:
+                graph, residual, et = apply_phase(
+                    self.program, graph, mask, glob,
+                    edges=self._phase_edges(phase),
+                    interpret=self.gas_interpret)
+            else:
+                graph, residual, et, bump = stream_apply_phase(
+                    self.program, graph, mask, glob, tables,
+                    fused_meta=self._stream_fused_meta,
+                    interpret=self.gas_interpret, tolerance=self.tolerance)
             prio, sched = self.scheduler.reschedule(sched, prio, mask,
-                                                    residual)
+                                                    residual, tables=tables)
+            if tables is not None and bump is not None:
+                prio = prio + bump
             count = count + mask.astype(jnp.int32)
             total = total + jnp.sum(mask.astype(jnp.int32))
             edges_t = edges_t + et
@@ -274,7 +464,7 @@ class Engine:
                           scheduler=self.scheduler)
 
     def step(self, state: EngineState) -> EngineState:
-        return self._jit_step(state)
+        return self._jit_step(state, self._tables)
 
     def _run_syncs(self, state: EngineState, prev_vdata) -> EngineState:
         if not self.sync_ops:
@@ -310,11 +500,16 @@ class Engine:
         return state, trace
 
     def run_while(self, state: EngineState, max_steps: int = 100) -> EngineState:
-        """Fully-jitted driver (used for lowering / production runs)."""
+        """Fully-jitted driver (used for lowering / production runs).
+
+        In streaming mode the current tables are baked into this trace —
+        a later delta needs a fresh ``run_while`` call (``run``/``step``
+        stay retrace-free; they thread the tables as arguments)."""
 
         def cond(s):
             return jnp.logical_and(
                 s.step_index < max_steps,
                 jnp.logical_not(self.scheduler.done(s.sched, s.prio)))
 
-        return jax.lax.while_loop(cond, self._step, state)
+        return jax.lax.while_loop(
+            cond, lambda s: self._step(s, self._tables), state)

@@ -169,14 +169,50 @@ def exclusion_winners(selected: jnp.ndarray, rank: jnp.ndarray, senders,
 
 
 def reschedule_prio(program, structure, prio: jnp.ndarray, mask: jnp.ndarray,
-                    residual: jnp.ndarray) -> jnp.ndarray:
+                    residual: jnp.ndarray, tables=None) -> jnp.ndarray:
     """T ← (T \\ executed) ∪ T' — executed vertices consume their priority;
-    their priority contribution is scattered to neighbors (Alg. 1 pattern)."""
+    their priority contribution is scattered to neighbors (Alg. 1 pattern).
+
+    ``tables`` (streaming engines, DESIGN.md §3.11) supplies the *dynamic*
+    edge arrays {senders, receivers, edge_mask} in place of the static
+    structure, so the scatter follows edges added after the jit trace."""
     prio = jnp.where(mask, 0.0, prio)
     if program.schedule_neighbors:
         contrib = jnp.where(mask, program.priority(residual), 0.0)
-        prio = prio + scatter_to_neighbors(contrib, structure, "out")
+        if tables is None:
+            prio = prio + scatter_to_neighbors(contrib, structure, "out")
+        else:
+            n = prio.shape[0]
+            recv_idx = jnp.where(tables["edge_mask"], tables["receivers"], n)
+            vals = jnp.where(tables["edge_mask"],
+                             contrib[tables["senders"]], 0.0)
+            prio = prio + jax.ops.segment_sum(vals, recv_idx, n + 1)[:n]
     return prio
+
+
+def reseed_scopes(prio: jnp.ndarray, touched: jnp.ndarray,
+                  senders: jnp.ndarray, receivers: jnp.ndarray,
+                  edge_mask: jnp.ndarray, n: int,
+                  seed_prio: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Delta-ingestion reschedule (paper Sec. 3.2 dynamic computation; used
+    by ``stream/ingest.py``): re-seed scheduler priority for exactly the
+    scopes whose data changed — the distance-1 *closed* neighborhoods of the
+    touched vertices, nothing else.
+
+    Returns ``(new prio, scope mask)``; priorities only ever rise
+    (``max(prio, seed)``), so pending work of untouched vertices is kept."""
+    t = jnp.asarray(touched)
+    em = jnp.asarray(edge_mask)
+    s = jnp.asarray(senders)
+    r = jnp.asarray(receivers)
+    recv_idx = jnp.where(em, r, n)
+    t_i = t.astype(jnp.int32)
+    fwd = jax.ops.segment_sum(jnp.where(em, t_i[s], 0), recv_idx, n + 1)[:n]
+    send_idx = jnp.where(em, s, n)
+    bwd = jax.ops.segment_sum(jnp.where(em, t_i[r], 0), send_idx, n + 1)[:n]
+    scope = jnp.logical_or(t, (fwd + bwd) > 0)
+    prio = jnp.where(scope, jnp.maximum(prio, jnp.asarray(seed_prio)), prio)
+    return prio, scope
 
 
 def marker_wave(pending: jnp.ndarray, done: jnp.ndarray, structure
@@ -237,9 +273,10 @@ class Scheduler:
         raise NotImplementedError
 
     def reschedule(self, sched: Pytree, prio: jnp.ndarray, mask: jnp.ndarray,
-                   residual: jnp.ndarray) -> Tuple[jnp.ndarray, Pytree]:
+                   residual: jnp.ndarray, tables=None
+                   ) -> Tuple[jnp.ndarray, Pytree]:
         return reschedule_prio(self.program, self.structure, prio, mask,
-                               residual), sched
+                               residual, tables=tables), sched
 
     def done(self, sched: Pytree, prio: jnp.ndarray) -> jnp.ndarray:
         return jnp.max(prio) <= self.tolerance
@@ -327,10 +364,10 @@ class FifoScheduler(Scheduler):
         rank = pipeline_ranks(prio, top_idx, self.tolerance)
         return self._arbitrate(selected, rank), sched
 
-    def reschedule(self, sched, prio, mask, residual):
+    def reschedule(self, sched, prio, mask, residual, tables=None):
         was_in = scheduled_mask(prio, self.tolerance)
         prio = reschedule_prio(self.program, self.structure, prio, mask,
-                               residual)
+                               residual, tables=tables)
         now_in = scheduled_mask(prio, self.tolerance)
         # (re-)enqueue at the current clock anything that entered T this
         # round: executed-and-rescheduled vertices go to the back of the

@@ -37,7 +37,7 @@ updates).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -46,6 +46,7 @@ from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.core.coloring import coloring_for
+from repro.core.engine_base import edge_residual_bump
 from repro.core.graph import DataGraph, csr_block_offsets, segment_combine
 from repro.core.scheduler import sweep_mask
 from repro.core.snapshot import SnapshotState, stitch_rows
@@ -54,6 +55,7 @@ from repro.dist.snapshot import (assemble_snapshot as _assemble_snapshot,
                                  init_dist_snapshot, make_marker_phase,
                                  mark_stale)
 from repro.core.partition import overpartition, place_vertices
+from repro.core.sync_op import SyncOp, run_syncs
 from repro.core.update import (EdgeCtx, VertexProgram, fused_edge_weight,
                                fused_gather_leaves, masked_update,
                                supports_fused_gather)
@@ -80,6 +82,7 @@ class DistState:
     traffic_r: jnp.ndarray  # [S] i32 — arbitration rank rows shipped
     step_index: jnp.ndarray  # scalar i32
     snap: Pytree = None     # DistSnapshotState while a snapshot is live
+    globals_: Pytree = ()   # sync-op outputs (replicated), DESIGN §3.9
 
     def replace(self, **kw) -> "DistState":
         return dataclasses.replace(self, **kw)
@@ -99,6 +102,8 @@ class _Layout:
     own_gid: np.ndarray      # [S*n_loc] global vertex id or -1
     row_of: np.ndarray       # [N] global row of each vertex
     erow_gid: np.ndarray     # [S*e_loc] global edge id or -1
+    erow_of: np.ndarray      # [E] machine-major global row of each edge
+                             #     (local row = erow_of[e] - machine*e_loc)
     ghost_gid: np.ndarray    # [S*(S*B)] global vertex id cached here or -1
     eghost_gid: np.ndarray   # [S*(S*EB)] global edge id cached here or -1
     tables: Dict[str, np.ndarray]   # device tables (see _build_layout)
@@ -232,8 +237,59 @@ def _build_layout(graph: DataGraph, machine_of: np.ndarray,
     return _Layout(
         n_machines=S, n_loc=n_loc, budget=budget, e_loc=e_loc,
         e_budget=e_budget, has_rev=build_rev, machine_of=machine_of,
-        own_gid=own_gid, row_of=row_of, erow_gid=erow_gid,
+        own_gid=own_gid, row_of=row_of, erow_gid=erow_gid, erow_of=erow_of,
         ghost_gid=ghost_gid, eghost_gid=eghost_gid, tables=tables)
+
+
+def _pad_slab(arr: np.ndarray, S: int, budget: int, new_budget: int, fill):
+    """Re-lays a flattened [S*S*budget] slab array to a larger per-pair
+    budget, filling the new slots with ``fill`` (works for both slab
+    orientations — the last axis is the per-pair slot either way)."""
+    a = arr.reshape(S * S, budget)
+    out = np.full((S * S, new_budget), fill, a.dtype)
+    out[:, :budget] = a
+    return out.reshape(-1)
+
+
+def _expand_slabs(lay: _Layout, extra_b: int, extra_eb: int) -> None:
+    """Streaming slack (DESIGN §3.11): grows every (dest machine, owner
+    machine) ghost slab by ``extra_b`` vertex / ``extra_eb`` edge slots so a
+    delta edge that spans machines can claim a cache line without a layout
+    rebuild.  New slots start unmapped (gid -1, send_mask False)."""
+    S, B = lay.n_machines, lay.budget
+    if extra_b > 0:
+        nb = B + extra_b
+        lay.ghost_gid = _pad_slab(lay.ghost_gid, S, B, nb, -1)
+        lay.tables["send_idx"] = _pad_slab(
+            lay.tables["send_idx"], S, B, nb, 0)
+        lay.tables["send_mask"] = _pad_slab(
+            lay.tables["send_mask"], S, B, nb, False)
+        # senders_local ghost references use the per-owner slab stride:
+        # local index n_loc + o*B + b becomes n_loc + o*nb + b
+        sl = lay.tables["senders_local"].astype(np.int64)
+        is_ghost = sl >= lay.n_loc
+        off = sl - lay.n_loc
+        lay.tables["senders_local"] = np.where(
+            is_ghost, lay.n_loc + (off // B) * nb + off % B,
+            sl).astype(np.int32)
+        lay.budget = nb
+    EB = lay.e_budget
+    if extra_eb > 0 and lay.has_rev:
+        neb = EB + extra_eb
+        lay.eghost_gid = _pad_slab(lay.eghost_gid, S, EB, neb, -1)
+        lay.tables["esend_idx"] = _pad_slab(
+            lay.tables["esend_idx"], S, EB, neb, 0)
+        lay.tables["esend_mask"] = _pad_slab(
+            lay.tables["esend_mask"], S, EB, neb, False)
+        # rev_local entries pointing into eghost slabs shift with the
+        # per-owner stride: slot e_loc + p*EB + b becomes e_loc + p*neb + b
+        rl = lay.tables["rev_local"].astype(np.int64)
+        is_ghost = rl >= lay.e_loc
+        off = rl - lay.e_loc
+        rl2 = np.where(is_ghost,
+                       lay.e_loc + (off // EB) * neb + off % EB, rl)
+        lay.tables["rev_local"] = rl2.astype(np.int32)
+        lay.e_budget = neb
 
 
 def _take_rows(tree: Pytree, idx: np.ndarray) -> Pytree:
@@ -256,8 +312,23 @@ class ShardEngineBase:
     One mesh slice along ``axis`` = one paper machine.  Subclasses build
     ``_make_step`` from ``_make_phase_helpers`` — each phase executes one
     caller-chosen active mask — and finish ``__init__`` with
-    ``_finalize()``.  Sync ops are not supported on this path yet (the
-    global reduction belongs to the checkpoint/sync subsystem, DESIGN §3.9).
+    ``_finalize()``.
+
+    Sync ops (paper Sec. 3.5, DESIGN §3.9) evaluate at the shard_map step
+    barrier: each machine folds ``map_fn`` over its owned rows, the partial
+    sums meet in a cross-machine ``psum``, and ``finalize`` runs replicated
+    — every machine reads identical globals next step, the paper's
+    atomic-consistency readback.  Inconsistent ops see the previous
+    barrier's data (a background sync racing with updates), exactly as the
+    host-loop engines do.
+
+    Streaming mode (DESIGN §3.11, driven by ``stream/ingest.py``): ``graph``
+    is a capacity-padded data graph, ``stream_real_edges`` marks which
+    capacity slots currently hold real edges (slack slots are inert
+    receiver-owned self-loops), and ``ghost_slack``/``eghost_slack`` reserve
+    unmapped cache lines per machine pair so delta edges that span machines
+    splice in with table patches only — the jitted step never retraces
+    until ``regrow()``.
     """
 
     def __init__(
@@ -271,16 +342,19 @@ class ShardEngineBase:
         method: str = "hash",
         tolerance: float = 1e-3,
         seed: int = 0,
+        sync_ops: Sequence[SyncOp] = (),
         use_fused: Optional[bool] = None,
         gas_interpret: Optional[bool] = None,
+        stream_real_edges: Optional[np.ndarray] = None,
+        ghost_slack: int = 0,
+        eghost_slack: int = 0,
     ):
-        if getattr(program, "sync_ops", None):
-            raise NotImplementedError("sync ops on the shard_map path")
         self.program = program
         self.graph = graph
         self.mesh = mesh
         self.axis = axis
         self.tolerance = float(tolerance)
+        self.sync_ops = tuple(sync_ops)
         st = graph.structure
 
         if axis not in mesh.shape:
@@ -300,6 +374,10 @@ class ShardEngineBase:
         # pads every machine to the same shapes, so that is fine.
         self.layout = _build_layout(
             graph, np.asarray(machine_of, np.int32), S, use_rev)
+        self.streaming = stream_real_edges is not None
+        if self.streaming or ghost_slack or eghost_slack:
+            _expand_slabs(self.layout, int(ghost_slack), int(eghost_slack))
+        self._trace_count = 0  # bumped at trace time; delta tests assert 0
 
         # Fused GAS local compute (DESIGN.md §3.5): per-machine CSR block
         # metadata over the *local* edge rows.  Within a machine the real
@@ -340,6 +418,18 @@ class ShardEngineBase:
             lay.tables["gas_start"] = np.concatenate(starts).astype(np.int32)
             lay.tables["gas_neblk"] = np.concatenate(neblks).astype(np.int32)
 
+        if self.streaming:
+            # The GAS metadata above was built over the *allocated* capacity
+            # slots (slack included — their reserved receivers pin the
+            # static block ranges); the live edge_mask is the real-edge
+            # mask, patched by apply_delta as slots fill.
+            real = np.asarray(stream_real_edges, bool)
+            if real.shape[0] != st.n_edges:
+                raise ValueError("stream_real_edges must be [n_edge_slots]")
+            em_rows = np.zeros(S * self.layout.e_loc, bool)
+            em_rows[self.layout.erow_of[np.nonzero(real)[0]]] = True
+            self.layout.tables["edge_mask"] = em_rows
+
         self._shard = NamedSharding(mesh, P(axis))
         self._rep = NamedSharding(mesh, P())
 
@@ -350,6 +440,14 @@ class ShardEngineBase:
             k: jax.device_put(jnp.asarray(v), self._shard)
             for k, v in self.layout.tables.items()}
         self._jit_step = jax.jit(self._make_step())
+
+    def refresh_tables(self, keys: Optional[Sequence[str]] = None) -> None:
+        """Re-uploads (patched) host tables to the device — the streaming
+        delta path (stream/ingest.py): values change, shapes never do, so
+        the jitted step's cache entry keeps hitting."""
+        for k in (keys if keys is not None else self.layout.tables):
+            self._tables[k] = jax.device_put(
+                jnp.asarray(self.layout.tables[k]), self._shard)
 
     # -- state ---------------------------------------------------------------
     def init(self, graph: Optional[DataGraph] = None,
@@ -392,7 +490,11 @@ class ShardEngineBase:
             traffic_e=put(np.zeros(S, np.int32)),
             traffic_r=put(np.zeros(S, np.int32)),
             step_index=jax.device_put(jnp.zeros((), jnp.int32), self._rep),
-            snap=None)
+            snap=None,
+            globals_=jax.tree.map(
+                lambda x: jax.device_put(jnp.asarray(x), self._rep),
+                run_syncs(self.sync_ops, vdata, vdata,
+                          graph.structure.n_vertices)))
 
     # -- the shared phase machinery -------------------------------------------
     def _make_phase_helpers(self):
@@ -416,6 +518,7 @@ class ShardEngineBase:
         e_loc, EB = lay.e_loc, lay.e_budget
         use_rev = lay.has_rev
         ax = self.axis
+        streaming = getattr(self, "streaming", False)
         use_fused = self._use_fused
         if use_fused:
             gas_leaves, gas_treedef = self._gas_leaves, self._gas_treedef
@@ -507,7 +610,7 @@ class ShardEngineBase:
                                       prog.combiner,
                                       indices_are_sorted=False)
 
-            new_v, residual = prog.apply(vown, acc, None)
+            new_v, residual = prog.apply(vown, acc, carry.get("glob"))
             vown = masked_update(vown, new_v, active)
             contrib = jnp.where(
                 active, prog.priority(residual.astype(jnp.float32)), 0.0)
@@ -560,6 +663,17 @@ class ShardEngineBase:
                 src_acc = jax.tree.map(lambda x: x[sl], acc_all)
                 new_e = prog.edge_out(ctx2, new_src, src_acc)
                 wmask = jnp.logical_and(changed_all[sl], emask)
+                if streaming:
+                    # Elidan-style message-residual scheduling (DESIGN
+                    # §3.11): a delta edge's message jumps from its init
+                    # value while the writer's own residual is zero, so
+                    # the reader must be re-scheduled by the *edge*
+                    # change.  Only the streaming engines add this —
+                    # the frozen-structure engines keep their seed
+                    # schedule bit-for-bit.
+                    prio = prio + edge_residual_bump(
+                        edata, new_e, wmask, rl, emask, n_loc,
+                        self.tolerance)
                 edata = masked_update(edata, new_e, wmask)
 
                 if use_rev:  # refresh remote reverse-message caches
@@ -577,7 +691,8 @@ class ShardEngineBase:
 
             count = count + active.astype(jnp.int32)
             return dict(vown=vown, vghost=vghost, edata=edata, eghost=eghost,
-                        prio=prio, count=count, tv=tv, te=te, snap=snap)
+                        prio=prio, count=count, tv=tv, te=te, snap=snap,
+                        glob=carry.get("glob"))
 
         return exchange, phase_update
 
@@ -597,24 +712,52 @@ class ShardEngineBase:
         marker_phase = make_marker_phase(
             self._make_phase_helpers()[0], self.layout.n_loc,
             self.layout.budget)
+        sync_ops = self.sync_ops
+        n_global = self.graph.structure.n_vertices
+        ax = self.axis
+
+        def dist_syncs(tb, vown, vown_prev):
+            """The §3.9 step-barrier sync: per-machine masked map_fn fold,
+            cross-machine psum, replicated finalize."""
+            out = {}
+            for op in sync_ops:
+                data = vown if op.consistent else vown_prev
+                mapped = op.map_fn(data)
+
+                def _fold(m):
+                    keep = tb["own_mask"].reshape(
+                        (-1,) + (1,) * (m.ndim - 1))
+                    return jax.lax.psum(
+                        jnp.sum(jnp.where(keep, m, jnp.zeros_like(m)),
+                                axis=0), ax)
+
+                z = jax.tree.map(_fold, mapped)
+                out[op.name] = op.finalize(z, n_global)
+            return out
 
         def full_body(state: DistState, tb) -> DistState:
+            vown_prev = state.vown
             if state.snap is not None:
                 state = state.replace(snap=marker_phase(
                     tb, state.snap, state.vown, state.edata,
                     state.step_index))
-            return body(state, tb)
+            state = body(state, tb)
+            if sync_ops:
+                state = state.replace(
+                    globals_=dist_syncs(tb, state.vown, vown_prev))
+            return state
 
         state_specs = DistState(
             vown=spec, vghost=spec, edata=spec, eghost=spec, prio=spec,
             update_count=spec, traffic_v=spec, traffic_e=spec,
-            traffic_r=spec, step_index=P(), snap=spec)
+            traffic_r=spec, step_index=P(), snap=spec, globals_=P())
         sharded = shard_map(
             full_body, mesh=self.mesh,
             in_specs=(state_specs, spec), out_specs=state_specs,
             check_vma=False)
 
         def step(state: DistState, tables) -> DistState:
+            self._trace_count += 1
             out = sharded(state, tables)
             return out.replace(step_index=state.step_index + 1)
 
@@ -781,7 +924,7 @@ class DistributedEngine(ShardEngineBase):
                          edata=state.edata, eghost=state.eghost,
                          prio=state.prio, count=state.update_count,
                          tv=state.traffic_v, te=state.traffic_e,
-                         snap=state.snap)
+                         snap=state.snap, glob=state.globals_)
             for c in range(num_colors):
                 active = jnp.logical_and(
                     tb["own_mask"],
@@ -793,6 +936,7 @@ class DistributedEngine(ShardEngineBase):
                 prio=carry["prio"], update_count=carry["count"],
                 traffic_v=carry["tv"], traffic_e=carry["te"],
                 traffic_r=state.traffic_r,
-                step_index=state.step_index, snap=carry["snap"])
+                step_index=state.step_index, snap=carry["snap"],
+                globals_=state.globals_)
 
         return self._wrap_step(body)

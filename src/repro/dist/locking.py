@@ -102,7 +102,7 @@ class DistributedLockingEngine(ShardEngineBase):
                          edata=state.edata, eghost=state.eghost,
                          prio=state.prio, count=state.update_count,
                          tv=state.traffic_v, te=state.traffic_e,
-                         snap=state.snap)
+                         snap=state.snap, glob=state.globals_)
             tr = state.traffic_r
 
             # -- per-machine pipeline: top-p of the local queue ------------
@@ -171,6 +171,6 @@ class DistributedLockingEngine(ShardEngineBase):
                 prio=carry["prio"], update_count=carry["count"],
                 traffic_v=carry["tv"], traffic_e=carry["te"],
                 traffic_r=tr, step_index=state.step_index,
-                snap=carry["snap"])
+                snap=carry["snap"], globals_=state.globals_)
 
         return self._wrap_step(body)

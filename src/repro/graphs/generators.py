@@ -18,7 +18,7 @@ from repro.core.graph import GraphStructure
 
 
 def power_law_graph(
-    n: int, avg_degree: float = 8.0, alpha: float = 2.1, seed: int = 0,
+    n: int, avg_degree: float = 8.0, alpha: float = 2.1, *, seed: int = 0,
     symmetric: bool = True,
 ) -> GraphStructure:
     """Chung-Lu style power-law graph: P(deg = d) ∝ d^-alpha."""
@@ -43,7 +43,7 @@ def power_law_graph(
     return st
 
 
-def connected_power_law_graph(n: int, seed: int = 0, *,
+def connected_power_law_graph(n: int, *, seed: int = 0,
                               avg_degree: float = 6.0) -> GraphStructure:
     """``power_law_graph`` with components stitched by an undirected path
     so the graph is connected and symmetrized.

@@ -1,0 +1,32 @@
+"""Dynamic-graph ingestion: mutate the graph while the engines run
+(DESIGN.md §3.11; paper Secs. 3.2 + 4.1, ASYMP-style incremental serving).
+
+  ``stream.mutable``  capacity-padded ``StreamingGraph`` (slot reservation
+                      per receiver, inert self-loop slack, regrow trigger)
+  ``stream.delta``    the atom-journal command vocabulary as delta batches
+  ``stream.ingest``   ``apply_delta`` (zero-recompile splicing into local
+                      and distributed engines) + ``regrow_engine``
+  ``stream.sources``  replayable delta sources for PageRank / LBP / ALS
+
+Layering: stream/ may import core/ and dist/, never models/.
+"""
+from repro.stream.delta import (AddEdge, AddVertex, DeltaBatch, SetEdgeData,
+                                SetVertexData)
+from repro.stream.ingest import (apply_delta, apply_delta_growing,
+                                 make_dist_engine, make_local_engine,
+                                 readback, regrow_engine, stream_prio,
+                                 total_updates)
+from repro.stream.mutable import (CapacityError, SlackConfig, StreamingGraph,
+                                  pad_edge_data, pad_vertex_data)
+from repro.stream.sources import (als_rating_arrivals, lbp_arrivals,
+                                  pagerank_arrivals,
+                                  pagerank_cluster_arrival)
+
+__all__ = [
+    "AddEdge", "AddVertex", "CapacityError", "DeltaBatch", "SetEdgeData",
+    "SetVertexData", "SlackConfig", "StreamingGraph", "als_rating_arrivals",
+    "apply_delta", "apply_delta_growing", "lbp_arrivals", "make_dist_engine",
+    "make_local_engine", "pad_edge_data", "pad_vertex_data",
+    "pagerank_arrivals", "pagerank_cluster_arrival", "readback",
+    "regrow_engine", "stream_prio", "total_updates",
+]

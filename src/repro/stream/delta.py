@@ -1,0 +1,113 @@
+"""Delta batches: the graph-mutation command vocabulary (DESIGN.md §3.11).
+
+The commands are exactly the atom journals' vocabulary (paper Sec. 4.1 —
+"a simple binary compressed journal of graph generating commands"):
+AddVertex / AddEdge plus the data writes SetVertexData / SetEdgeData.
+Because the vocabulary matches, an ``.atom.npz`` journal file *is* a
+replayable delta stream (``DeltaBatch.from_atom_file``) — loading a graph
+and growing one are the same operation at different times, which is the
+whole point of the streaming subsystem.
+
+Row payloads (``data``) are pytrees matching the graph's vertex/edge data
+treedef — or flat leaf lists in the graph's flatten order (the journal
+format stores flattened leaves).  ``None`` leaves the zero-initialized row.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional, Sequence, Union
+
+import numpy as np
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AddVertex:
+    """Activate a vertex slot.  ``vid=None`` takes the next sequential id;
+    journals replay their explicit ids."""
+
+    data: Optional[Pytree] = None
+    vid: Optional[int] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class AddEdge:
+    """Add directed edge ``src -> dst`` with optional edge data."""
+
+    src: int
+    dst: int
+    data: Optional[Pytree] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class SetVertexData:
+    vid: int
+    data: Pytree
+
+
+@dataclasses.dataclass(frozen=True)
+class SetEdgeData:
+    src: int
+    dst: int
+    data: Pytree
+
+
+Command = Union[AddVertex, AddEdge, SetVertexData, SetEdgeData]
+
+
+@dataclasses.dataclass
+class DeltaBatch:
+    """An ordered batch of mutation commands, applied atomically between
+    engine steps by ``stream/ingest.py:apply_delta``."""
+
+    commands: List[Command] = dataclasses.field(default_factory=list)
+
+    def __len__(self) -> int:
+        return len(self.commands)
+
+    def __iter__(self):
+        return iter(self.commands)
+
+    def extend(self, cmds: Sequence[Command]) -> "DeltaBatch":
+        self.commands.extend(cmds)
+        return self
+
+    @property
+    def n_new_edges(self) -> int:
+        return sum(1 for c in self.commands if isinstance(c, AddEdge))
+
+    @property
+    def n_new_vertices(self) -> int:
+        return sum(1 for c in self.commands if isinstance(c, AddVertex))
+
+    @staticmethod
+    def from_atom_file(path: str, *, include_ghosts: bool = False
+                       ) -> "DeltaBatch":
+        """Replays one atom journal as a delta stream.
+
+        Emits AddVertex (explicit gids, flattened-leaf data) for the atom's
+        owned vertices and AddEdge for its owned edges.  Ghost vertices are
+        owned — and therefore added — by some other atom's journal;
+        ``include_ghosts=True`` adds them here too (single-atom replay)."""
+        z = np.load(path)
+        cmds: List[Command] = []
+        nv = sum(1 for k in z.files
+                 if k.startswith("vdata_") and not k.startswith("vdata_ghost_"))
+        ne = sum(1 for k in z.files if k.startswith("edata_"))
+        own = z["own_vertices"]
+        for j, vid in enumerate(own):
+            cmds.append(AddVertex(
+                vid=int(vid),
+                data=[z[f"vdata_{i}"][j] for i in range(nv)] or None))
+        if include_ghosts:
+            for j, vid in enumerate(z["ghost_vertices"]):
+                cmds.append(AddVertex(
+                    vid=int(vid),
+                    data=[z[f"vdata_ghost_{i}"][j] for i in range(nv)]
+                    or None))
+        for j, (s, r) in enumerate(zip(z["edge_src"], z["edge_dst"])):
+            cmds.append(AddEdge(
+                int(s), int(r),
+                data=[z[f"edata_{i}"][j] for i in range(ne)] or None))
+        return DeltaBatch(cmds)

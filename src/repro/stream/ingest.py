@@ -1,0 +1,644 @@
+"""Delta ingestion: splice mutations into *running* engines (DESIGN §3.11).
+
+``apply_delta(engine, state, batch)`` is the subsystem's contract:
+
+  1. the ``StreamingGraph`` assigns slots (host bookkeeping, no engine
+     involvement);
+  2. engine state rows are spliced — new vertex/edge data, and on the
+     distributed engines the ghost caches + versioned send tables are
+     patched incrementally (a cross-machine edge claims a slab slot from
+     the per-peer slack and warms the cache with the owner's current row —
+     no layout rebuild, no retrace);
+  3. scheduler priority is re-seeded for exactly the touched scopes — the
+     distance-1 closed neighborhoods of mutated vertices
+     (``core/scheduler.py:reseed_scopes``, the paper's Sec. 3.2 dynamic
+     computation: reschedule the scopes whose data changed, nothing else).
+
+Every patch is a value write into same-shaped arrays, so the jitted step's
+cache entry keeps hitting: applying a delta within capacity slack performs
+**zero recompilations** (asserted by tests/test_stream.py via the engines'
+trace counters).  When slack runs out, ``CapacityError`` escapes and
+``regrow_engine`` compacts the live state and rebuilds through the
+existing two-phase atom path (``core/partition.py``) — the paper's elastic
+placement, reused for growth.
+
+Layering: stream/ imports core/ and dist/, never models/.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.coloring import coloring_for
+from repro.core.engine_base import Engine, EngineState
+from repro.core.graph import DataGraph
+from repro.core.scheduler import reseed_scopes
+from repro.dist.engine import DistState, DistributedEngine, ShardEngineBase
+from repro.stream.delta import (AddEdge, AddVertex, DeltaBatch, SetEdgeData,
+                                SetVertexData)
+from repro.stream.mutable import (CapacityError, SlackConfig, StreamingGraph,
+                                  pad_edge_data, pad_vertex_data)
+
+Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+# small helpers
+# ---------------------------------------------------------------------------
+
+def _host(tree: Pytree) -> Pytree:
+    return jax.tree.map(lambda x: np.asarray(x).copy(), tree)
+
+
+def _leaf_rows(data, n_leaves: int) -> Optional[List[np.ndarray]]:
+    """Normalizes a command's row payload to the flattened-leaf list."""
+    if data is None:
+        return None
+    if isinstance(data, (list, tuple)):
+        rows = list(data)
+    else:
+        rows = jax.tree.flatten(data)[0]
+    if len(rows) != n_leaves:
+        raise ValueError(
+            f"delta row has {len(rows)} leaves, graph data has {n_leaves}")
+    return [np.asarray(r) for r in rows]
+
+
+def _write_row(leaves: List[np.ndarray], row: int,
+               rows: Optional[List[np.ndarray]]) -> None:
+    if rows is None:
+        return
+    for leaf, val in zip(leaves, rows):
+        leaf[row] = val
+
+
+def _masked_initial_prio(program, sgraph: StreamingGraph) -> np.ndarray:
+    prio = np.asarray(program.initial_priority(sgraph.n_cap), np.float32)
+    return np.where(sgraph.vertex_active, prio, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# engine builders (record their own recipe so regrow can replay it)
+# ---------------------------------------------------------------------------
+
+def make_local_engine(
+    program,
+    graph: DataGraph,
+    *,
+    engine_cls=Engine,
+    tolerance: float = 1e-3,
+    slack: SlackConfig = SlackConfig(),
+    sync_ops: Sequence = (),
+    use_fused: Optional[bool] = None,
+    gas_interpret: Optional[bool] = None,
+    initial_prio: Optional[np.ndarray] = None,
+    in_capacity: Optional[np.ndarray] = None,
+    n_cap: Optional[int] = None,
+) -> Tuple[Engine, EngineState]:
+    """A streaming shared-memory engine over ``graph``.
+
+    ``engine_cls`` picks the sweep flavour: ``Engine`` (single-color BSP
+    sweep) or ``ChromaticEngine`` (Gauss-Seidel color sweep — required for
+    message-passing programs like LBP whose Jacobi cold start stalls).
+    ``in_capacity`` sizes per-vertex in-edge regions beyond the uniform
+    slack (the ingress side usually knows the degrees its journals will
+    deliver — power-law hubs overflow a uniform minimum)."""
+    sg, init_perm = StreamingGraph.build(graph.structure, slack,
+                                         n_cap=n_cap,
+                                         in_capacity=in_capacity)
+    padded = DataGraph(
+        vertex_data=jax.tree.map(jnp.asarray,
+                                 pad_vertex_data(graph.vertex_data,
+                                                 sg.n_cap)),
+        edge_data=jax.tree.map(jnp.asarray,
+                               pad_edge_data(graph.edge_data, sg,
+                                             init_perm)),
+        structure=sg.capacity_structure())
+    engine = engine_cls(program, padded, tolerance=tolerance,
+                        sync_ops=sync_ops, use_fused=use_fused,
+                        gas_interpret=gas_interpret,
+                        stream_tables=sg.tables())
+    prio0 = _masked_initial_prio(program, sg)
+    if initial_prio is not None:
+        prio0[:len(initial_prio)] = np.asarray(initial_prio, np.float32)
+        prio0 = np.where(sg.vertex_active, prio0, 0.0)
+    state = engine.init(padded, initial_prio=jnp.asarray(prio0))
+    engine._stream_graph = sg
+    engine._stream_config = dict(
+        kind="local", engine_cls=engine_cls, program=program,
+        tolerance=tolerance, slack=slack, sync_ops=tuple(sync_ops),
+        use_fused=use_fused, gas_interpret=gas_interpret)
+    engine._stream_patcher = None
+    return engine, state
+
+
+def make_dist_engine(
+    program,
+    graph: DataGraph,
+    mesh,
+    *,
+    engine_cls=DistributedEngine,
+    tolerance: float = 1e-3,
+    slack: SlackConfig = SlackConfig(),
+    sync_ops: Sequence = (),
+    initial_prio: Optional[np.ndarray] = None,
+    in_capacity: Optional[np.ndarray] = None,
+    n_cap: Optional[int] = None,
+    **kw,
+) -> Tuple[ShardEngineBase, DistState]:
+    """A streaming distributed engine (sweep or locking) over ``graph``.
+
+    The capacity structure's slack slots are inert self-loops, so the
+    two-phase atom placement, the ghost slabs and (for the sweep engine)
+    the coloring are all computed over the real edges plus reserved room.
+    """
+    sg, init_perm = StreamingGraph.build(graph.structure, slack,
+                                         n_cap=n_cap,
+                                         in_capacity=in_capacity)
+    cap_st = sg.capacity_structure()
+    padded = DataGraph(
+        vertex_data=jax.tree.map(jnp.asarray,
+                                 pad_vertex_data(graph.vertex_data,
+                                                 sg.n_cap)),
+        edge_data=jax.tree.map(jnp.asarray,
+                               pad_edge_data(graph.edge_data, sg,
+                                             init_perm)),
+        structure=cap_st)
+    if engine_cls is DistributedEngine and "colors" not in kw:
+        # color the *real* structure (capacity self-loops would confuse a
+        # proper coloring); inactive vertices take color 0
+        colors = np.zeros(sg.n_cap, np.int32)
+        colors[: graph.structure.n_vertices] = coloring_for(
+            graph.structure, program.consistency)
+        kw["colors"] = colors
+    engine = engine_cls(
+        program, padded, mesh, tolerance=tolerance, sync_ops=sync_ops,
+        stream_real_edges=sg.edge_mask.copy(),
+        ghost_slack=slack.ghost_slack, eghost_slack=slack.eghost_slack,
+        **kw)
+    prio0 = _masked_initial_prio(program, sg)
+    if initial_prio is not None:
+        prio0[:len(initial_prio)] = np.asarray(initial_prio, np.float32)
+        prio0 = np.where(sg.vertex_active, prio0, 0.0)
+    state = engine.init(initial_prio=prio0)
+    engine._stream_graph = sg
+    engine._stream_config = dict(
+        kind="dist", program=program, tolerance=tolerance, slack=slack,
+        sync_ops=tuple(sync_ops), mesh=mesh, engine_cls=engine_cls,
+        kwargs={k: v for k, v in kw.items() if k != "colors"})
+    engine._stream_patcher = None
+    return engine, state
+
+
+# ---------------------------------------------------------------------------
+# the local patcher
+# ---------------------------------------------------------------------------
+
+class _LocalPatcher:
+    def __init__(self, engine: Engine):
+        self.engine = engine
+        self.sg: StreamingGraph = engine._stream_graph
+
+    def apply(self, state: EngineState, batch: DeltaBatch) -> EngineState:
+        sg, engine = self.sg, self.engine
+        cp = _snapshot_sg(sg)
+        vleaves, vdef = jax.tree.flatten(_host(state.graph.vertex_data))
+        eleaves, edef = jax.tree.flatten(_host(state.graph.edge_data))
+        touched = np.zeros(sg.n_cap, bool)
+        try:
+            for cmd in batch:
+                if isinstance(cmd, AddVertex):
+                    vid = sg.add_vertex(cmd.vid)
+                    _write_row(vleaves, vid,
+                               _leaf_rows(cmd.data, len(vleaves)))
+                    touched[vid] = True
+                elif isinstance(cmd, AddEdge):
+                    slot = sg.add_edge(cmd.src, cmd.dst)
+                    _write_row(eleaves, slot,
+                               _leaf_rows(cmd.data, len(eleaves)))
+                    touched[cmd.src] = touched[cmd.dst] = True
+                elif isinstance(cmd, SetVertexData):
+                    _write_row(vleaves, int(cmd.vid),
+                               _leaf_rows(cmd.data, len(vleaves)))
+                    touched[int(cmd.vid)] = True
+                elif isinstance(cmd, SetEdgeData):
+                    slot = sg.slot_of(cmd.src, cmd.dst)
+                    _write_row(eleaves, slot,
+                               _leaf_rows(cmd.data, len(eleaves)))
+                    touched[cmd.src] = touched[cmd.dst] = True
+                else:
+                    raise TypeError(f"unknown delta command {cmd!r}")
+        except BaseException:
+            _restore_sg(sg, cp)  # a batch applies atomically or not at all
+            raise
+
+        prio, _ = reseed_scopes(
+            jnp.asarray(np.asarray(state.prio)), touched, sg.senders,
+            sg.receivers, sg.edge_mask, sg.n_cap,
+            _masked_initial_prio(engine.program, sg))
+        engine.set_stream_tables(sg.tables())
+        graph = state.graph.replace(
+            vertex_data=jax.tree.unflatten(
+                vdef, [jnp.asarray(x) for x in vleaves]),
+            edge_data=jax.tree.unflatten(
+                edef, [jnp.asarray(x) for x in eleaves]))
+        return state.replace(graph=graph, prio=prio)
+
+
+# ---------------------------------------------------------------------------
+# the distributed patcher
+# ---------------------------------------------------------------------------
+
+def _snapshot_sg(sg: StreamingGraph) -> dict:
+    return dict(
+        vertex_active=sg.vertex_active.copy(), fill=sg.fill.copy(),
+        out_deg=sg.out_deg.copy(), senders=sg.senders.copy(),
+        edge_mask=sg.edge_mask.copy(), rev_idx=sg.rev_idx.copy(),
+        edge_slot=dict(sg.edge_slot),
+        out_slots={k: list(v) for k, v in sg.out_slots.items()},
+        next_vid=sg._next_vid)
+
+
+def _restore_sg(sg: StreamingGraph, cp: dict) -> None:
+    sg.vertex_active[:] = cp["vertex_active"]
+    sg.fill[:] = cp["fill"]
+    sg.out_deg[:] = cp["out_deg"]
+    sg.senders[:] = cp["senders"]
+    sg.edge_mask[:] = cp["edge_mask"]
+    sg.rev_idx[:] = cp["rev_idx"]
+    sg.edge_slot = cp["edge_slot"]
+    sg.out_slots = cp["out_slots"]
+    sg._next_vid = cp["next_vid"]
+
+
+class _DistPatcher:
+    """Incremental layout surgery for the shard_map engines.
+
+    Keeps host-side maps of the ghost slabs (which (machine, vertex) pairs
+    hold a cache line, which slots are free) so a delta edge can claim a
+    slot without scanning — the device tables and state rows are patched
+    to match and re-uploaded once per batch.
+    """
+
+    def __init__(self, engine: ShardEngineBase):
+        self.engine = engine
+        self.sg: StreamingGraph = engine._stream_graph
+        lay = engine.layout
+        self.S, self.B, self.EB = lay.n_machines, lay.budget, lay.e_budget
+        self.n_loc, self.e_loc = lay.n_loc, lay.e_loc
+        # slab maps: (dest machine, gid) -> slot b; free slots per pair
+        self.ghost_slot: Dict[Tuple[int, int], int] = {}
+        self.ghost_rows: Dict[int, List[int]] = {}
+        self.ghost_free: Dict[Tuple[int, int], List[int]] = {}
+        self._scan_slab(lay.ghost_gid, self.B, self.ghost_slot,
+                        self.ghost_rows, self.ghost_free)
+        self.eghost_slot: Dict[Tuple[int, int], int] = {}
+        self.eghost_rows: Dict[int, List[int]] = {}
+        self.eghost_free: Dict[Tuple[int, int], List[int]] = {}
+        if lay.has_rev:
+            self._scan_slab(lay.eghost_gid, self.EB, self.eghost_slot,
+                            self.eghost_rows, self.eghost_free)
+        if engine._use_fused:
+            self.e_pad = lay.tables["gas_send"].size // self.S
+        self.changed: Set[str] = set()
+
+    def _scan_slab(self, slab_gid, budget, slot_map, rows_map, free_map):
+        S = self.S
+        g = slab_gid.reshape(S, S, budget)
+        for d in range(S):
+            for o in range(S):
+                for b in range(budget):
+                    gid = int(g[d, o, b])
+                    if gid >= 0:
+                        slot_map[(d, gid)] = b
+                        rows_map.setdefault(gid, []).append(
+                            d * (S * budget) + o * budget + b)
+                    else:
+                        free_map.setdefault((d, o), []).append(b)
+
+    def _checkpoint(self):
+        lay = self.engine.layout
+        return (
+            _snapshot_sg(self.sg),
+            {k: v.copy() for k, v in lay.tables.items()},
+            lay.ghost_gid.copy(), lay.eghost_gid.copy(),
+            dict(self.ghost_slot),
+            {k: list(v) for k, v in self.ghost_rows.items()},
+            {k: list(v) for k, v in self.ghost_free.items()},
+            dict(self.eghost_slot),
+            {k: list(v) for k, v in self.eghost_rows.items()},
+            {k: list(v) for k, v in self.eghost_free.items()},
+        )
+
+    def _restore(self, cp):
+        lay = self.engine.layout
+        (sgcp, tables, gg, egg, gs, gr, gf, egs, egr, egf) = cp
+        _restore_sg(self.sg, sgcp)
+        lay.tables = tables
+        lay.ghost_gid = gg
+        lay.eghost_gid = egg
+        self.ghost_slot, self.ghost_rows, self.ghost_free = gs, gr, gf
+        self.eghost_slot, self.eghost_rows, self.eghost_free = egs, egr, egf
+
+    # -- slab allocation -----------------------------------------------------
+    def _vertex_ghost(self, dest: int, vid: int, vown, vghost) -> int:
+        """Local index (within dest's own+ghost rows) of vertex ``vid``
+        cached at machine ``dest``; claims a slack cache line on first
+        use and warms it with the owner's current row."""
+        lay = self.engine.layout
+        owner = int(lay.machine_of[vid])
+        key = (dest, vid)
+        if key not in self.ghost_slot:
+            free = self.ghost_free.get((dest, owner), [])
+            if not free:
+                raise CapacityError(
+                    f"ghost slab ({dest} <- {owner}) vertex cache lines")
+            b = free.pop(0)
+            self.ghost_slot[key] = b
+            S, B = self.S, self.B
+            row = dest * (S * B) + owner * B + b
+            lay.ghost_gid[row] = vid
+            self.ghost_rows.setdefault(vid, []).append(row)
+            send_row = owner * (S * B) + dest * B + b
+            lay.tables["send_idx"][send_row] = \
+                int(lay.row_of[vid]) - owner * self.n_loc
+            lay.tables["send_mask"][send_row] = True
+            self.changed.update(("send_idx", "send_mask"))
+            own_row = int(lay.row_of[vid])
+            for gleaf, oleaf in zip(vghost, vown):
+                gleaf[row] = oleaf[own_row]
+        b = self.ghost_slot[key]
+        return self.n_loc + int(lay.machine_of[vid]) * self.B + b
+
+    def _edge_ghost(self, dest: int, slot: int, edata, eghost) -> int:
+        """Local index of edge ``slot``'s row cached at ``dest`` (reverse-
+        message reads); claims + warms an eghost line on first use."""
+        lay = self.engine.layout
+        owner = int(lay.machine_of[self.sg.receivers[slot]])
+        key = (dest, slot)
+        if key not in self.eghost_slot:
+            free = self.eghost_free.get((dest, owner), [])
+            if not free:
+                raise CapacityError(
+                    f"ghost slab ({dest} <- {owner}) edge cache lines")
+            b = free.pop(0)
+            self.eghost_slot[key] = b
+            S, EB = self.S, self.EB
+            row = dest * (S * EB) + owner * EB + b
+            lay.eghost_gid[row] = slot
+            self.eghost_rows.setdefault(slot, []).append(row)
+            send_row = owner * (S * EB) + dest * EB + b
+            lrow = int(lay.erow_of[slot])
+            lay.tables["esend_idx"][send_row] = lrow - owner * self.e_loc
+            lay.tables["esend_mask"][send_row] = True
+            self.changed.update(("esend_idx", "esend_mask"))
+            for gleaf, oleaf in zip(eghost, edata):
+                gleaf[row] = oleaf[lrow]
+        b = self.eghost_slot[key]
+        return self.e_loc + owner * self.EB + b
+
+    # -- per-command surgery -------------------------------------------------
+    def _splice_edge(self, slot: int, vown, vghost, edata, eghost) -> None:
+        sg, lay = self.sg, self.engine.layout
+        s, r = int(sg.senders[slot]), int(sg.receivers[slot])
+        m = int(lay.machine_of[r])
+        p = int(lay.machine_of[s])
+        lrow = int(lay.erow_of[slot])
+        if p == m:
+            sl = int(lay.row_of[s]) - p * self.n_loc
+        else:
+            sl = self._vertex_ghost(m, s, vown, vghost)
+        lay.tables["senders_local"][lrow] = sl
+        lay.tables["edge_mask"][lrow] = True
+        self.changed.update(("senders_local", "edge_mask"))
+        if self.engine._use_fused:
+            gas_row = (lrow // self.e_loc) * self.e_pad + lrow % self.e_loc
+            lay.tables["gas_send"][gas_row] = sl
+            self.changed.add("gas_send")
+        # reverse linking (adjacent-edge writes read the twin's message)
+        twin = int(sg.rev_idx[slot])
+        if lay.has_rev and 0 <= twin != slot:
+            trow = int(lay.erow_of[twin])
+            q = int(lay.machine_of[sg.receivers[twin]])  # twin's machine
+            lay.tables["rev_local"][lrow] = (
+                trow - q * self.e_loc if q == m
+                else self._edge_ghost(m, twin, edata, eghost))
+            lay.tables["rev_local"][trow] = (
+                lrow - m * self.e_loc if m == q
+                else self._edge_ghost(q, slot, edata, eghost))
+            self.changed.add("rev_local")
+
+    def _refresh_degrees(self) -> None:
+        sg, lay = self.sg, self.engine.layout
+        rows = lay.erow_of
+        lay.tables["src_deg_e"][rows] = sg.out_deg[sg.senders]
+        lay.tables["dst_deg_e"][rows] = sg.fill[sg.receivers]
+        self.changed.update(("src_deg_e", "dst_deg_e"))
+
+    # -- the batch -----------------------------------------------------------
+    def apply(self, state: DistState, batch: DeltaBatch) -> DistState:
+        engine, sg = self.engine, self.sg
+        lay = engine.layout
+        cp = self._checkpoint()
+        self.changed = set()
+        vown, vdef = jax.tree.flatten(_host(state.vown))
+        vghost, _ = jax.tree.flatten(_host(state.vghost))
+        edata, edef = jax.tree.flatten(_host(state.edata))
+        eghost, egdef = jax.tree.flatten(_host(state.eghost))
+        prio = np.asarray(state.prio).copy()
+        touched = np.zeros(sg.n_cap, bool)
+        try:
+            for cmd in batch:
+                if isinstance(cmd, AddVertex):
+                    vid = sg.add_vertex(cmd.vid)
+                    _write_row(vown, int(lay.row_of[vid]),
+                               _leaf_rows(cmd.data, len(vown)))
+                    touched[vid] = True
+                elif isinstance(cmd, AddEdge):
+                    slot = sg.add_edge(cmd.src, cmd.dst)
+                    _write_row(edata, int(lay.erow_of[slot]),
+                               _leaf_rows(cmd.data, len(edata)))
+                    self._splice_edge(slot, vown, vghost, edata, eghost)
+                    touched[cmd.src] = touched[cmd.dst] = True
+                elif isinstance(cmd, SetVertexData):
+                    vid = int(cmd.vid)
+                    rows = _leaf_rows(cmd.data, len(vown))
+                    _write_row(vown, int(lay.row_of[vid]), rows)
+                    for grow in self.ghost_rows.get(vid, ()):
+                        _write_row(vghost, grow, rows)
+                    touched[vid] = True
+                elif isinstance(cmd, SetEdgeData):
+                    slot = sg.slot_of(cmd.src, cmd.dst)
+                    rows = _leaf_rows(cmd.data, len(edata))
+                    _write_row(edata, int(lay.erow_of[slot]), rows)
+                    for grow in self.eghost_rows.get(slot, ()):
+                        _write_row(eghost, grow, rows)
+                    touched[cmd.src] = touched[cmd.dst] = True
+                else:
+                    raise TypeError(f"unknown delta command {cmd!r}")
+        except BaseException:
+            self._restore(cp)  # a batch applies atomically or not at all
+            raise
+        self._refresh_degrees()
+
+        # re-seed exactly the touched scopes, in global vertex space, then
+        # map onto the machine-major priority rows
+        prio_g = np.zeros(sg.n_cap, np.float32)
+        ok = lay.own_gid >= 0
+        prio_g[lay.own_gid[ok]] = prio[ok]
+        prio_g2, _ = reseed_scopes(
+            jnp.asarray(prio_g), touched, sg.senders, sg.receivers,
+            sg.edge_mask, sg.n_cap,
+            _masked_initial_prio(engine.program, sg))
+        prio[ok] = np.asarray(prio_g2)[lay.own_gid[ok]]
+
+        engine.refresh_tables(sorted(self.changed))
+        put = lambda leaves, tdef: jax.tree.map(
+            lambda x: jax.device_put(jnp.asarray(x), engine._shard),
+            jax.tree.unflatten(tdef, leaves))
+        return state.replace(
+            vown=put(vown, vdef), vghost=put(vghost, vdef),
+            edata=put(edata, edef), eghost=put(eghost, egdef),
+            prio=jax.device_put(jnp.asarray(prio), engine._shard))
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+
+def apply_delta(engine, state, batch: DeltaBatch):
+    """Splices a delta batch into a running engine's state.
+
+    Raises ``CapacityError`` (state unchanged) when the preallocated slack
+    cannot hold the batch — call ``regrow_engine`` and re-apply.
+    """
+    if getattr(engine, "_stream_graph", None) is None:
+        raise ValueError("engine was not built by stream.ingest "
+                         "(make_local_engine / make_dist_engine)")
+    if engine._stream_patcher is None:
+        engine._stream_patcher = (
+            _DistPatcher(engine) if isinstance(engine, ShardEngineBase)
+            else _LocalPatcher(engine))
+    return engine._stream_patcher.apply(state, batch)
+
+
+def readback(engine, state) -> DataGraph:
+    """The live *real* graph (padding stripped) as a receiver-sorted
+    ``DataGraph`` — scratch-engine comparisons, checkpoints, regrow."""
+    sg: StreamingGraph = engine._stream_graph
+    if isinstance(engine, ShardEngineBase):
+        lay = engine.layout
+        vleaves, vdef = jax.tree.flatten(_host(state.vown))
+        eleaves, edef = jax.tree.flatten(_host(state.edata))
+        ok = lay.own_gid >= 0
+
+        def vpad(x):
+            out = np.zeros((sg.n_cap,) + x.shape[1:], x.dtype)
+            out[lay.own_gid[ok]] = x[ok]
+            return out
+
+        vdata = jax.tree.unflatten(vdef, [vpad(x) for x in vleaves])
+        edata = jax.tree.unflatten(
+            edef, [x[lay.erow_of] for x in eleaves])
+    else:
+        vdata = _host(state.graph.vertex_data)
+        edata = _host(state.graph.edge_data)
+    return sg.compact(vdata, edata)
+
+
+def stream_prio(engine, state) -> np.ndarray:
+    """Current priority in global vertex space [n_cap]."""
+    sg: StreamingGraph = engine._stream_graph
+    if isinstance(engine, ShardEngineBase):
+        lay = engine.layout
+        prio = np.asarray(state.prio)
+        out = np.zeros(sg.n_cap, np.float32)
+        ok = lay.own_gid >= 0
+        out[lay.own_gid[ok]] = prio[ok]
+        return out
+    return np.asarray(state.prio)
+
+
+def total_updates(engine, state) -> int:
+    if isinstance(engine, ShardEngineBase):
+        return int(np.asarray(state.update_count).sum())
+    return int(state.total_updates)
+
+
+def regrow_engine(engine, state, *, slack: Optional[SlackConfig] = None,
+                  in_capacity: Optional[np.ndarray] = None,
+                  n_cap: Optional[int] = None):
+    """Compacts the live state and rebuilds the engine with fresh slack —
+    re-partitioning through the existing atom path (``place_vertices``
+    inside the dist engine constructor).  Converged priorities carry over,
+    so reconvergence stays incremental across the rebuild.
+
+    Returns ``(engine, state)``; the old pair is dead.
+    """
+    cfg = dict(engine._stream_config)
+    graph = readback(engine, state)
+    prio = stream_prio(engine, state)[: graph.structure.n_vertices]
+    slack = slack or cfg["slack"]
+    if cfg["kind"] == "local":
+        return make_local_engine(
+            cfg["program"], graph, engine_cls=cfg["engine_cls"],
+            tolerance=cfg["tolerance"], slack=slack,
+            sync_ops=cfg["sync_ops"], use_fused=cfg["use_fused"],
+            gas_interpret=cfg["gas_interpret"], initial_prio=prio,
+            in_capacity=in_capacity, n_cap=n_cap)
+    return make_dist_engine(
+        cfg["program"], graph, cfg["mesh"], engine_cls=cfg["engine_cls"],
+        tolerance=cfg["tolerance"], slack=slack, sync_ops=cfg["sync_ops"],
+        initial_prio=prio, in_capacity=in_capacity, n_cap=n_cap,
+        **cfg["kwargs"])
+
+
+def _batch_capacity_hint(engine, batch: DeltaBatch
+                         ) -> Tuple[np.ndarray, int]:
+    """What the regrown layout must hold: current in-degrees plus the
+    batch's per-receiver arrivals, and enough vertex slots for its
+    AddVertex commands (the ingress side reads its own journal)."""
+    sg: StreamingGraph = engine._stream_graph
+    n_new = batch.n_new_vertices
+    explicit = [c.vid for c in batch
+                if isinstance(c, AddVertex) and c.vid is not None]
+    n_needed = max([sg.n_cap] + [v + 1 for v in explicit])
+    n_needed = max(n_needed, sg.n_real + n_new + 1)
+    indeg = np.zeros(n_needed, np.int64)
+    indeg[: sg.n_cap] = sg.fill
+    for c in batch:
+        if isinstance(c, AddEdge):
+            indeg[int(c.dst)] += 1
+    return indeg, n_needed
+
+
+def apply_delta_growing(engine, state, batch: DeltaBatch,
+                        *, slack: Optional[SlackConfig] = None,
+                        max_regrows: int = 4):
+    """``apply_delta`` with automatic regrow-and-retry on capacity
+    exhaustion.  The regrown in-edge regions and vertex table are sized
+    from the failed batch itself, so those exhaust at most once; ghost
+    slab demand depends on the *new* placement and cannot be precomputed,
+    so the per-peer slack escalates (doubles) across retries instead.
+
+    Returns ``(engine, state, regrew: bool)``.
+    """
+    cur = slack or engine._stream_config["slack"]
+    for attempt in range(max_regrows + 1):
+        try:
+            return engine, apply_delta(engine, state, batch), attempt > 0
+        except CapacityError:
+            if attempt == max_regrows:
+                raise
+            in_cap, n_needed = _batch_capacity_hint(engine, batch)
+            engine, state = regrow_engine(engine, state, slack=cur,
+                                          in_capacity=in_cap,
+                                          n_cap=n_needed)
+            cur = dataclasses.replace(
+                cur,
+                ghost_slack=max(2 * cur.ghost_slack, 4),
+                eghost_slack=max(2 * cur.eghost_slack, 4))

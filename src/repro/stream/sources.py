@@ -1,0 +1,293 @@
+"""Replayable delta sources (DESIGN.md §3.11).
+
+Each source deals the *same* final graph twice: once as a prefix
+``DataGraph`` plus an ordered list of ``DeltaBatch``es (the streaming
+side), and once whole (the from-scratch side) — which is what makes the
+incremental ≡ rebuild property testable and the reconvergence benchmark
+honest.
+
+  ``pagerank_arrivals``  edge-arrival shuffle of a (symmetric) web graph;
+                         arriving edges re-normalize their source's
+                         out-weights via SetEdgeData, exactly what an
+                         ingress journal would emit.
+  ``lbp_arrivals``       MRF edges arriving with zero messages.
+  ``als_rating_arrivals``streaming Netflix ratings into ``apps/als.py``,
+                         including late-arriving movies (AddVertex).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.apps.als import make_als_graph
+from repro.apps.lbp import make_mrf_graph
+from repro.apps.pagerank import make_pagerank_graph
+from repro.core.graph import DataGraph, GraphStructure
+from repro.graphs.generators import power_law_graph
+from repro.stream.delta import AddEdge, AddVertex, DeltaBatch, SetEdgeData
+
+Pytree = Any
+
+
+def _undirected_pairs(st: GraphStructure) -> np.ndarray:
+    """Unique (u < v) pairs of a symmetric structure, [P, 2]."""
+    keep = st.senders < st.receivers
+    return np.stack([st.senders[keep], st.receivers[keep]], 1)
+
+
+def _subgraph(full: DataGraph, pairs: np.ndarray,
+              n_vertices: int) -> DataGraph:
+    """A sub-DataGraph over ``pairs`` (both directions), edge data copied
+    from the full graph, vertex data sliced to ``n_vertices`` rows."""
+    st = full.structure
+    emap = {(int(s), int(r)): i
+            for i, (s, r) in enumerate(zip(st.senders, st.receivers))}
+    s = np.concatenate([pairs[:, 0], pairs[:, 1]])
+    r = np.concatenate([pairs[:, 1], pairs[:, 0]])
+    idx = np.asarray([emap[(int(a), int(b))] for a, b in zip(s, r)],
+                     np.int64)
+    st2, perm = GraphStructure.from_edges(s, r, n_vertices)
+    vdata = jax.tree.map(lambda x: np.asarray(x)[:n_vertices],
+                         full.vertex_data)
+    edata = jax.tree.map(lambda x: np.asarray(x)[idx], full.edge_data)
+    return DataGraph.build(st2, vdata, edata, edge_perm=perm)
+
+
+def _edge_row(full: DataGraph, s: int, r: int,
+              emap: Dict[Tuple[int, int], int]) -> Pytree:
+    i = emap[(s, r)]
+    return jax.tree.map(lambda x: np.asarray(x)[i], full.edge_data)
+
+
+def _split(pairs: np.ndarray, prefix_frac: float, n_batches: int,
+           rng: np.random.Generator) -> Tuple[np.ndarray, List[np.ndarray]]:
+    order = rng.permutation(len(pairs))
+    k = int(round(prefix_frac * len(pairs)))
+    prefix = pairs[order[:k]]
+    rest = pairs[order[k:]]
+    return prefix, [b for b in np.array_split(rest, max(n_batches, 1))
+                    if len(b)]
+
+
+def pagerank_arrivals(
+    st: GraphStructure,
+    *,
+    prefix_frac: float = 0.9,
+    n_batches: int = 4,
+    seed: int = 0,
+) -> Tuple[DataGraph, List[DeltaBatch], DataGraph]:
+    """Evolving-web PageRank: undirected edge arrivals over a symmetric
+    structure.  Arriving edges carry w = 0 and are immediately followed by
+    SetEdgeData commands re-normalizing **every** out-edge of both
+    endpoints to 1/out-degree — the journal a real crawler ingress writes,
+    and the reason the final weights match ``make_pagerank_graph`` on the
+    full structure bit-for-bit.
+
+    Returns ``(prefix graph, batches, full graph)``.
+    """
+    rng = np.random.default_rng(seed)
+    pairs = _undirected_pairs(st)
+    prefix, deltas = _split(pairs, prefix_frac, n_batches, rng)
+    n = st.n_vertices
+
+    ps = np.concatenate([prefix[:, 0], prefix[:, 1]])
+    pr = np.concatenate([prefix[:, 1], prefix[:, 0]])
+    prefix_st, _ = GraphStructure.from_edges(ps, pr, n)
+    prefix_graph = make_pagerank_graph(prefix_st)
+    full_graph = make_pagerank_graph(st)
+
+    out_deg = prefix_st.out_degree.astype(np.int64).copy()
+    out_nbrs: Dict[int, List[int]] = {}
+    for a, b in zip(prefix_st.senders, prefix_st.receivers):
+        out_nbrs.setdefault(int(a), []).append(int(b))
+
+    batches = []
+    for chunk in deltas:
+        cmds: List = []
+        affected = set()
+        for u, v in chunk:
+            u, v = int(u), int(v)
+            cmds.append(AddEdge(u, v))
+            cmds.append(AddEdge(v, u))
+            out_nbrs.setdefault(u, []).append(v)
+            out_nbrs.setdefault(v, []).append(u)
+            out_deg[u] += 1
+            out_deg[v] += 1
+            affected.update((u, v))
+        for u in sorted(affected):
+            w = np.float32(1.0 / max(out_deg[u], 1))
+            for nbr in out_nbrs[u]:
+                cmds.append(SetEdgeData(u, nbr, {"w": w}))
+        batches.append(DeltaBatch(cmds))
+    return prefix_graph, batches, full_graph
+
+
+def pagerank_cluster_arrival(
+    n0: int,
+    *,
+    growth: float = 0.10,
+    avg_degree: float = 6.0,
+    n_attach: int = 4,
+    alpha: float = 0.15,
+    seed: int = 0,
+) -> Tuple[DataGraph, List[DeltaBatch], DataGraph, np.ndarray]:
+    """The evolving-web headline scenario: a new *site* — a power-law
+    cluster holding ``growth`` of the graph's vertices and edges — appears
+    and links into the existing web at ``n_attach`` points.
+
+    This is the delta shape where incremental reconvergence shines:
+    uniformly shuffled arrivals re-normalize hub out-weights and perturb
+    ranks globally (reconvergence ≈ recompute — measured, not assumed,
+    in BENCH_stream.json's uniform record), while a cluster arrival
+    leaves the old web's dataflow untouched except at the attachment
+    targets, so the reconvergence region is the new cluster plus a
+    boundary ripple — a ~|V|/|cluster| update advantage.
+
+    Returns ``(prefix graph, [one batch], full graph, in_capacity)``;
+    ``in_capacity`` is the ingress capacity hint (final in-degrees) that
+    sizes the streaming regions so cluster hubs don't overflow the
+    uniform slack minimum.
+    """
+    rng = np.random.default_rng(seed)
+    st0 = power_law_graph(n0, avg_degree=avg_degree, seed=seed)
+    nc = max(int(round(growth * n0)), 1)
+    n_total = n0 + nc
+    stc = power_law_graph(nc, avg_degree=avg_degree, seed=seed + 1)
+    new_pairs = [(int(s) + n0, int(r) + n0)
+                 for s, r in zip(stc.senders, stc.receivers) if s < r]
+    new_pairs += [(int(rng.integers(n0, n_total)),
+                   int(rng.integers(0, n0))) for _ in range(n_attach)]
+
+    s = np.concatenate([st0.senders, [p[0] for p in new_pairs],
+                        [p[1] for p in new_pairs]])
+    r = np.concatenate([st0.receivers, [p[1] for p in new_pairs],
+                        [p[0] for p in new_pairs]])
+    full_st, _ = GraphStructure.from_edges(s, r, n_total)
+    full_graph = make_pagerank_graph(full_st)
+    prefix_graph = make_pagerank_graph(st0)
+
+    out_deg = np.concatenate([st0.out_degree.astype(np.int64),
+                              np.zeros(nc, np.int64)])
+    out_nbrs: Dict[int, List[int]] = {}
+    for a, b in zip(st0.senders, st0.receivers):
+        out_nbrs.setdefault(int(a), []).append(int(b))
+
+    alpha_over_n = np.float32(alpha / n_total)
+    cmds: List = [AddVertex(vid=v, data={"rank": alpha_over_n})
+                  for v in range(n0, n_total)]
+    affected = set()
+    for u, v in new_pairs:
+        cmds.append(AddEdge(u, v))
+        cmds.append(AddEdge(v, u))
+        out_nbrs.setdefault(u, []).append(v)
+        out_nbrs.setdefault(v, []).append(u)
+        out_deg[u] += 1
+        out_deg[v] += 1
+        affected.update((u, v))
+    for u in sorted(affected):
+        w = np.float32(1.0 / max(out_deg[u], 1))
+        for nbr in out_nbrs[u]:
+            cmds.append(SetEdgeData(u, nbr, {"w": w}))
+    return (prefix_graph, [DeltaBatch(cmds)], full_graph,
+            full_st.in_degree.astype(np.int64))
+
+
+def lbp_arrivals(
+    st: GraphStructure,
+    n_states: int,
+    *,
+    prefix_frac: float = 0.9,
+    n_batches: int = 4,
+    seed: int = 0,
+    unary_seed: int = 0,
+) -> Tuple[DataGraph, List[DeltaBatch], DataGraph]:
+    """MRF edge arrivals: new pairwise factors join a running LBP with
+    zero (uniform) initial messages; unaries are vertex data and identical
+    on both sides of the equivalence."""
+    rng = np.random.default_rng(seed)
+    pairs = _undirected_pairs(st)
+    prefix, deltas = _split(pairs, prefix_frac, n_batches, rng)
+    n = st.n_vertices
+
+    ps = np.concatenate([prefix[:, 0], prefix[:, 1]])
+    pr = np.concatenate([prefix[:, 1], prefix[:, 0]])
+    prefix_st, _ = GraphStructure.from_edges(ps, pr, n)
+    prefix_graph = make_mrf_graph(prefix_st, n_states, seed=unary_seed)
+    full_graph = make_mrf_graph(st, n_states, seed=unary_seed)
+
+    zero_msg = {"msg": np.zeros(n_states, np.float32)}
+    batches = []
+    for chunk in deltas:
+        cmds: List = []
+        for u, v in chunk:
+            cmds.append(AddEdge(int(u), int(v), zero_msg))
+            cmds.append(AddEdge(int(v), int(u), zero_msg))
+        batches.append(DeltaBatch(cmds))
+    return prefix_graph, batches, full_graph
+
+
+def als_rating_arrivals(
+    n_users: int,
+    n_movies: int,
+    n_ratings: int,
+    d: int,
+    *,
+    prefix_frac: float = 0.9,
+    n_batches: int = 4,
+    n_late_movies: int = 0,
+    seed: int = 0,
+) -> Tuple[DataGraph, List[DeltaBatch], DataGraph, dict]:
+    """Streaming Netflix ratings into ``apps/als.py``.
+
+    ``n_late_movies`` movies (the highest vertex ids) do not exist in the
+    prefix at all: the first batch opens with AddVertex commands carrying
+    their initial factors, then their ratings arrive like any others —
+    the AddVertex path of the command vocabulary, exercised on the
+    workload the paper streams (Sec. 5.1).
+
+    Returns ``(prefix graph, batches, full graph, info)``.
+    """
+    rng = np.random.default_rng(seed + 1)
+    full_graph, info = make_als_graph(n_users, n_movies, n_ratings, d,
+                                      seed=seed)
+    st = full_graph.structure
+    emap = {(int(s), int(r)): i
+            for i, (s, r) in enumerate(zip(st.senders, st.receivers))}
+    pairs = _undirected_pairs(st)
+
+    n_total = st.n_vertices
+    late = set(range(n_total - n_late_movies, n_total))
+    touches_late = np.asarray([int(v) in late for _, v in pairs])
+    early_pairs = pairs[~touches_late]
+    late_pairs = pairs[touches_late]
+
+    prefix, deltas = _split(early_pairs, prefix_frac, n_batches, rng)
+    # late-movie ratings ride the regular batches, spread evenly
+    late_chunks = (np.array_split(late_pairs, len(deltas))
+                   if len(deltas) and len(late_pairs) else [])
+    n_prefix_vertices = n_total - n_late_movies
+    prefix_graph = _subgraph(full_graph, prefix, n_prefix_vertices)
+
+    factors = np.asarray(full_graph.vertex_data["factor"])
+    batches = []
+    for i, chunk in enumerate(deltas):
+        cmds: List = []
+        if i == 0:
+            for vid in sorted(late):
+                cmds.append(AddVertex(
+                    vid=vid, data={"factor": factors[vid]}))
+        for u, v in chunk:
+            u, v = int(u), int(v)
+            cmds.append(AddEdge(u, v, _edge_row(full_graph, u, v, emap)))
+            cmds.append(AddEdge(v, u, _edge_row(full_graph, v, u, emap)))
+        if i < len(late_chunks):
+            for u, v in late_chunks[i]:
+                u, v = int(u), int(v)
+                cmds.append(AddEdge(u, v,
+                                    _edge_row(full_graph, u, v, emap)))
+                cmds.append(AddEdge(v, u,
+                                    _edge_row(full_graph, v, u, emap)))
+        batches.append(DeltaBatch(cmds))
+    return prefix_graph, batches, full_graph, info

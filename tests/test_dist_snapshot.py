@@ -76,7 +76,7 @@ class TestDistributedCutProperty:
                                       n_init):
         """Random graphs × mesh shapes × initiator sets: the distributed
         wave + channel-capture invariants all hold."""
-        struct = connected_graph(n, seed)
+        struct = connected_graph(n, seed=seed)
         g = make_pagerank_graph(struct)
         prog = PageRankProgram(0.15, n)
         eng = DistributedEngine(prog, g, sub_mesh(n_machines),
@@ -91,7 +91,7 @@ class TestDistributedCutProperty:
         """Same invariants under the pipelined-locking schedule, where the
         marker phase interleaves with rank arbitration exchanges."""
         n = 60
-        struct = connected_graph(n, 11)
+        struct = connected_graph(n, seed=11)
         g = make_pagerank_graph(struct)
         prog = PageRankProgram(0.15, n)
         eng = DistributedLockingEngine(prog, g, cpu_mesh,
@@ -107,7 +107,7 @@ class TestMarkerTraffic:
         caching machine) pair ships one at most once, and a completed
         snapshot ships none."""
         n = 80
-        struct = connected_graph(n, 5)
+        struct = connected_graph(n, seed=5)
         g = make_pagerank_graph(struct)
         prog = PageRankProgram(0.15, n)
         eng = DistributedEngine(prog, g, cpu_mesh, tolerance=1e-9)
@@ -132,7 +132,7 @@ class TestRestartEquivalence:
         ``SnapshotState`` for the *local* engines too (shared
         wave/capture primitives, DESIGN.md §3.10)."""
         n = 80
-        struct = connected_graph(n, 3)
+        struct = connected_graph(n, seed=3)
         g = make_pagerank_graph(struct)
         prog = PageRankProgram(0.15, n)
         eng = DistributedEngine(prog, g, cpu_mesh, tolerance=1e-9)
@@ -157,7 +157,7 @@ class TestRestartEquivalence:
         """Fig. 4's async property at the distributed level: regular
         updates keep accumulating while the marker wave is in flight."""
         n = 120
-        struct = connected_graph(n, 7)
+        struct = connected_graph(n, seed=7)
         g = make_pagerank_graph(struct)
         prog = PageRankProgram(0.15, n)
         eng = DistributedEngine(prog, g, cpu_mesh, tolerance=1e-10)

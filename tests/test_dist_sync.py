@@ -1,0 +1,125 @@
+"""Distributed sync operations (paper Sec. 3.5; DESIGN.md §3.9).
+
+Closes the §3.9 TODO: sync ops evaluate at the shard_map step barrier —
+per-machine masked ``map_fn`` fold, cross-machine ``psum``, replicated
+``finalize`` — and must produce the *same* global values as the host-loop
+engines computing the same sync over the same trajectory.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.apps.pagerank import PageRankProgram, make_pagerank_graph
+from repro.core import ChromaticEngine, FnSyncOp
+from repro.dist import DistributedEngine, DistributedLockingEngine
+from repro.graphs.generators import power_law_graph
+
+pytestmark = pytest.mark.skipif(
+    jax.device_count() < 4, reason="needs 4 forced host devices "
+    "(XLA_FLAGS=--xla_force_host_platform_device_count=4)")
+
+
+def total_mass():
+    """Σ_v R(v) — the PageRank mass sync (paper Ex. of Sec. 3.5: global
+    aggregates readable by update functions)."""
+    return FnSyncOp(lambda v: {"mass": v["rank"]}, name="mass")
+
+
+def mean_rank():
+    return FnSyncOp(
+        lambda v: {"m": v["rank"]},
+        finalize=lambda z, n: {"m": z["m"] / n},
+        name="mean")
+
+
+class TestDistSyncParity:
+    def test_sweep_engine_matches_chromatic(self, cpu_mesh,
+                                            small_power_law):
+        st = small_power_law
+        g = make_pagerank_graph(st)
+        prog = PageRankProgram(0.15, st.n_vertices)
+        ce = ChromaticEngine(prog, g, tolerance=1e-7,
+                             sync_ops=(total_mass(), mean_rank()))
+        de = DistributedEngine(prog, g, cpu_mesh, tolerance=1e-7,
+                               colors=np.asarray(ce.colors),
+                               sync_ops=(total_mass(), mean_rank()))
+        cs, _ = ce.run(ce.init(g), max_steps=300)
+        ds, _ = de.run(de.init(), max_steps=300)
+        # identical schedules (same coloring) -> identical sync values
+        np.testing.assert_allclose(
+            np.asarray(ds.globals_["mass"]["mass"]),
+            np.asarray(cs.globals_["mass"]["mass"]), rtol=1e-6)
+        np.testing.assert_allclose(
+            np.asarray(ds.globals_["mean"]["m"]),
+            np.asarray(cs.globals_["mean"]["m"]), rtol=1e-6)
+        # and the mass is the true converged total
+        ref = float(np.asarray(cs.graph.vertex_data["rank"]).sum())
+        assert abs(float(np.asarray(ds.globals_["mass"]["mass"])) - ref) \
+            <= 1e-6 * max(abs(ref), 1)
+
+    def test_locking_engine_mass_at_fixed_point(self, cpu_mesh,
+                                                small_power_law):
+        st = small_power_law
+        g = make_pagerank_graph(st)
+        prog = PageRankProgram(0.15, st.n_vertices)
+        le = DistributedLockingEngine(
+            prog, g, cpu_mesh, tolerance=1e-7, pipeline_length=1024,
+            sync_ops=(total_mass(),))
+        ls, _ = le.run(le.init(), max_steps=400)
+        # different schedule than the host engines, same fixed point —
+        # the sync must report the converged mass of ITS OWN state
+        own_mass = float(np.asarray(
+            le.vertex_data(ls)["rank"]).sum())
+        assert abs(float(np.asarray(ls.globals_["mass"]["mass"]))
+                   - own_mass) <= 1e-5 * max(abs(own_mass), 1)
+
+    def test_inconsistent_sync_sees_previous_barrier(self, cpu_mesh):
+        """A background sync racing with updates (consistent=False) reads
+        the previous step's data — after exactly one step from a uniform
+        init it must report the *initial* mass, not the updated one."""
+        st = power_law_graph(120, avg_degree=4, seed=3)
+        g = make_pagerank_graph(st)
+        prog = PageRankProgram(0.15, st.n_vertices)
+        stale = FnSyncOp(lambda v: {"mass": v["rank"]}, name="stale",
+                         consistent=False)
+        fresh = FnSyncOp(lambda v: {"mass": v["rank"]}, name="fresh")
+        de = DistributedEngine(prog, g, cpu_mesh, tolerance=1e-7,
+                               sync_ops=(stale, fresh))
+        s0 = de.init()
+        init_mass = float(np.asarray(s0.globals_["stale"]["mass"]))
+        s1 = de.step(s0)
+        assert abs(float(np.asarray(s1.globals_["stale"]["mass"]))
+                   - init_mass) <= 1e-6
+        fresh_mass = float(np.asarray(s1.globals_["fresh"]["mass"]))
+        own = float(np.asarray(de.vertex_data(s1)["rank"]).sum())
+        assert abs(fresh_mass - own) <= 1e-6
+
+    def test_update_fn_reads_globals(self, cpu_mesh):
+        """Update functions may *read* the sync output (Sec. 3.5): a
+        PageRank variant normalizing by the mass sync must converge to the
+        normalized fixed point on the shard_map path."""
+        st = power_law_graph(100, avg_degree=4, seed=1)
+        g = make_pagerank_graph(st)
+
+        class NormalizingPR(PageRankProgram):
+            def apply(self, vertex_data, acc, glob=None):
+                out = super().apply(vertex_data, acc, glob)
+                if glob and "mass" in glob:
+                    scale = jnp.maximum(glob["mass"]["mass"], 1e-6)
+                    out = out._replace(
+                        vertex_data={"rank": out.vertex_data["rank"]
+                                     / scale * 1.0})
+                return out
+
+        prog = NormalizingPR(0.15, st.n_vertices)
+        ce = ChromaticEngine(prog, g, tolerance=1e-7,
+                             sync_ops=(total_mass(),))
+        de = DistributedEngine(prog, g, cpu_mesh, tolerance=1e-7,
+                               colors=np.asarray(ce.colors),
+                               sync_ops=(total_mass(),))
+        cs, _ = ce.run(ce.init(g), max_steps=200)
+        ds, _ = de.run(de.init(), max_steps=200)
+        np.testing.assert_allclose(
+            de.vertex_data(ds)["rank"],
+            np.asarray(cs.graph.vertex_data["rank"]), atol=1e-5)

@@ -40,12 +40,12 @@ CHAOS_SEED = int(os.environ.get("REPRO_CHAOS_SEED", "0"))
 
 
 def _pagerank_case(n=80, seed=3):
-    struct = connected_graph(n, seed)
+    struct = connected_graph(n, seed=seed)
     g = make_pagerank_graph(struct)
     return g, PageRankProgram(0.15, n), "rank", 1e-9
 
 def _lbp_case(n=60, seed=3):
-    struct = connected_graph(n, seed)
+    struct = connected_graph(n, seed=seed)
     g = make_mrf_graph(struct, n_states=3, seed=1)
     return g, LoopyBPProgram(3), "belief", 1e-6
 

@@ -174,7 +174,7 @@ class TestFaultTolerance:
         sharded round-trip -> restore_engine_state on the locking engine ->
         same fixed point as the uninterrupted run."""
         n = 80
-        st_ = connected_graph(n, 3)
+        st_ = connected_graph(n, seed=3)
         g = make_pagerank_graph(st_)
         prog = PageRankProgram(0.15, n)
 

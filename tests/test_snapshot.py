@@ -25,7 +25,7 @@ class TestAsyncSnapshot:
         """Chandy-Lamport marker wave: for every edge (u, v),
         |save_step[u] - save_step[v]| <= 1 once both saved, every vertex is
         saved exactly once, and every edge is captured."""
-        struct = connected_graph(n, seed)
+        struct = connected_graph(n, seed=seed)
         g = make_pagerank_graph(struct)
         prog = PageRankProgram(0.15, n)
         eng = ChromaticEngine(prog, g, tolerance=1e-12)
@@ -42,7 +42,7 @@ class TestAsyncSnapshot:
 
     def test_restart_reaches_same_fixed_point(self):
         n = 80
-        struct = connected_graph(n, 3)
+        struct = connected_graph(n, seed=3)
         g = make_pagerank_graph(struct)
         prog = PageRankProgram(0.15, n)
         eng = ChromaticEngine(prog, g, tolerance=1e-10)
@@ -60,7 +60,7 @@ class TestAsyncSnapshot:
         """Fig. 4(a): updates keep accumulating during the async snapshot,
         while the sync snapshot has paused steps."""
         n = 100
-        struct = connected_graph(n, 5)
+        struct = connected_graph(n, seed=5)
         g = make_pagerank_graph(struct)
         prog = PageRankProgram(0.15, n)
 
