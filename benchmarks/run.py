@@ -5,8 +5,9 @@
 Prints CSV per figure.  ``--json`` additionally writes one machine-readable
 ``BENCH_<name>.json`` per harness (records + wall time) so the perf
 trajectory is recorded across PRs; CI uploads them as artifacts.  The
-roofline table is separate (benchmarks/roofline.py — it consumes the
-dry-run JSON).
+``roofline`` harness classifies each compiled engine step as compute-,
+memory-, or collective-bound (benchmarks/roofline.py; the same module's
+``main`` still consumes the launch dry-run JSON standalone).
 """
 from __future__ import annotations
 
@@ -18,6 +19,7 @@ import time
 from benchmarks import gas_bench
 from benchmarks import paper_figures as pf
 from benchmarks import pipeline_bench
+from benchmarks import roofline
 from benchmarks import snapshot_bench
 from benchmarks import stream_bench
 
@@ -32,6 +34,7 @@ HARNESSES = {
     "table2": pf.table2_throughput,
     "gas": gas_bench.gas_microbenchmark,
     "pipeline": pipeline_bench.pipeline_sweep,
+    "roofline": roofline.engine_roofline,
     "snapshot": snapshot_bench.snapshot_overhead,
     "stream": stream_bench.stream_reconvergence,
 }

@@ -98,18 +98,33 @@ class CheckpointManager:
             self._write(step, flat, str(treedef))
 
     def save_shards(self, step: int, shards: List[Dict[str, np.ndarray]],
-                    blocking: bool = False) -> None:
+                    blocking: bool = False,
+                    meta: Optional[Dict] = None) -> None:
         """Per-machine journals (paper Sec. 4.3's "each machine
         incrementally flushes to the DFS"): ``shard_<m>.npz`` per entry
         under one ``ckpt_<step>`` directory, committed atomically — a
         crash mid-write leaves only an invisible tmp directory, never a
-        torn checkpoint a restore could select."""
+        torn checkpoint a restore could select.  ``meta`` lands in the
+        checkpoint's ``meta.json`` (e.g. the delta-journal offset a
+        streaming cut anchors to) and commits with the same rename."""
         flats = [{k: np.asarray(v) for k, v in shard.items()}
                  for shard in shards]  # host copy: the only sync part
         if self.async_writes and not blocking:
-            self._q.put((self._write_shards, (step, flats)))
+            self._q.put((self._write_shards, (step, flats, meta)))
         else:
-            self._write_shards(step, flats)
+            self._write_shards(step, flats, meta)
+
+    def read_meta(self, step: Optional[int] = None) -> Dict:
+        """The committed ``meta.json`` of the latest (or given) checkpoint."""
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(
+                f"no committed checkpoint in {self.directory}")
+        path = os.path.join(self.directory, f"ckpt_{step:010d}", "meta.json")
+        with open(path) as f:
+            return json.load(f)
 
     def restore_shards(self, step: Optional[int] = None
                        ) -> Tuple[int, List[Dict[str, np.ndarray]]]:
@@ -220,12 +235,12 @@ class CheckpointManager:
 
         self._commit_dir(step, payload)
 
-    def _write_shards(self, step: int,
-                      flats: List[Dict[str, np.ndarray]]) -> None:
+    def _write_shards(self, step: int, flats: List[Dict[str, np.ndarray]],
+                      meta: Optional[Dict] = None) -> None:
         def payload(tmp: str) -> Dict:
             for m, flat in enumerate(flats):
                 np.savez(os.path.join(tmp, f"shard_{m:05d}.npz"), **flat)
-            return {"n_shards": len(flats)}
+            return {"n_shards": len(flats), **(meta or {})}
 
         self._commit_dir(step, payload)
 

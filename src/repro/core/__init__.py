@@ -4,7 +4,8 @@ from repro.core.chromatic import ChromaticEngine
 from repro.core.consistency import Consistency
 from repro.core.distributed import ClusterModel, SimulatedCluster
 from repro.core.dynamic import DynamicEngine
-from repro.core.engine_base import Engine, EngineState, init_state
+from repro.core.engine_base import (Engine, EngineState, init_state,
+                                    UnsupportedStreamingError)
 from repro.core.graph import (DataGraph, GraphStructure, gather_scope,
                               scatter_to_neighbors, segment_combine)
 from repro.core.scheduler import (FifoScheduler, MultiQueueScheduler,
@@ -24,7 +25,8 @@ __all__ = [
     "Engine", "EngineState", "FifoScheduler", "FnSyncOp", "FusedGather",
     "GraphStructure", "MultiQueueScheduler", "PriorityScheduler",
     "Scheduler", "SequentialEngine", "SimulatedCluster", "SnapshotState",
-    "SweepScheduler", "SyncOp", "SyncSnapshotDriver", "VertexProgram",
+    "SweepScheduler", "SyncOp", "SyncSnapshotDriver",
+    "UnsupportedStreamingError", "VertexProgram",
     "gather_scope", "init_snapshot", "init_state", "restore_engine_state",
     "scatter_to_neighbors", "segment_combine", "supports_fused_gather",
 ]

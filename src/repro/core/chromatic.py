@@ -51,6 +51,8 @@ class ChromaticEngine(Engine):
         use_fused: Optional[bool] = None,
         gas_interpret: Optional[bool] = None,
         stream_tables=None,
+        residual_dtype=None,
+        spare_colors: int = 0,
     ):
         if colors is None:
             colors = coloring_for(graph.structure, program.consistency)
@@ -63,18 +65,19 @@ class ChromaticEngine(Engine):
         super().__init__(
             program, graph, tolerance, sync_ops,
             scheduler=SweepScheduler(program, graph.structure, tolerance,
-                                     colors),
+                                     colors, spare_colors=spare_colors),
             use_fused=use_fused, gas_interpret=gas_interpret,
-            stream_tables=stream_tables)
+            stream_tables=stream_tables, residual_dtype=residual_dtype)
         self.colors = self.scheduler.colors
         self.num_colors = self.scheduler.num_phases
 
         # Streaming mode skips the per-color edge ranges: the dynamic-
         # tables path streams the full capacity edge set each phase (the
         # color mask gates the write-back), since color membership of
-        # *edges* goes stale as deltas land.  The coloring itself is kept
-        # — delta edges joining same-colored vertices degrade that pair to
-        # Jacobi reads until regrow() recolors (DESIGN §3.11).
+        # *edges* goes stale as deltas land.  The live coloring rides the
+        # dynamic tables instead — delta edges joining same-colored
+        # vertices are repaired at apply_delta time (DESIGN §3.12), so
+        # edge consistency holds between regrows too.
         self._color_edges: Optional[list] = None
         if self.use_fused and stream_tables is None:
             st = graph.structure

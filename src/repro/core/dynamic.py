@@ -54,12 +54,18 @@ class DynamicEngine(Engine):
         *,
         use_fused: Optional[bool] = None,
         gas_interpret: Optional[bool] = None,
+        stream_tables=None,
     ):
+        # stream_tables is accepted so streaming builders can name this
+        # engine; the base class rejects it (UnsupportedStreamingError) —
+        # the PriorityScheduler's arbitration reads the static structure,
+        # so letting it "stream" would silently race on stale edges.
         super().__init__(
             program, graph, tolerance, sync_ops,
             scheduler=PriorityScheduler(program, graph.structure, tolerance,
                                         pipeline_length, serializable),
-            use_fused=use_fused, gas_interpret=gas_interpret)
+            use_fused=use_fused, gas_interpret=gas_interpret,
+            stream_tables=stream_tables)
         self.pipeline_length = self.scheduler.pipeline_length
         self.serializable = self.scheduler.serializable
 

@@ -36,6 +36,12 @@ from repro.kernels.gas.ops import EdgeSet, active_row_blocks, gather_combine
 Pytree = Any
 
 
+class UnsupportedStreamingError(ValueError):
+    """Raised at construction when an engine/scheduler combination cannot
+    run against dynamic structure tables (it would silently compute on the
+    stale structure baked into its trace)."""
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class EngineState:
@@ -83,6 +89,7 @@ def apply_phase(
     *,
     edges: Optional[EdgeSet] = None,
     interpret: Optional[bool] = None,
+    residual_dtype=jnp.float32,
 ) -> Tuple[DataGraph, jnp.ndarray, jnp.ndarray]:
     """Executes ``f(v, S_v)`` for every vertex in ``mask`` simultaneously.
 
@@ -91,10 +98,15 @@ def apply_phase(
     edges touched).  Passing ``edges`` (a prepared ``EdgeSet``) routes the
     gather⊕combine through the fused GAS kernel with active-block skipping
     (DESIGN.md §3.5); the dense path gathers all E edges regardless of mask.
+
+    ``residual_dtype`` is the scheduler's priority precision: f32 by
+    default, f64 opt-in for tolerance regimes below the f32 residual floor
+    (~1e-6; requires jax x64 and f64 graph data to matter).
     """
     if edges is not None:
         return fused_apply_phase(program, graph, mask, glob, edges,
-                                 interpret=interpret)
+                                 interpret=interpret,
+                                 residual_dtype=residual_dtype)
     st = graph.structure
     receivers = jnp.asarray(st.receivers)
     senders = jnp.asarray(st.senders)
@@ -119,7 +131,7 @@ def apply_phase(
         edata = masked_update(graph.edge_data, new_e, mask[senders])
         graph = graph.replace(edge_data=edata)
 
-    residual = jnp.where(mask, residual.astype(jnp.float32), 0.0)
+    residual = jnp.where(mask, residual.astype(residual_dtype), 0.0)
     return graph, residual, jnp.asarray(st.n_edges, jnp.int32)
 
 
@@ -131,6 +143,7 @@ def fused_apply_phase(
     edges: EdgeSet,
     *,
     interpret: Optional[bool] = None,
+    residual_dtype=jnp.float32,
 ) -> Tuple[DataGraph, jnp.ndarray, jnp.ndarray]:
     """The fused GAS path: one kernel per declared gather leaf, no edge_ctx,
     no [E, D] message materialization, inactive row blocks skipped.
@@ -166,7 +179,7 @@ def fused_apply_phase(
     new_v, residual = program.apply(graph.vertex_data, acc, glob)
     vdata = masked_update(graph.vertex_data, new_v, mask)
     graph = graph.replace(vertex_data=vdata)
-    residual = jnp.where(mask, residual.astype(jnp.float32), 0.0)
+    residual = jnp.where(mask, residual.astype(residual_dtype), 0.0)
     edges_touched = jnp.sum(
         jnp.where(block_active > 0, edges.block_counts, 0)).astype(jnp.int32)
     return graph, residual, edges_touched
@@ -182,6 +195,7 @@ def stream_apply_phase(
     fused_meta=None,
     interpret: Optional[bool] = None,
     tolerance: float = 1e-3,
+    residual_dtype=jnp.float32,
 ) -> Tuple[DataGraph, jnp.ndarray, jnp.ndarray, Optional[jnp.ndarray]]:
     """``apply_phase`` over a *dynamic* edge structure (DESIGN.md §3.11).
 
@@ -274,17 +288,19 @@ def stream_apply_phase(
         new_e = program.edge_out(ctx2, new_src, src_acc)
         wmask = jnp.logical_and(mask[senders], emask)
         prio_bump = edge_residual_bump(graph.edge_data, new_e, wmask,
-                                       receivers, emask, n, tolerance)
+                                       receivers, emask, n, tolerance,
+                                       dtype=residual_dtype)
         edata = masked_update(graph.edge_data, new_e, wmask)
         graph = graph.replace(edge_data=edata)
 
-    residual = jnp.where(mask, residual.astype(jnp.float32), 0.0)
+    residual = jnp.where(mask, residual.astype(residual_dtype), 0.0)
     return graph, residual, edges_touched, prio_bump
 
 
 def edge_residual_bump(old_e: Pytree, new_e: Pytree, wmask: jnp.ndarray,
                        receivers: jnp.ndarray, emask: jnp.ndarray,
-                       n: int, tolerance: float) -> jnp.ndarray:
+                       n: int, tolerance: float,
+                       dtype=jnp.float32) -> jnp.ndarray:
     """Per-receiver priority contribution of adjacent-edge writes: the
     largest component change of each written edge, maxed into the vertex
     that reads it, thresholded at the tolerance.
@@ -295,9 +311,9 @@ def edge_residual_bump(old_e: Pytree, new_e: Pytree, wmask: jnp.ndarray,
     it past the tolerance and ping-pong forever.  Super-tolerance changes
     (a delta edge's message jumping off its init value) pass through and
     re-schedule the reader exactly once per real change."""
-    delta = jnp.zeros(wmask.shape[0], jnp.float32)
+    delta = jnp.zeros(wmask.shape[0], dtype)
     for o, v in zip(jax.tree.leaves(old_e), jax.tree.leaves(new_e)):
-        d = jnp.abs(v.astype(jnp.float32) - o.astype(jnp.float32))
+        d = jnp.abs(v.astype(dtype) - o.astype(dtype))
         delta = jnp.maximum(delta, d.reshape(d.shape[0], -1).max(axis=1))
     delta = jnp.where(delta > tolerance, delta, 0.0)
     recv_idx = jnp.where(emask, receivers, n)
@@ -345,11 +361,14 @@ class Engine:
         use_fused: Optional[bool] = None,
         gas_interpret: Optional[bool] = None,
         stream_tables: Optional[Dict[str, Any]] = None,
+        residual_dtype=None,
     ):
         self.program = program
         self.structure = graph.structure
         self.tolerance = float(tolerance)
         self.sync_ops = tuple(sync_ops)
+        self.residual_dtype = (jnp.float32 if residual_dtype is None
+                               else residual_dtype)
         fusable = supports_fused_gather(program)
         self.use_fused = fusable if use_fused is None \
             else bool(use_fused) and fusable
@@ -359,12 +378,14 @@ class Engine:
                           else self._make_scheduler())
         self._tables: Optional[Dict[str, jnp.ndarray]] = None
         self._stream_fused_meta = None
+        self._stream_colors: Optional[np.ndarray] = None
         if stream_tables is not None:
             if not isinstance(self.scheduler, SweepScheduler):
-                raise ValueError(
+                raise UnsupportedStreamingError(
                     "streaming supports sweep-scheduled local engines; "
                     "dynamic/prioritized schedules stream through the dist "
                     "engines (arbitration there reads the dynamic tables)")
+            self._stream_colors = np.asarray(self.scheduler.colors, np.int32)
             self.set_stream_tables(stream_tables)
             if self.use_fused:
                 self._stream_fused_meta = self._build_stream_fused()
@@ -380,8 +401,18 @@ class Engine:
     def set_stream_tables(self, tables: Dict[str, Any]) -> None:
         """(Re)loads the dynamic structure tables after a delta batch.  The
         treedef/shapes/dtypes never change between ``regrow()``s, so the
-        jitted step's cache entry keeps hitting."""
+        jitted step's cache entry keeps hitting.  The live coloring rides
+        along as a table so incremental color repair (DESIGN.md §3.12)
+        never retraces either."""
         self._tables = {k: jnp.asarray(v) for k, v in tables.items()}
+        if self._stream_colors is not None:
+            self._tables["colors"] = jnp.asarray(self._stream_colors)
+
+    def set_stream_colors(self, colors) -> None:
+        """Swaps in a repaired coloring (values only — same shape/dtype)."""
+        self._stream_colors = np.asarray(colors, np.int32)
+        if self._tables is not None:
+            self._tables["colors"] = jnp.asarray(self._stream_colors)
 
     def _build_stream_fused(self):
         """Static GAS metadata of the capacity layout: slot reservation per
@@ -433,17 +464,20 @@ class Engine:
         # unrolled: num_phases is 1 for all but the chromatic sweep, whose
         # color count is small; the sync op runs safely between phases
         for phase in range(self.scheduler.num_phases):
-            mask, sched = self.scheduler.select(sched, prio, phase)
+            mask, sched = self.scheduler.select(sched, prio, phase,
+                                                tables=tables)
             if tables is None:
                 graph, residual, et = apply_phase(
                     self.program, graph, mask, glob,
                     edges=self._phase_edges(phase),
-                    interpret=self.gas_interpret)
+                    interpret=self.gas_interpret,
+                    residual_dtype=self.residual_dtype)
             else:
                 graph, residual, et, bump = stream_apply_phase(
                     self.program, graph, mask, glob, tables,
                     fused_meta=self._stream_fused_meta,
-                    interpret=self.gas_interpret, tolerance=self.tolerance)
+                    interpret=self.gas_interpret, tolerance=self.tolerance,
+                    residual_dtype=self.residual_dtype)
             prio, sched = self.scheduler.reschedule(sched, prio, mask,
                                                     residual, tables=tables)
             if tables is not None and bump is not None:
@@ -460,8 +494,11 @@ class Engine:
 
     # -- shared driver --------------------------------------------------------
     def init(self, graph: DataGraph, initial_prio=None) -> EngineState:
-        return init_state(self.program, graph, initial_prio, self.sync_ops,
-                          scheduler=self.scheduler)
+        state = init_state(self.program, graph, initial_prio, self.sync_ops,
+                           scheduler=self.scheduler)
+        if self.residual_dtype != jnp.float32:
+            state = state.replace(prio=state.prio.astype(self.residual_dtype))
+        return state
 
     def step(self, state: EngineState) -> EngineState:
         return self._jit_step(state, self._tables)

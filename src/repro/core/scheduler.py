@@ -10,12 +10,15 @@ On TPU the scheduler is array-native: T is a priority array (active ⇔
 ``prio > tolerance``) and a scheduler is four operations over it:
 
   init(prio)                        -> sched state (pytree; () if stateless)
-  select(sched, prio, phase)        -> (execute mask, sched)
+  select(sched, prio, phase, tables=None) -> (execute mask, sched)
   reschedule(sched, prio, mask, r)  -> (prio, sched)   # T \\ executed ∪ T'
   done(sched, prio)                 -> scalar bool      # scheduler empty
 
 ``select`` may be called ``num_phases`` times per engine step (the chromatic
-sweep's color-steps); stateless schedulers ignore ``sched``.
+sweep's color-steps); stateless schedulers ignore ``sched``.  ``tables``
+(streaming engines only) carries the dynamic structure tables — the sweep
+reads its live coloring from ``tables["colors"]`` there, so incremental
+color repair (DESIGN.md §3.12) is a value patch, not a retrace.
 
 Lock arbitration (paper Sec. 4.2.2): a parallel step may only execute an
 independent set under the program's consistency model.  The pipelined
@@ -268,8 +271,8 @@ class Scheduler:
     def init(self, prio: jnp.ndarray) -> Pytree:
         return ()
 
-    def select(self, sched: Pytree, prio: jnp.ndarray, phase: int = 0
-               ) -> Tuple[jnp.ndarray, Pytree]:
+    def select(self, sched: Pytree, prio: jnp.ndarray, phase: int = 0,
+               tables=None) -> Tuple[jnp.ndarray, Pytree]:
         raise NotImplementedError
 
     def reschedule(self, sched: Pytree, prio: jnp.ndarray, mask: jnp.ndarray,
@@ -297,16 +300,22 @@ class SweepScheduler(Scheduler):
     consistency.  Stateless."""
 
     def __init__(self, program, structure, tolerance,
-                 colors: Optional[np.ndarray] = None):
+                 colors: Optional[np.ndarray] = None,
+                 spare_colors: int = 0):
         super().__init__(program, structure, tolerance)
         if colors is None:
             colors = np.zeros(structure.n_vertices, np.int32)
         colors = np.asarray(colors, np.int32)
         self.colors = jnp.asarray(colors)
-        self.num_phases = int(colors.max()) + 1 if colors.size else 1
+        # spare phases are empty colors held for incremental repair of
+        # delta edges (streaming): palette headroom without a retrace
+        self.num_phases = (int(colors.max()) + 1 if colors.size else 1) \
+            + max(int(spare_colors), 0)
 
-    def select(self, sched, prio, phase=0):
-        return sweep_mask(self.colors, prio, self.tolerance, phase), sched
+    def select(self, sched, prio, phase=0, tables=None):
+        colors = (tables["colors"] if tables is not None
+                  and "colors" in tables else self.colors)
+        return sweep_mask(colors, prio, self.tolerance, phase), sched
 
 
 class PriorityScheduler(Scheduler):
@@ -325,7 +334,7 @@ class PriorityScheduler(Scheduler):
         if self.serializable:
             check_rank_range(self.pipeline_length, "PriorityScheduler")
 
-    def select(self, sched, prio, phase=0):
+    def select(self, sched, prio, phase=0, tables=None):
         selected, top_idx = pipeline_select(
             prio, self.pipeline_length, self.tolerance)
         if not self.serializable:
@@ -351,7 +360,7 @@ class FifoScheduler(Scheduler):
                         jnp.zeros(n, jnp.int32), jnp.iinfo(jnp.int32).max)
         return {"enq": enq, "clock": jnp.ones((), jnp.int32)}
 
-    def select(self, sched, prio, phase=0):
+    def select(self, sched, prio, phase=0, tables=None):
         n = self.structure.n_vertices
         in_t = scheduled_mask(prio, self.tolerance)
         # oldest first: top_k of the negated round, stable ties by lower id
@@ -415,7 +424,7 @@ class MultiQueueScheduler(Scheduler):
         self._gid = jnp.asarray(np.maximum(gid, 0), jnp.int32)
         self._pad = jnp.asarray(gid >= 0)
 
-    def select(self, sched, prio, phase=0):
+    def select(self, sched, prio, phase=0, tables=None):
         n, S, k = self.structure.n_vertices, self.n_machines, \
             self.pipeline_length
         in_t = scheduled_mask(prio, self.tolerance)

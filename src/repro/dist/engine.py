@@ -808,6 +808,13 @@ class ShardEngineBase:
         rows = lay.row_of[np.asarray(list(initiators), np.int64)]
         pending = np.zeros(lay.n_machines * lay.n_loc, bool)
         pending[rows] = True
+        sg = getattr(self, "_stream_graph", None)
+        if sg is not None:
+            # markers flood real edges only, so isolated active vertices
+            # (churn can strand them) must self-capture: their scope is
+            # exactly themselves — seed them into the first frontier
+            isolated = sg.vertex_active & (sg.fill == 0) & (sg.out_deg == 0)
+            pending[lay.row_of[np.nonzero(isolated)[0]]] = True
         snap = init_dist_snapshot(
             jnp.asarray(pending), state.vown, state.edata,
             e_rows=lay.n_machines * lay.e_loc,
@@ -822,18 +829,30 @@ class ShardEngineBase:
         — or to abandon one); subsequent steps skip the marker phase."""
         return state.replace(snap=None)
 
+    def _snapshot_need(self) -> np.ndarray:
+        """Rows whose scope a complete cut must have saved: owned rows,
+        minus capacity padding — under streaming, inactive (never-added
+        or deleted) vertices carry no edges, so no marker can reach them
+        and no cut needs them."""
+        need = self.layout.tables["own_mask"].copy()
+        sg = getattr(self, "_stream_graph", None)
+        if sg is not None:
+            ok = self.layout.own_gid >= 0
+            need[ok] &= sg.vertex_active[self.layout.own_gid[ok]]
+        return need
+
     def snapshot_complete(self, state: DistState) -> bool:
         """All owned vertex scopes saved (pad rows don't count)."""
         if state.snap is None:
             return False
         done = np.asarray(state.snap.done)
-        return bool(np.all(done | ~self.layout.tables["own_mask"]))
+        return bool(np.all(done | ~self._snapshot_need()))
 
     def snapshot_done_frac(self, state: DistState) -> float:
         if state.snap is None:
             return 0.0
-        own = self.layout.tables["own_mask"]
-        return float(np.asarray(state.snap.done)[own].mean())
+        need = self._snapshot_need()
+        return float(np.asarray(state.snap.done)[need].mean())
 
     def snapshot_violations(self, state: DistState) -> int:
         """Post-snapshot rows read by a capture — 0 iff the saved cut is
@@ -898,6 +917,7 @@ class DistributedEngine(ShardEngineBase):
         mesh,
         *,
         colors: Optional[np.ndarray] = None,
+        spare_colors: int = 0,
         **kw,
     ):
         super().__init__(program, graph, mesh, **kw)
@@ -905,7 +925,10 @@ class DistributedEngine(ShardEngineBase):
         if colors is None:
             colors = coloring_for(st, program.consistency)
         colors = np.asarray(colors, np.int32)
-        self.num_colors = int(colors.max()) + 1 if colors.size else 1
+        # spare colors: empty sweep phases reserved as palette headroom
+        # for streaming color repair (value patches, never a retrace)
+        self.num_colors = (int(colors.max()) + 1 if colors.size else 1) \
+            + max(int(spare_colors), 0)
         self.colors = colors
 
         colors_own = np.zeros(

@@ -292,9 +292,17 @@ def snapshot_from_journals(journals: Sequence[Dict[str, np.ndarray]],
 
 
 def save_snapshot(manager: CheckpointManager, step: int, engine,
-                  state) -> None:
+                  state, extra_meta: Optional[Dict] = None) -> None:
     """Journals a *completed* snapshot: per-machine shards, atomic commit
-    (``CheckpointManager.save_shards``)."""
+    (``CheckpointManager.save_shards``).
+
+    When the engine carries a delta journal (``stream.ingest.attach_
+    journal``), the cut's anchor offset — the journal prefix the cut
+    reflects — is recorded as ``journal_offset`` in the checkpoint's
+    meta.json: recovery restores the cut and replays the journal suffix
+    from there (``stream/recovery.py``).  The fence in ``apply_delta``
+    guarantees no batch landed while the wave was in flight, so the
+    anchor is exact, not approximate."""
     if state.snap is None:
         raise ValueError("no snapshot attached to this state")
     if not engine.snapshot_complete(state):
@@ -305,7 +313,11 @@ def save_snapshot(manager: CheckpointManager, step: int, engine,
         raise ValueError(
             f"snapshot captured {violations} post-cut row(s): the cut is "
             f"inconsistent (phase-ordering bug) and must not be journaled")
-    manager.save_shards(step, shard_journals(engine.layout, state.snap))
+    meta = dict(extra_meta or {})
+    if getattr(engine, "_stream_journal", None) is not None:
+        meta.setdefault("journal_offset", int(engine._stream_offset))
+    manager.save_shards(step, shard_journals(engine.layout, state.snap),
+                        meta=meta or None)
 
 
 def load_snapshot(manager: CheckpointManager, graph: DataGraph,

@@ -2,31 +2,45 @@
 (DESIGN.md §3.11; paper Secs. 3.2 + 4.1, ASYMP-style incremental serving).
 
   ``stream.mutable``  capacity-padded ``StreamingGraph`` (slot reservation
-                      per receiver, inert self-loop slack, regrow trigger)
+                      per receiver, inert self-loop slack, regrow trigger,
+                      ``del_edge``/``del_vertex`` tombstoning)
   ``stream.delta``    the atom-journal command vocabulary as delta batches
+                      (now incl. ``DelVertex``/``DelEdge``) plus the
+                      offset-ordered ``DeltaJournal`` event log
   ``stream.ingest``   ``apply_delta`` (zero-recompile splicing into local
-                      and distributed engines) + ``regrow_engine``
+                      and distributed engines, snapshot-fenced, journaled)
+                      + ``regrow_engine``
+  ``stream.recovery`` event-sourced restart: latest anchored cut + journal
+                      suffix replay, and the streaming chaos harness
   ``stream.sources``  replayable delta sources for PageRank / LBP / ALS
 
 Layering: stream/ may import core/ and dist/, never models/.
 """
-from repro.stream.delta import (AddEdge, AddVertex, DeltaBatch, SetEdgeData,
+from repro.stream.delta import (AddEdge, AddVertex, DelEdge, DeltaBatch,
+                                DeltaJournal, DelVertex, SetEdgeData,
                                 SetVertexData)
-from repro.stream.ingest import (apply_delta, apply_delta_growing,
+from repro.stream.ingest import (SnapshotInFlightError, apply_delta,
+                                 apply_delta_growing, attach_journal,
                                  make_dist_engine, make_local_engine,
-                                 readback, regrow_engine, stream_prio,
-                                 total_updates)
+                                 readback, regrow_engine, stream_colors,
+                                 stream_prio, total_updates)
 from repro.stream.mutable import (CapacityError, SlackConfig, StreamingGraph,
                                   pad_edge_data, pad_vertex_data)
+from repro.stream.recovery import (recover_from_journal, replay_journal,
+                                   restore_cut, run_stream_kill_restore)
 from repro.stream.sources import (als_rating_arrivals, lbp_arrivals,
-                                  pagerank_arrivals,
-                                  pagerank_cluster_arrival)
+                                  lbp_churn, pagerank_arrivals,
+                                  pagerank_churn, pagerank_cluster_arrival)
 
 __all__ = [
-    "AddEdge", "AddVertex", "CapacityError", "DeltaBatch", "SetEdgeData",
-    "SetVertexData", "SlackConfig", "StreamingGraph", "als_rating_arrivals",
-    "apply_delta", "apply_delta_growing", "lbp_arrivals", "make_dist_engine",
+    "AddEdge", "AddVertex", "CapacityError", "DelEdge", "DelVertex",
+    "DeltaBatch", "DeltaJournal", "SetEdgeData", "SetVertexData",
+    "SlackConfig", "SnapshotInFlightError", "StreamingGraph",
+    "als_rating_arrivals", "apply_delta", "apply_delta_growing",
+    "attach_journal", "lbp_arrivals", "lbp_churn", "make_dist_engine",
     "make_local_engine", "pad_edge_data", "pad_vertex_data",
-    "pagerank_arrivals", "pagerank_cluster_arrival", "readback",
-    "regrow_engine", "stream_prio", "total_updates",
+    "pagerank_arrivals", "pagerank_churn", "pagerank_cluster_arrival",
+    "readback", "recover_from_journal", "regrow_engine", "replay_journal",
+    "restore_cut", "run_stream_kill_restore", "stream_colors",
+    "stream_prio", "total_updates",
 ]

@@ -2,20 +2,30 @@
 
 The commands are exactly the atom journals' vocabulary (paper Sec. 4.1 —
 "a simple binary compressed journal of graph generating commands"):
-AddVertex / AddEdge plus the data writes SetVertexData / SetEdgeData.
-Because the vocabulary matches, an ``.atom.npz`` journal file *is* a
-replayable delta stream (``DeltaBatch.from_atom_file``) — loading a graph
-and growing one are the same operation at different times, which is the
-whole point of the streaming subsystem.
+AddVertex / AddEdge / DelVertex / DelEdge plus the data writes
+SetVertexData / SetEdgeData.  Because the vocabulary matches, an
+``.atom.npz`` journal file *is* a replayable delta stream
+(``DeltaBatch.from_atom_file``) — loading a graph and growing one are the
+same operation at different times, which is the whole point of the
+streaming subsystem.
 
 Row payloads (``data``) are pytrees matching the graph's vertex/edge data
 treedef — or flat leaf lists in the graph's flatten order (the journal
 format stores flattened leaves).  ``None`` leaves the zero-initialized row.
+
+``DeltaJournal`` (DESIGN.md §3.12) makes the delta stream durable: every
+committed batch is appended under a monotone offset, a Chandy-Lamport cut
+is anchored to the offset it is consistent with, and recovery is *latest
+committed cut + replay of the journal suffix* — the ASYMP recipe for
+fault tolerance under continuous mutation.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, List, Optional, Sequence, Union
+import os
+import re
+import tempfile
+from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -53,7 +63,26 @@ class SetEdgeData:
     data: Pytree
 
 
-Command = Union[AddVertex, AddEdge, SetVertexData, SetEdgeData]
+@dataclasses.dataclass(frozen=True)
+class DelVertex:
+    """Deactivate a vertex: its incident edges are dropped first (cascade),
+    its data row zeroes, and its slot becomes spare capacity again."""
+
+    vid: int
+
+
+@dataclasses.dataclass(frozen=True)
+class DelEdge:
+    """Remove directed edge ``src -> dst``: the freed slot reverts to the
+    inert self-loop of the slot-reservation layout and both former
+    endpoints' scopes are re-seeded so stale contributions drain."""
+
+    src: int
+    dst: int
+
+
+Command = Union[AddVertex, AddEdge, SetVertexData, SetEdgeData,
+                DelVertex, DelEdge]
 
 
 @dataclasses.dataclass
@@ -80,6 +109,11 @@ class DeltaBatch:
     @property
     def n_new_vertices(self) -> int:
         return sum(1 for c in self.commands if isinstance(c, AddVertex))
+
+    @property
+    def n_deletions(self) -> int:
+        return sum(1 for c in self.commands
+                   if isinstance(c, (DelVertex, DelEdge)))
 
     @staticmethod
     def from_atom_file(path: str, *, include_ghosts: bool = False
@@ -111,3 +145,150 @@ class DeltaBatch:
                 int(s), int(r),
                 data=[z[f"edata_{i}"][j] for i in range(ne)] or None))
         return DeltaBatch(cmds)
+
+
+# ---------------------------------------------------------------------------
+# the durable event log (DESIGN.md §3.12)
+# ---------------------------------------------------------------------------
+
+_KIND_CODES = {AddVertex: 0, AddEdge: 1, SetVertexData: 2, SetEdgeData: 3,
+               DelVertex: 4, DelEdge: 5}
+_ENTRY_RE = re.compile(r"^delta_(\d{10})\.npz$")
+
+
+def _flatten_payload(data: Optional[Pytree]) -> List[np.ndarray]:
+    if data is None:
+        return []
+    if isinstance(data, (list, tuple)):
+        return [np.asarray(x) for x in data]
+    import jax
+
+    return [np.asarray(x) for x in jax.tree.leaves(data)]
+
+
+def _encode_batch(batch: DeltaBatch) -> Dict[str, np.ndarray]:
+    """Flattened-leaf npz encoding — the atom-journal layout, one entry per
+    batch: ``kind``/``a``/``b``/``nleaves`` columns plus ``d<i>_<j>`` leaf
+    arrays for command ``i``'s ``j``-th payload leaf."""
+    kind, a, b, nl = [], [], [], []
+    arrs: Dict[str, np.ndarray] = {}
+    for i, c in enumerate(batch):
+        kind.append(_KIND_CODES[type(c)])
+        if isinstance(c, AddVertex):
+            a.append(-1 if c.vid is None else int(c.vid))
+            b.append(-1)
+            leaves = _flatten_payload(c.data)
+        elif isinstance(c, (AddEdge, SetEdgeData)):
+            a.append(int(c.src))
+            b.append(int(c.dst))
+            leaves = _flatten_payload(getattr(c, "data", None))
+        elif isinstance(c, SetVertexData):
+            a.append(int(c.vid))
+            b.append(-1)
+            leaves = _flatten_payload(c.data)
+        elif isinstance(c, DelVertex):
+            a.append(int(c.vid))
+            b.append(-1)
+            leaves = []
+        else:  # DelEdge
+            a.append(int(c.src))
+            b.append(int(c.dst))
+            leaves = []
+        for j, leaf in enumerate(leaves):
+            arrs[f"d{i}_{j}"] = leaf
+        nl.append(len(leaves))
+    return dict(kind=np.asarray(kind, np.int8),
+                a=np.asarray(a, np.int64),
+                b=np.asarray(b, np.int64),
+                nleaves=np.asarray(nl, np.int32),
+                **arrs)
+
+
+def _decode_batch(z) -> DeltaBatch:
+    cmds: List[Command] = []
+    kind, a, b, nl = z["kind"], z["a"], z["b"], z["nleaves"]
+    for i, k in enumerate(kind):
+        data = ([z[f"d{i}_{j}"] for j in range(int(nl[i]))]
+                if int(nl[i]) else None)
+        vid_a, vid_b = int(a[i]), int(b[i])
+        k = int(k)
+        if k == 0:
+            cmds.append(AddVertex(data=data,
+                                  vid=None if vid_a < 0 else vid_a))
+        elif k == 1:
+            cmds.append(AddEdge(vid_a, vid_b, data=data))
+        elif k == 2:
+            cmds.append(SetVertexData(vid_a, data))
+        elif k == 3:
+            cmds.append(SetEdgeData(vid_a, vid_b, data))
+        elif k == 4:
+            cmds.append(DelVertex(vid_a))
+        elif k == 5:
+            cmds.append(DelEdge(vid_a, vid_b))
+        else:  # pragma: no cover - future vocabulary
+            raise ValueError(f"unknown delta command code {k}")
+    return DeltaBatch(cmds)
+
+
+class DeltaJournal:
+    """Append-only, offset-ordered log of committed ``DeltaBatch``es.
+
+    Offsets are dense and monotone: entry ``k`` lives in
+    ``delta_<k:010d>.npz`` and a cut "anchored at offset K" reflects
+    exactly the journal prefix ``[0, K)``.  Appends are atomic (tmp file +
+    rename), so a crash mid-write never leaves a torn entry — the replay
+    path sees a clean prefix.
+    """
+
+    def __init__(self, directory: str):
+        self.directory = directory
+        os.makedirs(directory, exist_ok=True)
+        offs = sorted(self._offsets())
+        if offs != list(range(len(offs))):
+            raise ValueError(
+                f"journal at {directory} has a gap: offsets {offs}")
+        self._next = len(offs)
+
+    def _offsets(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.directory):
+            m = _ENTRY_RE.match(name)
+            if m:
+                out.append(int(m.group(1)))
+        return out
+
+    def _path(self, offset: int) -> str:
+        return os.path.join(self.directory, f"delta_{offset:010d}.npz")
+
+    @property
+    def next_offset(self) -> int:
+        return self._next
+
+    def __len__(self) -> int:
+        return self._next
+
+    def append(self, batch: DeltaBatch) -> int:
+        """Durably append one committed batch; returns its offset."""
+        offset = self._next
+        fd, tmp = tempfile.mkstemp(dir=self.directory, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                np.savez(f, **_encode_batch(batch))
+            os.replace(tmp, self._path(offset))
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+        self._next = offset + 1
+        return offset
+
+    def read(self, offset: int) -> DeltaBatch:
+        with np.load(self._path(offset)) as z:
+            return _decode_batch(z)
+
+    def read_since(self, offset: int = 0
+                   ) -> Iterator[Tuple[int, DeltaBatch]]:
+        """Yields ``(offset, batch)`` for every committed entry >= offset —
+        the replay suffix of a cut anchored at ``offset``."""
+        for k in range(max(int(offset), 0), self._next):
+            yield k, self.read(k)

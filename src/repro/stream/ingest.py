@@ -22,6 +22,18 @@ trace counters).  When slack runs out, ``CapacityError`` escapes and
 existing two-phase atom path (``core/partition.py``) — the paper's elastic
 placement, reused for growth.
 
+Deletion (DESIGN §3.12) is the inverse splice: ``DelEdge`` frees a slot
+back to the inert self-loop of the slack layout (swap-with-last keeps the
+receiver region contiguous, so the data row of at most one surviving edge
+moves), ``DelVertex`` cascades over its incident edges and returns the
+slot to spare capacity, and the *former* distance-1 neighborhood is
+re-seeded so stale contributions drain.  Same-color delta edges are
+repaired at apply time (``_repair_colors``) instead of degrading to
+Jacobi reads.  ``apply_delta`` is fenced against a live Chandy-Lamport
+marker wave (``SnapshotInFlightError``), and when a ``DeltaJournal`` is
+attached every committed batch is appended under a monotone offset — the
+event log that snapshot cuts anchor to (``stream/recovery.py``).
+
 Layering: stream/ imports core/ and dist/, never models/.
 """
 from __future__ import annotations
@@ -33,17 +45,27 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.chromatic import ChromaticEngine
 from repro.core.coloring import coloring_for
 from repro.core.engine_base import Engine, EngineState
 from repro.core.graph import DataGraph
 from repro.core.scheduler import reseed_scopes
 from repro.dist.engine import DistState, DistributedEngine, ShardEngineBase
-from repro.stream.delta import (AddEdge, AddVertex, DeltaBatch, SetEdgeData,
+from repro.stream.delta import (AddEdge, AddVertex, DelEdge, DeltaBatch,
+                                DeltaJournal, DelVertex, SetEdgeData,
                                 SetVertexData)
 from repro.stream.mutable import (CapacityError, SlackConfig, StreamingGraph,
                                   pad_edge_data, pad_vertex_data)
 
 Pytree = Any
+
+
+class SnapshotInFlightError(RuntimeError):
+    """``apply_delta`` was called while a Chandy-Lamport marker wave is
+    live (``DistState.snap is not None``).  Splicing rows mid-wave would
+    mix pre- and post-delta values into one "consistent" cut silently;
+    drain the wave first (step until ``snapshot_complete``, save, then
+    ``clear_snapshot``) or abort it with ``clear_snapshot``."""
 
 
 # ---------------------------------------------------------------------------
@@ -79,6 +101,80 @@ def _write_row(leaves: List[np.ndarray], row: int,
 def _masked_initial_prio(program, sgraph: StreamingGraph) -> np.ndarray:
     prio = np.asarray(program.initial_priority(sgraph.n_cap), np.float32)
     return np.where(sgraph.vertex_active, prio, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# incremental color repair (DESIGN §3.12)
+# ---------------------------------------------------------------------------
+
+def _sg_neighbors(sg: StreamingGraph, v: int) -> Set[int]:
+    nbrs = {int(s) for s in sg.senders[sg.in_slots(v)]}
+    nbrs.update(int(sg.receivers[sl]) for sl in sg.out_slots.get(v, ()))
+    nbrs.discard(v)
+    return nbrs
+
+
+def _ball_colors(sg: StreamingGraph, colors: np.ndarray, v: int,
+                 radius: int) -> Set[int]:
+    """Colors used within distance <= radius of ``v`` (excluding v)."""
+    seen, frontier, used = {v}, {v}, set()
+    for _ in range(radius):
+        nxt = set()
+        for u in frontier:
+            for w in _sg_neighbors(sg, u):
+                if w not in seen:
+                    seen.add(w)
+                    nxt.add(w)
+                    used.add(int(colors[w]))
+        frontier = nxt
+    return used
+
+
+def _conflict_pairs(sg: StreamingGraph, radius: int, s: int, r: int):
+    pairs = [(s, r)]
+    if radius >= 2:  # full consistency: distance-2 coloring
+        pairs += [(s, u) for u in _sg_neighbors(sg, r) if u != s]
+        pairs += [(r, u) for u in _sg_neighbors(sg, s) if u != r]
+    return pairs
+
+
+def _repair_colors(sg: StreamingGraph, colors: np.ndarray, num_colors: int,
+                   radius: int, new_pairs) -> List[Tuple[int, int]]:
+    """Greedy incremental recoloring: for every delta edge whose endpoints
+    (or, at radius 2, whose distance-2 pairs) collide, move the lower-
+    degree vertex to a color unused within its exclusion ball.  The sweep
+    palette is static under zero-recompile streaming, so when every color
+    is occupied this raises ``CapacityError`` — regrow recolors from
+    scratch.  Mutates ``colors`` in place; returns the (vid, color)
+    changes."""
+    changes: List[Tuple[int, int]] = []
+    for s, r in new_pairs:
+        if s == r:
+            continue
+        for a, b in _conflict_pairs(sg, radius, s, r):
+            if int(colors[a]) != int(colors[b]):
+                continue  # an earlier repair already separated them
+            done = False
+            for v in sorted((a, b), key=lambda u: len(_sg_neighbors(sg, u))):
+                used = _ball_colors(sg, colors, v, radius)
+                for c in range(num_colors):
+                    if c not in used:
+                        colors[v] = c
+                        changes.append((v, c))
+                        done = True
+                        break
+                if done:
+                    break
+            if not done:
+                raise CapacityError(
+                    f"color palette ({num_colors} colors) exhausted "
+                    f"repairing delta edge ({a}, {b})")
+    return changes
+
+
+def _wants_color_repair(engine) -> bool:
+    radius = engine.program.consistency.exclusion_radius
+    return radius >= 1 and getattr(engine, "num_colors", 1) > 1
 
 
 # ---------------------------------------------------------------------------
@@ -118,10 +214,14 @@ def make_local_engine(
                                pad_edge_data(graph.edge_data, sg,
                                              init_perm)),
         structure=sg.capacity_structure())
+    ekw = {}
+    if issubclass(engine_cls, ChromaticEngine):
+        # palette headroom for incremental color repair (DESIGN §3.12)
+        ekw["spare_colors"] = slack.color_slack
     engine = engine_cls(program, padded, tolerance=tolerance,
                         sync_ops=sync_ops, use_fused=use_fused,
                         gas_interpret=gas_interpret,
-                        stream_tables=sg.tables())
+                        stream_tables=sg.tables(), **ekw)
     prio0 = _masked_initial_prio(program, sg)
     if initial_prio is not None:
         prio0[:len(initial_prio)] = np.asarray(initial_prio, np.float32)
@@ -175,6 +275,8 @@ def make_dist_engine(
         colors[: graph.structure.n_vertices] = coloring_for(
             graph.structure, program.consistency)
         kw["colors"] = colors
+        # palette headroom for incremental color repair (DESIGN §3.12)
+        kw.setdefault("spare_colors", slack.color_slack)
     engine = engine_cls(
         program, padded, mesh, tolerance=tolerance, sync_ops=sync_ops,
         stream_real_edges=sg.edge_mask.copy(),
@@ -203,12 +305,27 @@ class _LocalPatcher:
         self.engine = engine
         self.sg: StreamingGraph = engine._stream_graph
 
+    def _drop_edge(self, src: int, dst: int,
+                   eleaves: List[np.ndarray]) -> None:
+        """Frees a slot and mirrors the swap-with-last in the data rows:
+        the moved edge's row fills the hole, the vacated tail row zeroes
+        (inert self-loops must carry no stale contribution)."""
+        slot, moved_from = self.sg.del_edge(src, dst)
+        if moved_from is not None:
+            for leaf in eleaves:
+                leaf[slot] = leaf[moved_from]
+        vacated = moved_from if moved_from is not None else slot
+        for leaf in eleaves:
+            leaf[vacated] = 0
+
     def apply(self, state: EngineState, batch: DeltaBatch) -> EngineState:
         sg, engine = self.sg, self.engine
         cp = _snapshot_sg(sg)
         vleaves, vdef = jax.tree.flatten(_host(state.graph.vertex_data))
         eleaves, edef = jax.tree.flatten(_host(state.graph.edge_data))
         touched = np.zeros(sg.n_cap, bool)
+        new_pairs: List[Tuple[int, int]] = []
+        colors = None
         try:
             for cmd in batch:
                 if isinstance(cmd, AddVertex):
@@ -221,6 +338,7 @@ class _LocalPatcher:
                     _write_row(eleaves, slot,
                                _leaf_rows(cmd.data, len(eleaves)))
                     touched[cmd.src] = touched[cmd.dst] = True
+                    new_pairs.append((int(cmd.src), int(cmd.dst)))
                 elif isinstance(cmd, SetVertexData):
                     _write_row(vleaves, int(cmd.vid),
                                _leaf_rows(cmd.data, len(vleaves)))
@@ -230,8 +348,38 @@ class _LocalPatcher:
                     _write_row(eleaves, slot,
                                _leaf_rows(cmd.data, len(eleaves)))
                     touched[cmd.src] = touched[cmd.dst] = True
+                elif isinstance(cmd, DelEdge):
+                    touched[int(cmd.src)] = touched[int(cmd.dst)] = True
+                    self._drop_edge(int(cmd.src), int(cmd.dst), eleaves)
+                elif isinstance(cmd, DelVertex):
+                    vid = int(cmd.vid)
+                    # the *former* neighborhood reseeds: its scopes lose a
+                    # contribution and must drain the stale value
+                    ins = [int(s) for s in sg.senders[sg.in_slots(vid)]]
+                    outs = [int(sg.receivers[sl])
+                            for sl in sg.out_slots.get(vid, [])]
+                    touched[vid] = True
+                    for u in ins + outs:
+                        touched[u] = True
+                    for u in ins:
+                        if (u, vid) in sg.edge_slot:
+                            self._drop_edge(u, vid, eleaves)
+                    for u in outs:
+                        if (vid, u) in sg.edge_slot:
+                            self._drop_edge(vid, u, eleaves)
+                    sg.del_vertex(vid)
+                    for leaf in vleaves:
+                        leaf[vid] = 0
                 else:
                     raise TypeError(f"unknown delta command {cmd!r}")
+            if new_pairs and _wants_color_repair(engine) \
+                    and engine._stream_colors is not None:
+                colors = engine._stream_colors.copy()
+                if not _repair_colors(
+                        sg, colors, engine.num_colors,
+                        engine.program.consistency.exclusion_radius,
+                        new_pairs):
+                    colors = None  # nothing collided
         except BaseException:
             _restore_sg(sg, cp)  # a batch applies atomically or not at all
             raise
@@ -240,6 +388,9 @@ class _LocalPatcher:
             jnp.asarray(np.asarray(state.prio)), touched, sg.senders,
             sg.receivers, sg.edge_mask, sg.n_cap,
             _masked_initial_prio(engine.program, sg))
+        prio = jnp.where(jnp.asarray(sg.vertex_active), prio, 0.0)
+        if colors is not None:
+            engine.set_stream_colors(colors)
         engine.set_stream_tables(sg.tables())
         graph = state.graph.replace(
             vertex_data=jax.tree.unflatten(
@@ -432,6 +583,153 @@ class _DistPatcher:
                 else self._edge_ghost(q, slot, edata, eghost))
             self.changed.add("rev_local")
 
+    # -- deletion surgery ----------------------------------------------------
+    def _free_edge_ghosts(self, slot: int) -> None:
+        """Releases every cache line holding ``slot``'s row (its reverse
+        twin on another machine read it there)."""
+        lay = self.engine.layout
+        S, EB = self.S, self.EB
+        for row in self.eghost_rows.pop(slot, []):
+            d, rem = divmod(row, S * EB)
+            o, b = divmod(rem, EB)
+            lay.eghost_gid[row] = -1
+            del self.eghost_slot[(d, slot)]
+            self.eghost_free.setdefault((d, o), []).append(b)
+            send_row = o * (S * EB) + d * EB + b
+            lay.tables["esend_mask"][send_row] = False
+            self.changed.add("esend_mask")
+
+    def _free_eghost_line(self, dest: int, slot: int) -> None:
+        """Releases ``slot``'s cache line at machine ``dest`` if present —
+        each line has exactly one reader (the reverse pairing is unique),
+        so deleting that reader frees the line.  Call while ``slot`` is
+        still live (its receiver machine is looked up)."""
+        key = (dest, slot)
+        if key not in self.eghost_slot:
+            return
+        lay = self.engine.layout
+        b = self.eghost_slot.pop(key)
+        owner = int(lay.machine_of[self.sg.receivers[slot]])
+        S, EB = self.S, self.EB
+        row = dest * (S * EB) + owner * EB + b
+        lay.eghost_gid[row] = -1
+        rows = self.eghost_rows.get(slot)
+        if rows is not None:
+            rows.remove(row)
+            if not rows:
+                del self.eghost_rows[slot]
+        self.eghost_free.setdefault((dest, owner), []).append(b)
+        send_row = owner * (S * EB) + dest * EB + b
+        lay.tables["esend_mask"][send_row] = False
+        self.changed.add("esend_mask")
+
+    def _rekey_edge_ghosts(self, old_slot: int, new_slot: int) -> None:
+        """The swap-with-last moved an edge's home row; its cache lines
+        keep their physical (dest, owner, b) position — only the gid map
+        and the owner's send index change."""
+        lay = self.engine.layout
+        S, EB = self.S, self.EB
+        rows = self.eghost_rows.pop(old_slot, [])
+        if not rows:
+            return
+        new_lrow = int(lay.erow_of[new_slot])
+        for row in rows:
+            d, rem = divmod(row, S * EB)
+            o, b = divmod(rem, EB)
+            lay.eghost_gid[row] = new_slot
+            self.eghost_slot[(d, new_slot)] = self.eghost_slot.pop(
+                (d, old_slot))
+            send_row = o * (S * EB) + d * EB + b
+            lay.tables["esend_idx"][send_row] = new_lrow - o * self.e_loc
+            self.changed.add("esend_idx")
+        self.eghost_rows[new_slot] = rows
+
+    def _clear_edge_row(self, slot: int, edata) -> None:
+        """Resets a freed slot to the inert self-loop of the slack layout
+        (sender = receiver, masked out, its own reverse) and zeroes its
+        data row so no stale contribution survives a later re-splice."""
+        sg, lay = self.sg, self.engine.layout
+        dst = int(sg.receivers[slot])
+        m = int(lay.machine_of[dst])
+        lrow = int(lay.erow_of[slot])
+        sl = int(lay.row_of[dst]) - m * self.n_loc
+        lay.tables["senders_local"][lrow] = sl
+        lay.tables["edge_mask"][lrow] = False
+        self.changed.update(("senders_local", "edge_mask"))
+        if lay.has_rev:
+            lay.tables["rev_local"][lrow] = lrow - m * self.e_loc
+            self.changed.add("rev_local")
+        if self.engine._use_fused:
+            gas_row = (lrow // self.e_loc) * self.e_pad + lrow % self.e_loc
+            lay.tables["gas_send"][gas_row] = sl
+            self.changed.add("gas_send")
+        for leaf in edata:
+            leaf[lrow] = 0
+
+    def _remove_edge(self, src: int, dst: int, vown, vghost, edata,
+                     eghost) -> None:
+        sg, lay = self.sg, self.engine.layout
+        slot = sg.slot_of(src, dst)
+        twin = int(sg.rev_idx[slot])
+        m = int(lay.machine_of[dst])
+        if lay.has_rev:
+            self._free_edge_ghosts(slot)
+            if 0 <= twin != slot:
+                # the twin loses its reverse: unlink it and release the
+                # cache line this edge held of the twin's row
+                self._free_eghost_line(m, twin)
+                trow = int(lay.erow_of[twin])
+                lay.tables["rev_local"][trow] = -1
+                self.changed.add("rev_local")
+        _, moved_from = sg.del_edge(src, dst)
+        lrow = int(lay.erow_of[slot])
+        if moved_from is not None:
+            mrow = int(lay.erow_of[moved_from])
+            for leaf in edata:
+                leaf[lrow] = leaf[mrow]
+            if lay.has_rev:
+                lay.tables["rev_local"][lrow] = -1  # splice re-links twins
+                self.changed.add("rev_local")
+                self._rekey_edge_ghosts(moved_from, slot)
+            self._splice_edge(slot, vown, vghost, edata, eghost)
+            if lay.has_rev and int(sg.rev_idx[slot]) == slot:
+                # a real self-loop moved: it is its own reverse
+                lay.tables["rev_local"][lrow] = lrow - m * self.e_loc
+            self._clear_edge_row(moved_from, edata)
+        else:
+            self._clear_edge_row(slot, edata)
+
+    def _remove_vertex(self, vid: int, vown, vghost, edata, eghost,
+                       touched: np.ndarray) -> None:
+        sg, lay = self.sg, self.engine.layout
+        ins = [int(s) for s in sg.senders[sg.in_slots(vid)]]
+        outs = [int(sg.receivers[sl]) for sl in sg.out_slots.get(vid, [])]
+        touched[vid] = True
+        for u in ins + outs:
+            touched[u] = True
+        for u in ins:
+            if (u, vid) in sg.edge_slot:
+                self._remove_edge(u, vid, vown, vghost, edata, eghost)
+        for u in outs:
+            if (vid, u) in sg.edge_slot:
+                self._remove_edge(vid, u, vown, vghost, edata, eghost)
+        sg.del_vertex(vid)
+        for leaf in vown:
+            leaf[int(lay.row_of[vid])] = 0
+        # release the dead vertex's remote cache lines
+        S, B = self.S, self.B
+        for grow in self.ghost_rows.pop(vid, []):
+            d, rem = divmod(grow, S * B)
+            o, b = divmod(rem, B)
+            lay.ghost_gid[grow] = -1
+            del self.ghost_slot[(d, vid)]
+            self.ghost_free.setdefault((d, o), []).append(b)
+            send_row = o * (S * B) + d * B + b
+            lay.tables["send_mask"][send_row] = False
+            self.changed.add("send_mask")
+            for gleaf in vghost:
+                gleaf[grow] = 0
+
     def _refresh_degrees(self) -> None:
         sg, lay = self.sg, self.engine.layout
         rows = lay.erow_of
@@ -451,6 +749,8 @@ class _DistPatcher:
         eghost, egdef = jax.tree.flatten(_host(state.eghost))
         prio = np.asarray(state.prio).copy()
         touched = np.zeros(sg.n_cap, bool)
+        new_pairs: List[Tuple[int, int]] = []
+        new_colors = None
         try:
             for cmd in batch:
                 if isinstance(cmd, AddVertex):
@@ -464,6 +764,7 @@ class _DistPatcher:
                                _leaf_rows(cmd.data, len(edata)))
                     self._splice_edge(slot, vown, vghost, edata, eghost)
                     touched[cmd.src] = touched[cmd.dst] = True
+                    new_pairs.append((int(cmd.src), int(cmd.dst)))
                 elif isinstance(cmd, SetVertexData):
                     vid = int(cmd.vid)
                     rows = _leaf_rows(cmd.data, len(vown))
@@ -478,11 +779,31 @@ class _DistPatcher:
                     for grow in self.eghost_rows.get(slot, ()):
                         _write_row(eghost, grow, rows)
                     touched[cmd.src] = touched[cmd.dst] = True
+                elif isinstance(cmd, DelEdge):
+                    touched[int(cmd.src)] = touched[int(cmd.dst)] = True
+                    self._remove_edge(int(cmd.src), int(cmd.dst), vown,
+                                      vghost, edata, eghost)
+                elif isinstance(cmd, DelVertex):
+                    self._remove_vertex(int(cmd.vid), vown, vghost, edata,
+                                        eghost, touched)
                 else:
                     raise TypeError(f"unknown delta command {cmd!r}")
+            if new_pairs and _wants_color_repair(engine):
+                new_colors = np.asarray(engine.colors, np.int32).copy()
+                changes = _repair_colors(
+                    sg, new_colors, engine.num_colors,
+                    engine.program.consistency.exclusion_radius, new_pairs)
+                if changes:
+                    for v, c in changes:
+                        lay.tables["colors_own"][int(lay.row_of[v])] = c
+                    self.changed.add("colors_own")
+                else:
+                    new_colors = None  # nothing collided
         except BaseException:
             self._restore(cp)  # a batch applies atomically or not at all
             raise
+        if new_colors is not None:
+            engine.colors = new_colors  # table rollback covers the rest
         self._refresh_degrees()
 
         # re-seed exactly the touched scopes, in global vertex space, then
@@ -494,7 +815,9 @@ class _DistPatcher:
             jnp.asarray(prio_g), touched, sg.senders, sg.receivers,
             sg.edge_mask, sg.n_cap,
             _masked_initial_prio(engine.program, sg))
-        prio[ok] = np.asarray(prio_g2)[lay.own_gid[ok]]
+        prio_host = np.where(sg.vertex_active, np.asarray(prio_g2),
+                             0.0).astype(np.float32)
+        prio[ok] = prio_host[lay.own_gid[ok]]
 
         engine.refresh_tables(sorted(self.changed))
         put = lambda leaves, tdef: jax.tree.map(
@@ -510,20 +833,63 @@ class _DistPatcher:
 # public API
 # ---------------------------------------------------------------------------
 
-def apply_delta(engine, state, batch: DeltaBatch):
+def apply_delta(engine, state, batch: DeltaBatch, *, record: bool = True):
     """Splices a delta batch into a running engine's state.
 
     Raises ``CapacityError`` (state unchanged) when the preallocated slack
-    cannot hold the batch — call ``regrow_engine`` and re-apply.
+    cannot hold the batch — call ``regrow_engine`` and re-apply — and
+    ``SnapshotInFlightError`` (state unchanged) while a Chandy-Lamport
+    marker wave is live: a splice mid-wave would leak post-delta rows into
+    the in-flight cut.  Drain the wave (step until ``snapshot_complete``,
+    save, ``clear_snapshot``) or abort it first.
+
+    When a ``DeltaJournal`` is attached (``attach_journal``), every batch
+    that commits is appended to the journal; ``record=False`` replays an
+    already-journaled batch (recovery) without re-appending.
     """
     if getattr(engine, "_stream_graph", None) is None:
         raise ValueError("engine was not built by stream.ingest "
                          "(make_local_engine / make_dist_engine)")
+    if getattr(state, "snap", None) is not None:
+        raise SnapshotInFlightError(
+            "a Chandy-Lamport marker wave is in flight; drain it "
+            "(step until snapshot_complete, save_snapshot, clear_snapshot) "
+            "or abort it with clear_snapshot before applying deltas")
     if engine._stream_patcher is None:
         engine._stream_patcher = (
             _DistPatcher(engine) if isinstance(engine, ShardEngineBase)
             else _LocalPatcher(engine))
-    return engine._stream_patcher.apply(state, batch)
+    new_state = engine._stream_patcher.apply(state, batch)
+    journal = getattr(engine, "_stream_journal", None)
+    if journal is not None and record:
+        engine._stream_offset = journal.append(batch) + 1
+    return new_state
+
+
+def attach_journal(engine, journal: DeltaJournal) -> None:
+    """Makes ``journal`` the authoritative event log of this engine's
+    mutation stream: every batch that commits through ``apply_delta``
+    appends under a monotone offset, and snapshot cuts anchor to
+    ``engine._stream_offset`` — the journal prefix the cut reflects
+    (``dist/snapshot.py:save_snapshot`` records it; recovery replays the
+    suffix, see ``stream/recovery.py``).
+
+    Attach at build time, before any un-journaled batch lands: the
+    contract is that the engine's graph equals the base graph plus the
+    journal prefix ``[0, engine._stream_offset)``.
+    """
+    engine._stream_journal = journal
+    engine._stream_offset = journal.next_offset
+
+
+def stream_colors(engine) -> Optional[np.ndarray]:
+    """The live coloring in global vertex space, after any incremental
+    repairs (None when the engine runs single-color)."""
+    if isinstance(engine, ShardEngineBase):
+        c = getattr(engine, "colors", None)
+        return None if c is None else np.asarray(c, np.int32)
+    c = getattr(engine, "_stream_colors", None)
+    return None if c is None else np.asarray(c, np.int32)
 
 
 def readback(engine, state) -> DataGraph:
@@ -584,17 +950,23 @@ def regrow_engine(engine, state, *, slack: Optional[SlackConfig] = None,
     prio = stream_prio(engine, state)[: graph.structure.n_vertices]
     slack = slack or cfg["slack"]
     if cfg["kind"] == "local":
-        return make_local_engine(
+        new_engine, new_state = make_local_engine(
             cfg["program"], graph, engine_cls=cfg["engine_cls"],
             tolerance=cfg["tolerance"], slack=slack,
             sync_ops=cfg["sync_ops"], use_fused=cfg["use_fused"],
             gas_interpret=cfg["gas_interpret"], initial_prio=prio,
             in_capacity=in_capacity, n_cap=n_cap)
-    return make_dist_engine(
-        cfg["program"], graph, cfg["mesh"], engine_cls=cfg["engine_cls"],
-        tolerance=cfg["tolerance"], slack=slack, sync_ops=cfg["sync_ops"],
-        initial_prio=prio, in_capacity=in_capacity, n_cap=n_cap,
-        **cfg["kwargs"])
+    else:
+        new_engine, new_state = make_dist_engine(
+            cfg["program"], graph, cfg["mesh"], engine_cls=cfg["engine_cls"],
+            tolerance=cfg["tolerance"], slack=slack,
+            sync_ops=cfg["sync_ops"], initial_prio=prio,
+            in_capacity=in_capacity, n_cap=n_cap, **cfg["kwargs"])
+    # the journal outlives the layout: the event log is engine-agnostic
+    for attr in ("_stream_journal", "_stream_offset"):
+        if hasattr(engine, attr):
+            setattr(new_engine, attr, getattr(engine, attr))
+    return new_engine, new_state
 
 
 def _batch_capacity_hint(engine, batch: DeltaBatch
@@ -618,7 +990,7 @@ def _batch_capacity_hint(engine, batch: DeltaBatch
 
 def apply_delta_growing(engine, state, batch: DeltaBatch,
                         *, slack: Optional[SlackConfig] = None,
-                        max_regrows: int = 4):
+                        max_regrows: int = 4, record: bool = True):
     """``apply_delta`` with automatic regrow-and-retry on capacity
     exhaustion.  The regrown in-edge regions and vertex table are sized
     from the failed batch itself, so those exhaust at most once; ghost
@@ -630,7 +1002,9 @@ def apply_delta_growing(engine, state, batch: DeltaBatch,
     cur = slack or engine._stream_config["slack"]
     for attempt in range(max_regrows + 1):
         try:
-            return engine, apply_delta(engine, state, batch), attempt > 0
+            return (engine,
+                    apply_delta(engine, state, batch, record=record),
+                    attempt > 0)
         except CapacityError:
             if attempt == max_regrows:
                 raise

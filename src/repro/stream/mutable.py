@@ -59,7 +59,11 @@ class SlackConfig:
     ``edge_frac``/``edge_min`` size each vertex's in-edge region above its
     current in-degree; ``vertex_frac``/``vertex_min`` add inactive vertex
     slots; ``ghost_slack``/``eghost_slack`` add unmapped cache lines per
-    (machine, peer) slab on the distributed engines."""
+    (machine, peer) slab on the distributed engines; ``color_slack``
+    reserves spare sweep phases (initially empty colors) so incremental
+    color repair of delta edges (DESIGN §3.12) has palette headroom —
+    an empty phase is one masked sweep of dead weight, a missing color
+    is a regrow."""
 
     vertex_frac: float = 0.25
     vertex_min: int = 16
@@ -67,6 +71,7 @@ class SlackConfig:
     edge_min: int = 2
     ghost_slack: int = 16
     eghost_slack: int = 16
+    color_slack: int = 2
 
 
 class StreamingGraph:
@@ -214,6 +219,70 @@ class StreamingGraph:
         else:
             self.rev_idx[slot] = -1
         return slot
+
+    def del_edge(self, src: int, dst: int) -> Tuple[int, Optional[int]]:
+        """Removes edge ``src -> dst``, keeping ``dst``'s region contiguous
+        by swapping the region's last occupied slot into the hole.
+
+        Returns ``(slot, moved_from)``: the freed slot and, when a swap
+        happened, the slot the region's tail edge vacated (its data row
+        must move ``moved_from -> slot``; ``None`` when the deleted edge
+        *was* the tail).  The vacated slot reverts to the inert self-loop
+        of the slack layout.
+        """
+        src, dst = int(src), int(dst)
+        slot = self.slot_of(src, dst)
+        twin = int(self.rev_idx[slot])
+        # unhook the deleted edge
+        del self.edge_slot[(src, dst)]
+        outs = self.out_slots[src]
+        outs.remove(slot)
+        if not outs:
+            del self.out_slots[src]
+        self.fill[dst] -= 1
+        self.out_deg[src] -= 1
+        if 0 <= twin != slot:   # the twin loses its reverse link
+            self.rev_idx[twin] = -1
+        tail = int(self.slot_start[dst]) + int(self.fill[dst])
+        moved_from: Optional[int] = None
+        if tail != slot:
+            # swap-with-last-occupied: the tail edge (msrc -> dst) moves
+            # into the hole; its reverse links follow it
+            msrc = int(self.senders[tail])
+            self.senders[slot] = msrc
+            self.edge_mask[slot] = True
+            self.edge_slot[(msrc, dst)] = slot
+            mouts = self.out_slots[msrc]
+            mouts[mouts.index(tail)] = slot
+            mtwin = int(self.rev_idx[tail])
+            if mtwin == tail:        # a real self-loop is its own reverse
+                self.rev_idx[slot] = slot
+            elif mtwin >= 0:
+                self.rev_idx[slot] = mtwin
+                self.rev_idx[mtwin] = slot
+            else:
+                self.rev_idx[slot] = -1
+            moved_from = tail
+        vacated = tail if moved_from is not None else slot
+        self.senders[vacated] = dst            # inert self-loop again
+        self.edge_mask[vacated] = False
+        self.rev_idx[vacated] = vacated
+        return slot, moved_from
+
+    def del_vertex(self, vid: int) -> int:
+        """Deactivates ``vid``.  All incident edges must already be gone
+        (``stream/ingest.py`` cascades ``DelEdge`` first); the slot becomes
+        spare capacity and its id is reusable by a later ``AddVertex``."""
+        vid = int(vid)
+        if not (0 <= vid < self.n_cap) or not self.vertex_active[vid]:
+            raise ValueError(f"vertex {vid} not active")
+        if int(self.fill[vid]) or int(self.out_deg[vid]):
+            raise ValueError(
+                f"vertex {vid} still has incident edges "
+                f"(in={int(self.fill[vid])}, out={int(self.out_deg[vid])})")
+        self.vertex_active[vid] = False
+        self._next_vid = min(self._next_vid, vid)
+        return vid
 
     def slot_of(self, src: int, dst: int) -> int:
         try:

@@ -1,0 +1,180 @@
+"""Event-sourced recovery for streaming engines (DESIGN §3.12).
+
+The delta stream is the authoritative event log: ``attach_journal`` makes
+every committed batch append to a ``DeltaJournal`` under a monotone
+offset, and every journaled Chandy-Lamport cut records the offset it
+anchors to (``journal_offset`` in the checkpoint's meta.json — exact, not
+approximate, because ``apply_delta`` fences while a marker wave is in
+flight).  That closes the snapshot×delta hole: a cut is no longer "the
+state at some step" but "the base graph, plus the journal prefix
+``[0, K)``, at a consistent numeric point".  Recovery is therefore a pure
+function of (base graph, journal, latest cut):
+
+  1. rebuild the engine over the base graph (the slot-reservation layout
+     is deterministic, so replaying the same commands reproduces the same
+     capacity slots the cut's shard journals index);
+  2. ``replay_journal`` the prefix ``[0, K)`` — structure only matters
+     here, the numbers get overwritten next;
+  3. ``restore_cut`` — the cut's captured vertex/edge rows become the
+     data graph, everything reschedules (conservative restart);
+  4. ``replay_journal`` the suffix ``[K, ...)`` and reconverge.
+
+Caveat (documented, not silent): a regrow between the cut and the crash
+changes the capacity layout, so recovery's replay must mirror the growth
+policy of the original run — ``replay_journal`` uses the same
+``apply_delta_growing`` escalation, which regrows at the same batches
+when the slack config matches.
+
+``run_stream_kill_restore`` is the full chaos scenario: stream batches
+(including deletions) into a live engine, journal a cut mid-stream, kill
+a machine while later batches are in flight, recover from the cut +
+journal suffix, finish the stream, reconverge.  tests/test_stream_
+recovery.py asserts the result matches an uninterrupted run to 1e-5.
+
+Layering: stream/ may import core/ and dist/, never models/.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.dist.faults import kill_machine, machine_data_lost
+from repro.dist.snapshot import save_snapshot, snapshot_from_journals
+from repro.stream.delta import DeltaBatch, DeltaJournal
+from repro.stream.ingest import (_masked_initial_prio, apply_delta_growing,
+                                 attach_journal)
+
+Pytree = Any
+
+
+def replay_journal(engine, state, journal: DeltaJournal, *,
+                   start: int = 0, stop: Optional[int] = None):
+    """Re-applies journal entries ``[start, stop)`` without re-recording
+    them.  Returns ``(engine, state)`` — the engine may be a regrown
+    replacement (capacity exhaustion during replay regrows exactly like
+    the live path did).  ``engine._stream_offset`` tracks the replay
+    frontier, so a later ``save_snapshot`` anchors correctly."""
+    stop = journal.next_offset if stop is None else int(stop)
+    for k, batch in journal.read_since(int(start)):
+        if k >= stop:
+            break
+        engine, state, _ = apply_delta_growing(engine, state, batch,
+                                               record=False)
+        engine._stream_offset = k + 1
+    return engine, state
+
+
+def restore_cut(engine, cut):
+    """Restarts a *streaming* engine from an assembled cut: the captured
+    rows become the data graph and every active vertex reschedules
+    (inactive capacity rows stay at zero priority — the plain
+    ``restore_engine_state`` would reschedule them too and stall
+    convergence forever)."""
+    g = engine.graph.replace(
+        vertex_data=jax.tree.map(lambda s, _: s, cut.saved_v,
+                                 engine.graph.vertex_data),
+        edge_data=jax.tree.map(lambda s, _: s, cut.saved_e,
+                               engine.graph.edge_data))
+    prio0 = _masked_initial_prio(engine.program, engine._stream_graph)
+    return engine.init(g, initial_prio=prio0)
+
+
+def recover_from_journal(build: Callable, journal: DeltaJournal,
+                         manager: CheckpointManager,
+                         step: Optional[int] = None):
+    """The recovery recipe as one call: fresh engine from ``build()``,
+    replay prefix, restore the (latest or given) committed cut, replay
+    suffix.  Returns ``(engine, state, info)``; the engine has the
+    journal re-attached so the stream can continue where it left off."""
+    meta = manager.read_meta(step)
+    restored_step = int(meta["step"])
+    anchor = int(meta["journal_offset"])
+    engine, state = build()
+    engine, state = replay_journal(engine, state, journal, stop=anchor)
+    _, journals = manager.restore_shards(restored_step)
+    cut = snapshot_from_journals(journals, engine.graph)
+    state = restore_cut(engine, cut)
+    engine, state = replay_journal(engine, state, journal, start=anchor)
+    attach_journal(engine, journal)  # resume recording at the log's tail
+    return engine, state, {
+        "restored_step": restored_step,
+        "journal_offset": anchor,
+        "replayed": journal.next_offset - anchor,
+    }
+
+
+def _drain_snapshot(engine, state, manager: CheckpointManager,
+                    initiators: Sequence[int], max_steps: int):
+    """Start a marker wave, step until it completes, journal the cut
+    (anchored at the current journal offset), detach."""
+    state = engine.start_snapshot(state, initiators)
+    prev_done = -1
+    for _ in range(max_steps):
+        if engine.snapshot_complete(state):
+            break
+        state = engine.step(state)
+        now_done = int(np.asarray(state.snap.done).sum())
+        if now_done == prev_done and not engine.snapshot_complete(state):
+            raise RuntimeError(
+                "snapshot marker wave stalled before completion "
+                f"({engine.snapshot_done_frac(state):.0%} saved)")
+        prev_done = now_done
+    save_snapshot(manager, int(state.step_index), engine, state)
+    manager.wait()
+    return engine.clear_snapshot(state)
+
+
+def run_stream_kill_restore(
+    build: Callable,
+    journal: DeltaJournal,
+    manager: CheckpointManager,
+    batches: Sequence[DeltaBatch],
+    *,
+    snapshot_after: int,
+    kill_after: int,
+    initiators: Sequence[int] = (0,),
+    machine: Optional[int] = None,
+    seed: int = 0,
+    max_steps: int = 2000,
+) -> Tuple[Any, Any, Dict[str, int]]:
+    """The streaming chaos scenario end to end.
+
+    Phase 1 streams ``batches`` into a live engine from ``build()``
+    (running to convergence between batches, journaling every batch),
+    drains + journals an anchored cut after batch ``snapshot_after``,
+    then kills a machine after batch ``kill_after`` — so deltas land both
+    before and after the cut, and batches ``kill_after+1:`` are still in
+    flight when the fault strikes.  Phase 2 recovers from the latest cut
+    + journal replay (``recover_from_journal``), streams the remaining
+    batches, and reconverges.
+
+    Returns ``(engine, state, info)``.
+    """
+    if not 0 <= snapshot_after <= kill_after < len(batches):
+        raise ValueError("need 0 <= snapshot_after <= kill_after < "
+                         f"len(batches) ({snapshot_after}, {kill_after}, "
+                         f"{len(batches)})")
+    engine, state = build()
+    attach_journal(engine, journal)
+    for i, batch in enumerate(batches[: kill_after + 1]):
+        engine, state, _ = apply_delta_growing(engine, state, batch)
+        state, _ = engine.run(state, max_steps=max_steps)
+        if i == snapshot_after:
+            state = _drain_snapshot(engine, state, manager, initiators,
+                                    max_steps)
+    if machine is None:
+        machine = int(np.random.default_rng(seed).integers(
+            engine.layout.n_machines))
+    state = kill_machine(engine, state, machine)
+    assert machine_data_lost(engine, state, machine)
+
+    engine, state, info = recover_from_journal(build, journal, manager)
+    for batch in batches[kill_after + 1:]:
+        engine, state, _ = apply_delta_growing(engine, state, batch)
+        state, _ = engine.run(state, max_steps=max_steps)
+    state, _ = engine.run(state, max_steps=max_steps)
+    info.update(killed_machine=int(machine), kill_after_batch=kill_after)
+    return engine, state, info

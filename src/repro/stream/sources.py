@@ -13,10 +13,15 @@ honest.
   ``lbp_arrivals``       MRF edges arriving with zero messages.
   ``als_rating_arrivals``streaming Netflix ratings into ``apps/als.py``,
                          including late-arriving movies (AddVertex).
+  ``pagerank_churn``     link-rot: DelEdge/DelVertex batches over a live
+  ``lbp_churn``          web / MRF, connectivity-preserving (deletions
+                         avoid a spanning tree), with the post-churn
+                         reference graph for the delete ≡ rebuild test.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, Tuple
+from collections import deque
+from typing import Any, Dict, List, Optional, Set, Tuple
 
 import jax
 import numpy as np
@@ -26,7 +31,8 @@ from repro.apps.lbp import make_mrf_graph
 from repro.apps.pagerank import make_pagerank_graph
 from repro.core.graph import DataGraph, GraphStructure
 from repro.graphs.generators import power_law_graph
-from repro.stream.delta import AddEdge, AddVertex, DeltaBatch, SetEdgeData
+from repro.stream.delta import (AddEdge, AddVertex, DelEdge, DeltaBatch,
+                                DelVertex, SetEdgeData)
 
 Pytree = Any
 
@@ -226,6 +232,161 @@ def lbp_arrivals(
             cmds.append(AddEdge(int(v), int(u), zero_msg))
         batches.append(DeltaBatch(cmds))
     return prefix_graph, batches, full_graph
+
+
+def _spanning_tree_pairs(pairs: np.ndarray, n: int
+                         ) -> Tuple[Set[Tuple[int, int]], List[int]]:
+    """BFS spanning tree over the undirected pairs (graph must be
+    connected): the tree pairs deletions must avoid, plus the tree's
+    leaves — vertices whose removal cannot disconnect anyone else."""
+    adj: Dict[int, Set[int]] = {}
+    for u, v in pairs:
+        adj.setdefault(int(u), set()).add(int(v))
+        adj.setdefault(int(v), set()).add(int(u))
+    parent = {0: 0}
+    dq = deque([0])
+    tree_deg = np.zeros(n, np.int64)
+    tree_pairs: Set[Tuple[int, int]] = set()
+    while dq:
+        u = dq.popleft()
+        for w in sorted(adj.get(u, ())):
+            if w not in parent:
+                parent[w] = u
+                tree_pairs.add((min(u, w), max(u, w)))
+                tree_deg[u] += 1
+                tree_deg[w] += 1
+                dq.append(w)
+    if len(parent) != n:
+        raise ValueError("churn sources need a connected graph "
+                         f"({len(parent)}/{n} reachable from 0)")
+    leaves = [v for v in range(1, n) if tree_deg[v] == 1]
+    return tree_pairs, leaves
+
+
+def _churn_plan(st: GraphStructure, frac_del_edges: float,
+                n_del_vertices: int, n_batches: int, seed: int):
+    """The shared deletion schedule: which vertices die (spanning-tree
+    leaves), which extra pairs die (non-tree, both endpoints surviving),
+    chunked into batches, plus the surviving undirected pairs."""
+    rng = np.random.default_rng(seed)
+    pairs = _undirected_pairs(st)
+    tree_pairs, leaves = _spanning_tree_pairs(pairs, st.n_vertices)
+    dead = set(rng.permutation(leaves)[:n_del_vertices].tolist()) \
+        if leaves and n_del_vertices else set()
+    candidates = [
+        (int(u), int(v)) for u, v in pairs
+        if (min(u, v), max(u, v)) not in tree_pairs
+        and int(u) not in dead and int(v) not in dead]
+    n_del = min(int(round(frac_del_edges * len(pairs))), len(candidates))
+    order = rng.permutation(len(candidates))
+    del_pairs = [candidates[i] for i in order[:n_del]]
+
+    del_set = {(min(u, v), max(u, v)) for u, v in del_pairs}
+    surviving = np.asarray(
+        [(int(u), int(v)) for u, v in pairs
+         if (min(u, v), max(u, v)) not in del_set
+         and int(u) not in dead and int(v) not in dead],
+        np.int64).reshape(-1, 2)
+
+    nb = max(n_batches, 1)
+    echunks = [list(c) for c in np.array_split(
+        np.asarray(del_pairs, np.int64).reshape(-1, 2), nb)]
+    dead_list = sorted(dead)
+    vchunks = [list(c) for c in np.array_split(
+        np.asarray(dead_list, np.int64), nb)]
+    return pairs, echunks, vchunks, dead, surviving
+
+
+def _churn_batches(pairs: np.ndarray, echunks, vchunks, *,
+                   renorm: bool) -> List[DeltaBatch]:
+    """Deletion command stream with incremental bookkeeping; with
+    ``renorm``, each batch re-normalizes the surviving out-weights of
+    every affected endpoint (the PageRank ingress contract)."""
+    nbrs: Dict[int, Set[int]] = {}
+    for u, v in pairs:
+        nbrs.setdefault(int(u), set()).add(int(v))
+        nbrs.setdefault(int(v), set()).add(int(u))
+    gone: Set[int] = set()
+    batches = []
+    for chunk_e, chunk_v in zip(echunks, vchunks):
+        cmds: List = []
+        affected: Set[int] = set()
+        for u, v in chunk_e:
+            u, v = int(u), int(v)
+            cmds.append(DelEdge(u, v))
+            cmds.append(DelEdge(v, u))
+            nbrs[u].discard(v)
+            nbrs[v].discard(u)
+            affected.update((u, v))
+        for v in chunk_v:
+            v = int(v)
+            for w in list(nbrs.get(v, ())):
+                nbrs[w].discard(v)
+                affected.add(w)
+            nbrs[v] = set()
+            gone.add(v)
+            cmds.append(DelVertex(v))  # incident edges cascade in-engine
+        if renorm:
+            for u in sorted(affected - gone):
+                w = np.float32(1.0 / max(len(nbrs[u]), 1))
+                for nb in sorted(nbrs[u]):
+                    cmds.append(SetEdgeData(u, nb, {"w": w}))
+        if cmds:
+            batches.append(DeltaBatch(cmds))
+    return batches
+
+
+def pagerank_churn(
+    st: GraphStructure,
+    *,
+    frac_del_edges: float = 0.15,
+    n_del_vertices: int = 2,
+    n_batches: int = 2,
+    seed: int = 0,
+) -> Tuple[DataGraph, List[DeltaBatch], DataGraph, List[int]]:
+    """Link-rot on the evolving web: pages and links disappear from a
+    live PageRank.  Deleted vertices are spanning-tree leaves and deleted
+    links avoid the tree, so the surviving web stays connected (the
+    snapshot marker wave must still reach every live vertex); deleted
+    vertex ids remain as isolated, inactive slots on both sides of the
+    delete ≡ rebuild equivalence.
+
+    Returns ``(full graph, batches, post-churn graph, deleted vids)``.
+    """
+    pairs, echunks, vchunks, dead, surviving = _churn_plan(
+        st, frac_del_edges, n_del_vertices, n_batches, seed)
+    full_graph = make_pagerank_graph(st)
+    batches = _churn_batches(pairs, echunks, vchunks, renorm=True)
+    s = np.concatenate([surviving[:, 0], surviving[:, 1]])
+    r = np.concatenate([surviving[:, 1], surviving[:, 0]])
+    post_st, _ = GraphStructure.from_edges(s, r, st.n_vertices)
+    return full_graph, batches, make_pagerank_graph(post_st), sorted(dead)
+
+
+def lbp_churn(
+    st: GraphStructure,
+    n_states: int,
+    *,
+    frac_del_edges: float = 0.15,
+    n_del_vertices: int = 2,
+    n_batches: int = 2,
+    seed: int = 0,
+    unary_seed: int = 0,
+) -> Tuple[DataGraph, List[DeltaBatch], DataGraph, List[int]]:
+    """Factor removal on a live MRF: pairwise factors (and whole
+    variables) leave a running LBP; surviving messages and unaries carry
+    over, the former neighborhoods re-drain.  The post-churn reference
+    copies the surviving factors from the full graph, so both sides see
+    identical potentials.
+
+    Returns ``(full graph, batches, post-churn graph, deleted vids)``.
+    """
+    pairs, echunks, vchunks, dead, surviving = _churn_plan(
+        st, frac_del_edges, n_del_vertices, n_batches, seed)
+    full_graph = make_mrf_graph(st, n_states, seed=unary_seed)
+    batches = _churn_batches(pairs, echunks, vchunks, renorm=False)
+    post_graph = _subgraph(full_graph, surviving, st.n_vertices)
+    return full_graph, batches, post_graph, sorted(dead)
 
 
 def als_rating_arrivals(

@@ -25,16 +25,20 @@ from repro.apps.als import ALSProgram, als_rmse
 from repro.apps.lbp import LoopyBPProgram
 from repro.apps.pagerank import (PageRankProgram, exact_pagerank,
                                  make_pagerank_graph)
-from repro.core import ChromaticEngine, DataGraph, Engine
+from repro.core import (ChromaticEngine, DataGraph, DynamicEngine, Engine,
+                        UnsupportedStreamingError)
 from repro.core.graph import GraphStructure
 from repro.core.partition import build_atoms, overpartition
 from repro.dist import DistributedEngine, DistributedLockingEngine
 from repro.graphs.generators import power_law_graph
-from repro.stream import (AddEdge, CapacityError, DeltaBatch, SlackConfig,
+from repro.stream import (AddEdge, AddVertex, CapacityError, DelEdge,
+                          DeltaBatch, DeltaJournal, DelVertex,
+                          SetVertexData, SlackConfig, SnapshotInFlightError,
                           StreamingGraph, als_rating_arrivals, apply_delta,
-                          apply_delta_growing, lbp_arrivals,
+                          apply_delta_growing, lbp_arrivals, lbp_churn,
                           make_dist_engine, make_local_engine,
-                          pagerank_arrivals, readback)
+                          pagerank_arrivals, pagerank_churn, readback,
+                          stream_colors)
 
 pytestmark = pytest.mark.skipif(
     jax.device_count() < 4, reason="needs 4 forced host devices "
@@ -46,6 +50,20 @@ ROOMY = SlackConfig(edge_frac=1.0, edge_min=8)
 def _mesh(n):
     devs = np.asarray(jax.devices()[:n]).reshape(n, 1)
     return jax.sharding.Mesh(devs, ("data", "model"))
+
+
+def _connected_power_law(n, deg, seed):
+    """power_law_graph plus a path: the churn sources (and the snapshot
+    marker wave) need every vertex reachable."""
+    st_ = power_law_graph(n, avg_degree=deg, seed=seed)
+    pairs = {(min(int(s), int(r)), max(int(s), int(r)))
+             for s, r in zip(st_.senders, st_.receivers) if s != r}
+    pairs |= {(i, i + 1) for i in range(n - 1)}
+    a = np.asarray([p[0] for p in sorted(pairs)], np.int32)
+    b = np.asarray([p[1] for p in sorted(pairs)], np.int32)
+    st2, _ = GraphStructure.from_edges(np.concatenate([a, b]),
+                                       np.concatenate([b, a]), n)
+    return st2
 
 
 # ---------------------------------------------------------------------------
@@ -114,9 +132,56 @@ class TestStreamingGraph:
         assert np.array_equal(a, b)
 
 
-# ---------------------------------------------------------------------------
-# contract 1: zero recompilations + active blocks
-# ---------------------------------------------------------------------------
+class TestDeletion:
+    def test_del_edge_swap_keeps_region_contiguous(self):
+        st_, _ = GraphStructure.undirected([0, 1, 2], [1, 2, 3], 5)
+        sg, _ = StreamingGraph.build(st_, SlackConfig(edge_min=4,
+                                                      vertex_min=2))
+        # give vertex 1 a second in-edge so deleting the first swaps
+        sg.add_edge(3, 1)
+        n0 = sg.n_real_edges
+        slot, moved_from = sg.del_edge(0, 1)
+        assert sg.n_real_edges == n0 - 1
+        assert (0, 1) not in sg.edge_slot
+        # the region tail moved into the hole; the vacated slot is inert
+        assert moved_from is not None
+        assert sg.senders[slot] == 3 and sg.edge_slot[(3, 1)] == slot
+        assert not sg.edge_mask[moved_from]
+        assert sg.senders[moved_from] == 1  # inert self-loop of dst
+        assert sg.rev_idx[moved_from] == moved_from
+        # the surviving twin (1, 0) lost its reverse link
+        assert sg.rev_idx[sg.slot_of(1, 0)] == -1
+        # the in-region stays contiguous: fill occupied slots, no holes
+        occ = sg.in_slots(1)
+        assert sg.edge_mask[occ].all() and len(occ) == 2
+        with pytest.raises(KeyError):
+            sg.del_edge(0, 1)  # already gone
+
+    def test_delete_then_readd_relinks_reverse(self):
+        st_, _ = GraphStructure.undirected([0, 1], [1, 2], 4)
+        sg, _ = StreamingGraph.build(st_, SlackConfig(edge_min=4,
+                                                      vertex_min=2))
+        sg.del_edge(0, 1)
+        a = sg.add_edge(0, 1)
+        b = sg.slot_of(1, 0)
+        assert sg.rev_idx[a] == b and sg.rev_idx[b] == a
+
+    def test_del_vertex_requires_isolation_then_frees_slot(self):
+        st_, _ = GraphStructure.undirected([0, 1], [1, 2], 4)
+        sg, _ = StreamingGraph.build(st_, SlackConfig(edge_min=4,
+                                                      vertex_min=2))
+        with pytest.raises(ValueError):
+            sg.del_vertex(2)  # still has incident edges
+        sg.del_edge(1, 2)
+        sg.del_edge(2, 1)
+        sg.del_vertex(2)
+        assert not sg.vertex_active[2]
+        # the freed id is reusable by a later AddVertex
+        assert sg.add_vertex() == 2
+        assert sg.vertex_active[2]
+
+
+
 
 class TestZeroRecompile:
     def test_local_fused_and_dense(self):
@@ -283,6 +348,235 @@ class TestIncrementalEquivalence:
         assert regrew >= 1, "tiny slack was expected to force a regrow"
         out = np.asarray(readback(eng, state).vertex_data[k])
         assert np.abs(out - ref).max() <= 1e-5
+
+
+# ---------------------------------------------------------------------------
+# full lifecycle: delete ≡ rebuild (the hypothesis property)
+# ---------------------------------------------------------------------------
+
+def _pagerank_churn_case(n, seed):
+    st_ = _connected_power_law(n, 5, seed)
+    full_g, batches, post_g, dead = pagerank_churn(
+        st_, frac_del_edges=0.2, n_del_vertices=2, n_batches=2, seed=seed)
+    prog = PageRankProgram(0.15, st_.n_vertices)
+    scratch = Engine(prog, post_g, tolerance=1e-7)
+    s, _ = scratch.run(scratch.init(post_g), max_steps=300)
+    ref = np.asarray(s.graph.vertex_data["rank"])
+    alive = np.setdiff1d(np.arange(st_.n_vertices), np.asarray(dead))
+    return prog, full_g, batches, ref, alive, "rank", 1e-7, 300
+
+
+def _lbp_churn_case(n, seed):
+    st_ = _connected_power_law(n, 4, seed)
+    full_g, batches, post_g, dead = lbp_churn(
+        st_, 3, frac_del_edges=0.2, n_del_vertices=2, n_batches=2,
+        seed=seed)
+    prog = LoopyBPProgram(3, smoothing=0.7)
+    scratch = ChromaticEngine(prog, post_g, tolerance=1e-6)
+    s, _ = scratch.run(scratch.init(post_g), max_steps=80)
+    ref = np.asarray(s.graph.vertex_data["belief"])
+    alive = np.setdiff1d(np.arange(st_.n_vertices), np.asarray(dead))
+    return prog, full_g, batches, ref, alive, "belief", 1e-6, 80
+
+
+class TestDeleteEquivalence:
+    """Converge the full graph, stream deletion batches (edges, whole
+    vertices, renormalized weights), reconverge — the fixed point over the
+    surviving vertices matches an engine built from scratch on the
+    post-deletion graph (deleted ids stay behind as isolated slots)."""
+
+    @settings(max_examples=3, deadline=None)
+    @given(seed=st.integers(0, 100), case=st.sampled_from(["pr", "lbp"]))
+    def test_local(self, seed, case):
+        make = _pagerank_churn_case if case == "pr" else _lbp_churn_case
+        prog, full_g, batches, ref, alive, k, tol, steps = make(
+            90, seed % 7)
+        cls = Engine if case == "pr" else ChromaticEngine
+        eng, state = make_local_engine(prog, full_g, engine_cls=cls,
+                                       tolerance=tol, slack=ROOMY)
+        state, _ = eng.run(state, max_steps=steps)
+        for b in batches:
+            assert b.n_deletions > 0
+            state = apply_delta(eng, state, b)
+            state, _ = eng.run(state, max_steps=steps)
+        out = np.asarray(readback(eng, state).vertex_data[k])
+        assert np.abs(out[alive] - ref[alive]).max() <= 1e-5
+
+    @settings(max_examples=2, deadline=None)
+    @given(seed=st.integers(0, 100), case=st.sampled_from(["pr", "lbp"]),
+           n_machines=st.sampled_from([2, 4]))
+    def test_dist(self, seed, case, n_machines):
+        make = _pagerank_churn_case if case == "pr" else _lbp_churn_case
+        prog, full_g, batches, ref, alive, k, tol, steps = make(
+            80, seed % 5)
+        eng, state = make_dist_engine(prog, full_g, _mesh(n_machines),
+                                      tolerance=tol, slack=ROOMY)
+        state, _ = eng.run(state, max_steps=steps * eng.num_colors)
+        for b in batches:
+            state = apply_delta(eng, state, b)
+            state, _ = eng.run(state, max_steps=steps * eng.num_colors)
+        out = np.asarray(readback(eng, state).vertex_data[k])
+        assert np.abs(out[alive] - ref[alive]).max() <= 1e-5
+
+
+# ---------------------------------------------------------------------------
+# incremental color repair (DESIGN §3.12)
+# ---------------------------------------------------------------------------
+
+def _assert_no_conflicts(sg, colors):
+    bad = [(s, r) for (s, r) in sg.edge_slot
+           if s != r and colors[s] == colors[r]]
+    assert not bad, f"same-color conflicting edges survived: {bad[:5]}"
+
+
+class TestColorRepair:
+    """Delta edges joining same-colored vertices must be repaired at
+    apply_delta time — between regrows, the live coloring stays a proper
+    coloring for every radius ≥ 1 program."""
+
+    def test_local_lbp_arrivals(self):
+        st_ = power_law_graph(120, avg_degree=4, seed=9)
+        prefix_g, batches, _ = lbp_arrivals(st_, 3, prefix_frac=0.8,
+                                            n_batches=3, seed=1)
+        prog = LoopyBPProgram(3, smoothing=0.7)
+        eng, state = make_local_engine(prog, prefix_g,
+                                       engine_cls=ChromaticEngine,
+                                       tolerance=1e-6, slack=ROOMY)
+        assert eng.num_colors > int(stream_colors(eng).max()) + 1, \
+            "color slack should reserve spare phases"
+        for b in batches:
+            state = apply_delta(eng, state, b)
+            _assert_no_conflicts(eng._stream_graph, stream_colors(eng))
+        state, _ = eng.run(state, max_steps=80)
+
+    def test_dist_lbp_arrivals(self, cpu_mesh):
+        st_ = power_law_graph(100, avg_degree=4, seed=10)
+        prefix_g, batches, _ = lbp_arrivals(st_, 3, prefix_frac=0.8,
+                                            n_batches=2, seed=2)
+        prog = LoopyBPProgram(3, smoothing=0.7)
+        eng, state = make_dist_engine(prog, prefix_g, cpu_mesh,
+                                      tolerance=1e-6, slack=ROOMY)
+        for b in batches:
+            state = apply_delta(eng, state, b)
+            _assert_no_conflicts(eng._stream_graph, stream_colors(eng))
+        state, _ = eng.run(state, max_steps=200)
+
+
+# ---------------------------------------------------------------------------
+# snapshot × delta fence (the fixed undefined-behavior hole)
+# ---------------------------------------------------------------------------
+
+class TestSnapshotFence:
+    def test_apply_delta_rejected_while_marker_wave_in_flight(self,
+                                                              cpu_mesh):
+        st_ = _connected_power_law(80, 4, seed=11)
+        full_g, batches, _, _ = pagerank_churn(st_, frac_del_edges=0.15,
+                                               n_del_vertices=1,
+                                               n_batches=1, seed=0)
+        prog = PageRankProgram(0.15, st_.n_vertices)
+        eng, state = make_dist_engine(prog, full_g, cpu_mesh,
+                                      tolerance=1e-6, slack=ROOMY)
+        state, _ = eng.run(state, max_steps=200)
+        state = eng.start_snapshot(state, (0,))
+        sg = eng._stream_graph
+        before = sg.n_real_edges
+        with pytest.raises(SnapshotInFlightError):
+            apply_delta(eng, state, batches[0])
+        assert sg.n_real_edges == before, "fence must reject pre-mutation"
+        # drain the wave; afterwards the same batch applies cleanly
+        for _ in range(200):
+            if eng.snapshot_complete(state):
+                break
+            state = eng.step(state)
+        assert eng.snapshot_complete(state)
+        state = eng.clear_snapshot(state)
+        state = apply_delta(eng, state, batches[0])
+        state, _ = eng.run(state, max_steps=200)
+
+
+# ---------------------------------------------------------------------------
+# engines that cannot stream say so at construction
+# ---------------------------------------------------------------------------
+
+class TestUnsupportedStreaming:
+    def test_dynamic_engine_rejected_at_construction(self):
+        st_ = power_law_graph(40, avg_degree=4, seed=12)
+        g = make_pagerank_graph(st_)
+        prog = PageRankProgram(0.15, st_.n_vertices)
+        with pytest.raises(UnsupportedStreamingError):
+            make_local_engine(prog, g, engine_cls=DynamicEngine,
+                              tolerance=1e-6, slack=ROOMY)
+        # the same engine still builds fine on static structure
+        DynamicEngine(prog, g, tolerance=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# DeltaJournal: durable, offset-ordered, gap-checked
+# ---------------------------------------------------------------------------
+
+class TestDeltaJournal:
+    def _batches(self):
+        return [
+            DeltaBatch([AddVertex(vid=7),
+                        AddEdge(0, 1, data=[np.float32(0.5)]),
+                        SetVertexData(2, [np.asarray([0.25], np.float32)])]),
+            DeltaBatch([DelEdge(0, 1), DelVertex(7)]),
+        ]
+
+    def test_roundtrip_through_reopen(self, tmp_path):
+        j = DeltaJournal(str(tmp_path))
+        assert j.next_offset == 0
+        for b in self._batches():
+            j.append(b)
+        j2 = DeltaJournal(str(tmp_path))  # fresh scan of the directory
+        assert len(j2) == 2 and j2.next_offset == 2
+        got = list(j2.read_since(0))
+        assert [k for k, _ in got] == [0, 1]
+        for (_, rb), b in zip(got, self._batches()):
+            assert [type(c) for c in rb] == [type(c) for c in b]
+        b0 = got[0][1]
+        assert b0.commands[0].vid == 7
+        assert (b0.commands[1].src, b0.commands[1].dst) == (0, 1)
+        np.testing.assert_allclose(b0.commands[1].data[0], 0.5)
+        np.testing.assert_allclose(b0.commands[2].data[0], [0.25])
+        b1 = got[1][1]
+        assert (b1.commands[0].src, b1.commands[0].dst) == (0, 1)
+        assert b1.commands[1].vid == 7
+        # read_since(1) is the replay suffix of a cut anchored at 1
+        assert [k for k, _ in j2.read_since(1)] == [1]
+
+    def test_gap_detection(self, tmp_path):
+        j = DeltaJournal(str(tmp_path))
+        for b in self._batches():
+            j.append(b)
+        import os
+        os.unlink(os.path.join(str(tmp_path), "delta_0000000000.npz"))
+        with pytest.raises(ValueError, match="gap"):
+            DeltaJournal(str(tmp_path))
+
+    def test_journal_records_committed_batches_only(self, tmp_path):
+        """attach_journal + apply_delta: committed batches append under
+        monotone offsets; a batch that fails capacity is not recorded."""
+        from repro.stream import attach_journal
+        st_ = power_law_graph(60, avg_degree=4, seed=13)
+        g = make_pagerank_graph(st_)
+        prog = PageRankProgram(0.15, st_.n_vertices)
+        tiny = SlackConfig(edge_frac=0.0, edge_min=1, vertex_min=1,
+                           ghost_slack=1, eghost_slack=1)
+        eng, state = make_local_engine(prog, g, tolerance=1e-6, slack=tiny)
+        journal = DeltaJournal(str(tmp_path))
+        attach_journal(eng, journal)
+        sg = eng._stream_graph
+        ok = next(i for i in range(1, 59)
+                  if (i, 0) not in sg.edge_slot and sg.fill[0] <
+                  sg.slot_start[1] - sg.slot_start[0])
+        state = apply_delta(eng, state, DeltaBatch([AddEdge(ok, 0)]))
+        assert journal.next_offset == 1 and eng._stream_offset == 1
+        fresh = [i for i in range(1, 59) if (i, 0) not in sg.edge_slot][:6]
+        with pytest.raises(CapacityError):
+            apply_delta(eng, state, DeltaBatch(
+                [AddEdge(i, 0) for i in fresh]))
+        assert journal.next_offset == 1, "failed batch must not journal"
 
 
 # ---------------------------------------------------------------------------
