@@ -16,6 +16,7 @@ import json
 import sys
 import time
 
+from benchmarks import churn_bench
 from benchmarks import gas_bench
 from benchmarks import paper_figures as pf
 from benchmarks import pipeline_bench
@@ -32,6 +33,7 @@ HARNESSES = {
     "fig6": pf.fig6_scaling_and_intensity,
     "fig9a": pf.fig9a_dynamic_vs_static_als,
     "table2": pf.table2_throughput,
+    "churn": churn_bench.churn_chaos,
     "gas": gas_bench.gas_microbenchmark,
     "pipeline": pipeline_bench.pipeline_sweep,
     "roofline": roofline.engine_roofline,

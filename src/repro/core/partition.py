@@ -259,16 +259,12 @@ def place_atoms(index: AtomIndex, n_machines: int) -> np.ndarray:
     return out
 
 
-def place_vertices(st: GraphStructure, atom_of: np.ndarray,
-                   n_machines: int) -> np.ndarray:
-    """Two-phase placement without journal files: builds the meta-graph of
-    an atom assignment directly from the structure, places atoms with
-    ``place_atoms``, and returns machine_of_vertex [N].
-
-    Shared by the simulated cluster (core/distributed.py) and the real
-    shard_map engine (dist/engine.py): both derive vertex placement — and
-    therefore ghost sets — from the same two-phase partition.
-    """
+def atom_meta_index(st: GraphStructure, atom_of: np.ndarray) -> AtomIndex:
+    """The meta-graph of an atom assignment built directly from the
+    structure, without journal files: one meta-vertex per atom, meta-edges
+    weighted by cut size.  This is the in-memory half of ``build_atoms``,
+    shared by placement (``place_vertices``) and live rebalancing
+    (``rebalance_placement``)."""
     atom_of = np.asarray(atom_of, np.int32)
     k = int(atom_of.max()) + 1
     nv = np.bincount(atom_of, minlength=k)
@@ -283,13 +279,78 @@ def place_vertices(st: GraphStructure, atom_of: np.ndarray,
     else:
         meta_src = meta_dst = np.zeros(0, np.int32)
         meta_w = np.zeros(0, np.int64)
-    index = AtomIndex(
+    return AtomIndex(
         k_atoms=k, n_vertices=st.n_vertices, n_edges=st.n_edges,
         atom_nv=nv.astype(np.int64), atom_ne=ne.astype(np.int64),
         meta_src=meta_src, meta_dst=meta_dst, meta_weight=meta_w,
         files=[""] * k)
-    placement = place_atoms(index, n_machines)
+
+
+def place_vertices(st: GraphStructure, atom_of: np.ndarray,
+                   n_machines: int) -> np.ndarray:
+    """Two-phase placement without journal files: builds the meta-graph of
+    an atom assignment directly from the structure, places atoms with
+    ``place_atoms``, and returns machine_of_vertex [N].
+
+    Shared by the simulated cluster (core/distributed.py) and the real
+    shard_map engine (dist/engine.py): both derive vertex placement — and
+    therefore ghost sets — from the same two-phase partition.
+    """
+    atom_of = np.asarray(atom_of, np.int32)
+    placement = place_atoms(atom_meta_index(st, atom_of), n_machines)
     return placement[atom_of]
+
+
+def rebalance_placement(index: AtomIndex, placement: np.ndarray,
+                        n_machines: int, *,
+                        remove: Sequence[int] = ()) -> np.ndarray:
+    """Incrementally repairs an atom placement after membership changes
+    (dist/migrate.py; DESIGN §3.13) — the two-phase scheme's elasticity
+    applied *live*: atoms move, machines never rebuild from scratch.
+
+    Two phases: (1) evacuate — atoms on ``remove``d machines go
+    largest-first to the least-loaded surviving machine; (2) smooth —
+    while some machine exceeds the mean load, migrate its largest atom
+    that still fits into the load gap toward the least-loaded machine.
+    Phase 2 strictly decreases the sum of squared loads, so it
+    terminates; atoms on untouched machines stay put (minimal movement,
+    unlike a fresh ``place_atoms``).  Returns the new machine_of_atom [k]
+    over machine ids ``0..n_machines-1`` minus ``remove``.
+    """
+    placement = np.asarray(placement, np.int32).copy()
+    removed = set(int(m) for m in remove)
+    alive = [m for m in range(int(n_machines)) if m not in removed]
+    if not alive:
+        raise ValueError("rebalance_placement: no machines left")
+    w = (index.atom_nv + index.atom_ne).astype(np.int64)
+    load = np.zeros(int(n_machines), np.int64)
+    for a in range(index.k_atoms):
+        if int(placement[a]) not in removed:
+            load[placement[a]] += w[a]
+
+    # phase 1: evacuate dead machines, largest atom first
+    orphans = [a for a in range(index.k_atoms)
+               if int(placement[a]) in removed]
+    for a in sorted(orphans, key=lambda a: -int(w[a])):
+        m = min(alive, key=lambda mm: load[mm])
+        placement[a] = m
+        load[m] += w[a]
+
+    # phase 2: smooth overloads (covers join: a fresh machine enters with
+    # zero load and pulls atoms until the mesh is balanced again)
+    while True:
+        hi = max(alive, key=lambda mm: load[mm])
+        lo = min(alive, key=lambda mm: load[mm])
+        gap = int(load[hi] - load[lo])
+        movable = [a for a in range(index.k_atoms)
+                   if placement[a] == hi and 0 < int(w[a]) < gap]
+        if not movable:
+            break
+        a = max(movable, key=lambda a: int(w[a]))
+        placement[a] = lo
+        load[hi] -= w[a]
+        load[lo] += w[a]
+    return placement
 
 
 @dataclasses.dataclass

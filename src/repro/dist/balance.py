@@ -1,0 +1,167 @@
+"""Work-stealing straggler mitigation over per-machine queues (DESIGN
+§3.13).
+
+The paper's pipelined locking engine gives every machine its own priority
+queue (``MultiQueueScheduler``).  A stalled or slow machine therefore
+strands its queue: vertices that only *it* would pop sit scheduled
+forever while the rest of the mesh idles toward a fixed point it cannot
+reach.  ASYMP's answer (PAPERS.md) is work stealing, and the queue seam
+makes it one primitive here: **queue membership becomes scheduler
+state** rather than static structure, so re-assigning a vertex to
+another machine's queue is a value update on the jitted path — no
+retrace, no rebuild.
+
+``WorkStealingScheduler`` is ``MultiQueueScheduler`` with the queue map
+lifted into ``sched`` and a stolen-update counter.  Selection semantics
+are identical before any steal (tests/test_balance.py asserts
+bit-equality): each queue pops its top-p scheduled vertices, and
+arbitration runs over the union with the globally unique rank
+``slot * S + machine``.  That rank scheme is exactly why stealing
+preserves correctness: ranks are unique because the queues *partition*
+the vertices — a property reassignment maintains — so the
+minimum-rank-wins exclusion argument is untouched by any queue_of value
+(the §3.13 steal-rank correctness argument).
+
+``steal_backlog`` is the host-side trigger (called between steps when
+``StragglerMonitor`` flags progress skew): the victim's top-p backlog by
+priority is re-ranked round-robin into its peers' queues.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import GraphStructure
+from repro.core.scheduler import (Scheduler, check_rank_range,
+                                  scheduled_mask)
+
+Pytree = object
+
+
+class WorkStealingScheduler(Scheduler):
+    """Per-machine top-p queues with *dynamic* membership.
+
+    ``sched`` carries ``queue_of`` (the live vertex→queue map, initialized
+    from ``machine_of``), ``stolen`` (vertices currently executing away
+    from home), and ``stolen_updates`` (how many arbitration winners were
+    stolen vertices — the counter the acceptance criteria watch).  Because
+    membership is state, ``jax.lax.top_k`` runs per queue as a masked
+    top-k over the full vertex set inside a static machine loop.
+    """
+
+    def __init__(self, program, structure: GraphStructure, tolerance: float,
+                 machine_of: np.ndarray, pipeline_length: int,
+                 serializable: bool = True):
+        super().__init__(program, structure, tolerance)
+        machine_of = np.asarray(machine_of, np.int32)
+        if machine_of.shape != (structure.n_vertices,):
+            raise ValueError("machine_of must be [n_vertices]")
+        self.n_machines = int(machine_of.max()) + 1 if machine_of.size else 1
+        # p is per queue; stealing can grow a queue up to n, so cap there
+        self.pipeline_length = int(min(pipeline_length,
+                                       structure.n_vertices))
+        self.serializable = bool(serializable)
+        if self.serializable:
+            check_rank_range(self.pipeline_length * self.n_machines,
+                             "WorkStealingScheduler")
+        self._machine_of = machine_of
+
+    def init(self, prio):
+        n = self.structure.n_vertices
+        return {"queue_of": jnp.asarray(self._machine_of),
+                "stolen": jnp.zeros(n, bool),
+                "stolen_updates": jnp.zeros((), jnp.int32)}
+
+    def select(self, sched, prio, phase=0, tables=None):
+        n, S, k = self.structure.n_vertices, self.n_machines, \
+            self.pipeline_length
+        in_t = scheduled_mask(prio, self.tolerance)
+        q = sched["queue_of"]
+        selected = jnp.zeros(n, bool)
+        rank = jnp.full(n, jnp.inf, jnp.float32)
+        for m in range(S):
+            mine = jnp.logical_and(in_t, q == m)
+            # stable top_k breaks priority ties toward lower vertex id —
+            # the same tie order as MultiQueueScheduler's padded grid
+            _, top = jax.lax.top_k(jnp.where(mine, prio, -jnp.inf), k)
+            sel_m = jnp.logical_and(
+                jnp.zeros(n, bool).at[top].set(True), mine)
+            # canonical (owner, v) order: rank slot * S + machine, unique
+            # across machines because the queues partition the vertices
+            r_m = jnp.full(n, jnp.inf, jnp.float32).at[top].set(
+                jnp.where(mine[top],
+                          jnp.arange(k, dtype=jnp.float32) * S + m,
+                          jnp.inf))
+            selected = jnp.logical_or(selected, sel_m)
+            rank = jnp.minimum(rank, r_m)
+        win = self._arbitrate(selected, rank) if self.serializable \
+            else selected
+        sched = dict(sched, stolen_updates=sched["stolen_updates"]
+                     + jnp.sum(jnp.logical_and(win, sched["stolen"]),
+                               dtype=jnp.int32))
+        return win, sched
+
+
+def steal_backlog(
+    scheduler: WorkStealingScheduler,
+    sched: Pytree,
+    prio,
+    victim: int,
+    *,
+    top_p: Optional[int] = None,
+    frac: float = 0.5,
+    to: Optional[Sequence[int]] = None,
+) -> Tuple[Pytree, int]:
+    """Re-ranks the victim queue's top-p scheduled backlog into its peers'
+    queues, round-robin (host-side; a pure ``sched`` value update — the
+    jitted step keeps its cache entry).  Returns ``(new sched, n_moved)``.
+
+    ``top_p`` bounds how much to steal (default: ``frac`` of the victim's
+    scheduled backlog); ``to`` restricts the receiving machines.
+    """
+    q = np.asarray(sched["queue_of"]).copy()
+    stolen = np.asarray(sched["stolen"]).copy()
+    p = np.nan_to_num(np.asarray(prio, np.float64), nan=0.0)
+    backlog = np.nonzero((q == victim) & (p > scheduler.tolerance))[0]
+    backlog = backlog[np.argsort(-p[backlog], kind="stable")]
+    if top_p is None:
+        top_p = max(1, int(round(frac * backlog.size)))
+    take = backlog[:max(int(top_p), 0)]
+    peers = list(to) if to is not None else [
+        m for m in range(scheduler.n_machines) if m != victim]
+    if not peers or take.size == 0:
+        return sched, 0
+    q[take] = [peers[i % len(peers)] for i in range(take.size)]
+    stolen[take] = True
+    return dict(sched, queue_of=jnp.asarray(q),
+                stolen=jnp.asarray(stolen)), int(take.size)
+
+
+def stolen_updates(sched: Pytree) -> int:
+    """Arbitration winners so far that were stolen vertices."""
+    return int(np.asarray(sched["stolen_updates"]))
+
+
+class StragglerMonitor:
+    """Progress-skew detector over the heartbeat counters (DESIGN §3.13):
+    machine m is a straggler when it is ``skew`` beats behind the leader.
+    The beats already ride the engine state (dist/engine.py), so this is
+    a pure host-side comparison — the same observation point as the
+    ``Watchdog``, with a lower threshold and a milder remedy."""
+
+    def __init__(self, n_machines: int, *, skew: int = 4):
+        self.n_machines = int(n_machines)
+        self.skew = int(skew)
+
+    def laggards(self, beats) -> List[int]:
+        beats = np.asarray(beats).reshape(-1)
+        if beats.size != self.n_machines:
+            raise ValueError(
+                f"expected {self.n_machines} beat counters, got "
+                f"{beats.size}")
+        lead = int(beats.max())
+        return [m for m in range(self.n_machines)
+                if lead - int(beats[m]) >= self.skew]

@@ -54,7 +54,8 @@ from repro.dist.compat import shard_map
 from repro.dist.snapshot import (assemble_snapshot as _assemble_snapshot,
                                  init_dist_snapshot, make_marker_phase,
                                  mark_stale)
-from repro.core.partition import overpartition, place_vertices
+from repro.core.partition import (atom_meta_index, overpartition,
+                                  place_atoms)
 from repro.core.sync_op import SyncOp, run_syncs
 from repro.core.update import (EdgeCtx, VertexProgram, fused_edge_weight,
                                fused_gather_leaves, masked_update,
@@ -83,6 +84,7 @@ class DistState:
     step_index: jnp.ndarray  # scalar i32
     snap: Pytree = None     # DistSnapshotState while a snapshot is live
     globals_: Pytree = ()   # sync-op outputs (replicated), DESIGN §3.9
+    beats: Pytree = None    # [S] i32 heartbeat counters (DESIGN §3.13)
 
     def replace(self, **kw) -> "DistState":
         return dataclasses.replace(self, **kw)
@@ -348,6 +350,9 @@ class ShardEngineBase:
         stream_real_edges: Optional[np.ndarray] = None,
         ghost_slack: int = 0,
         eghost_slack: int = 0,
+        atom_of: Optional[np.ndarray] = None,
+        atom_placement: Optional[np.ndarray] = None,
+        machine_of: Optional[np.ndarray] = None,
     ):
         self.program = program
         self.graph = graph
@@ -363,8 +368,25 @@ class ShardEngineBase:
                 f"pass axis=<name> for the machine dimension")
         S = int(mesh.shape[axis])
         k_atoms = k_atoms or max(4 * S, 32)
-        atom_of = overpartition(st, k_atoms, method=method, seed=seed)
-        machine_of = place_vertices(st, atom_of, S)
+        # two-phase placement, with every intermediate overridable so
+        # migration (dist/migrate.py) can rebuild on an explicit placement
+        if machine_of is None:
+            if atom_of is None:
+                atom_of = overpartition(st, k_atoms, method=method,
+                                        seed=seed)
+            atom_of = np.asarray(atom_of, np.int32)
+            if atom_placement is None:
+                atom_placement = place_atoms(atom_meta_index(st, atom_of), S)
+            atom_placement = np.asarray(atom_placement, np.int32)
+            machine_of = atom_placement[atom_of]
+        else:
+            machine_of = np.asarray(machine_of, np.int32)
+            if atom_of is not None:
+                atom_of = np.asarray(atom_of, np.int32)
+            if atom_placement is not None:
+                atom_placement = np.asarray(atom_placement, np.int32)
+        self.atom_of = atom_of
+        self.atom_placement = atom_placement
         # reverse-edge ghost machinery only when the program reads
         # ctx.rev_edata (declared, defaulting to has_edge_out)
         use_rev = (program.reads_rev_edata
@@ -377,6 +399,10 @@ class ShardEngineBase:
         self.streaming = stream_real_edges is not None
         if self.streaming or ghost_slack or eghost_slack:
             _expand_slabs(self.layout, int(ghost_slack), int(eghost_slack))
+        # membership stall flags (DESIGN §3.13): a stalled machine executes
+        # no updates, ships nothing, and stops beating — the watchdog's
+        # silent-failure model (dist/faults.py sets these).
+        self.layout.tables["stall"] = np.zeros(S, bool)
         self._trace_count = 0  # bumped at trace time; delta tests assert 0
 
         # Fused GAS local compute (DESIGN.md §3.5): per-machine CSR block
@@ -449,6 +475,27 @@ class ShardEngineBase:
             self._tables[k] = jax.device_put(
                 jnp.asarray(self.layout.tables[k]), self._shard)
 
+    # -- live migration hooks (dist/migrate.py; DESIGN §3.13) -----------------
+    def _clone_kwargs(self) -> dict:
+        """Constructor kwargs that reproduce this engine's configuration on
+        a new mesh/placement; subclasses extend with their own knobs."""
+        return dict(tolerance=self.tolerance, sync_ops=self.sync_ops,
+                    use_fused=self._use_fused,
+                    gas_interpret=self._gas_interpret)
+
+    def clone_for_placement(self, graph: DataGraph, mesh,
+                            machine_of: np.ndarray, *,
+                            atom_of: Optional[np.ndarray] = None,
+                            atom_placement: Optional[np.ndarray] = None):
+        """A new engine of the same type and configuration over an explicit
+        vertex→machine placement: the live-migration rebuild.  Same
+        program, new layout tables, one jit retrace — survivor state is
+        carried by the caller via ``init(initial_prio=...)``."""
+        return type(self)(self.program, graph, mesh, axis=self.axis,
+                          machine_of=np.asarray(machine_of, np.int32),
+                          atom_of=atom_of, atom_placement=atom_placement,
+                          **self._clone_kwargs())
+
     # -- state ---------------------------------------------------------------
     def init(self, graph: Optional[DataGraph] = None,
              initial_prio: Optional[np.ndarray] = None) -> DistState:
@@ -491,6 +538,7 @@ class ShardEngineBase:
             traffic_r=put(np.zeros(S, np.int32)),
             step_index=jax.device_put(jnp.zeros((), jnp.int32), self._rep),
             snap=None,
+            beats=put(np.zeros(S, np.int32)),
             globals_=jax.tree.map(
                 lambda x: jax.device_put(jnp.asarray(x), self._rep),
                 run_syncs(self.sync_ops, vdata, vdata,
@@ -543,6 +591,11 @@ class ShardEngineBase:
             return recv, recv_changed, jnp.sum(ship, dtype=jnp.int32)
 
         def phase_update(tb, carry, active):
+            # a stalled machine (membership: dead or hung) executes no
+            # updates — and, through the versioned exchange below, ships
+            # nothing, so poisoned data never leaves it (DESIGN §3.13)
+            active = jnp.logical_and(active,
+                                     jnp.logical_not(tb["stall"][0]))
             vown, vghost = carry["vown"], carry["vghost"]
             edata, eghost = carry["edata"], carry["eghost"]
             prio, count = carry["prio"], carry["count"]
@@ -737,6 +790,9 @@ class ShardEngineBase:
 
         def full_body(state: DistState, tb) -> DistState:
             vown_prev = state.vown
+            beats = state.beats
+            if beats is None:  # pre-§3.13 state (e.g. restored cut)
+                beats = jnp.zeros((1,), jnp.int32)
             if state.snap is not None:
                 state = state.replace(snap=marker_phase(
                     tb, state.snap, state.vown, state.edata,
@@ -745,12 +801,18 @@ class ShardEngineBase:
             if sync_ops:
                 state = state.replace(
                     globals_=dist_syncs(tb, state.vown, vown_prev))
-            return state
+            # heartbeat (DESIGN §3.13): one monotone beat per executed
+            # step; a stalled machine stops beating, which is exactly the
+            # signal the host Watchdog reads
+            return state.replace(
+                beats=beats + jnp.logical_not(tb["stall"]).astype(
+                    jnp.int32))
 
         state_specs = DistState(
             vown=spec, vghost=spec, edata=spec, eghost=spec, prio=spec,
             update_count=spec, traffic_v=spec, traffic_e=spec,
-            traffic_r=spec, step_index=P(), snap=spec, globals_=P())
+            traffic_r=spec, step_index=P(), snap=spec, globals_=P(),
+            beats=spec)
         sharded = shard_map(
             full_body, mesh=self.mesh,
             in_specs=(state_specs, spec), out_specs=state_specs,
@@ -930,6 +992,7 @@ class DistributedEngine(ShardEngineBase):
         self.num_colors = (int(colors.max()) + 1 if colors.size else 1) \
             + max(int(spare_colors), 0)
         self.colors = colors
+        self._spare_colors = max(int(spare_colors), 0)
 
         colors_own = np.zeros(
             self.layout.n_machines * self.layout.n_loc, np.int32)
@@ -937,6 +1000,10 @@ class DistributedEngine(ShardEngineBase):
         colors_own[ok] = colors[self.layout.own_gid[ok]]
         self.layout.tables["colors_own"] = colors_own
         self._finalize()
+
+    def _clone_kwargs(self) -> dict:
+        return dict(super()._clone_kwargs(), colors=self.colors,
+                    spare_colors=self._spare_colors)
 
     def _make_step(self):
         _, phase_update = self._make_phase_helpers()

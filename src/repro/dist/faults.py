@@ -36,14 +36,61 @@ from repro.dist.engine import DistState, ShardEngineBase
 from repro.dist.snapshot import load_snapshot, save_snapshot
 
 
-def kill_machine(engine: ShardEngineBase, state: DistState,
-                 machine: int) -> DistState:
-    """Simulates the loss of one machine: every leaf block that machine
-    owned is destroyed in place.  Returns the surviving (broken) state —
-    recovery must come from a journaled snapshot, not from this."""
+def stall_machine(engine: ShardEngineBase, machine: int) -> None:
+    """Silently stalls a machine: it stops executing updates, shipping
+    ghost/rank rows, and beating — its data stays intact and *nothing*
+    announces the failure.  The mesh-level model of a hung or partitioned
+    host; detection is the host ``Watchdog``'s job (dist/membership.py,
+    DESIGN §3.13).  Reversible via ``resume_machine``."""
     S = engine.layout.n_machines
     if not 0 <= machine < S:
         raise ValueError(f"machine {machine} out of range (S={S})")
+    engine.layout.tables["stall"][machine] = True
+    engine.refresh_tables(["stall"])
+
+
+def resume_machine(engine: ShardEngineBase, machine: int) -> None:
+    """Clears a machine's stall flag — the false-positive/reinstatement
+    path: a suspect that was merely slow resumes beating and rejoins
+    without any migration."""
+    S = engine.layout.n_machines
+    if not 0 <= machine < S:
+        raise ValueError(f"machine {machine} out of range (S={S})")
+    engine.layout.tables["stall"][machine] = False
+    engine.refresh_tables(["stall"])
+
+
+def stalled_machines(engine: ShardEngineBase) -> np.ndarray:
+    """Machine ids currently stall-flagged on this engine."""
+    return np.nonzero(np.asarray(engine.layout.tables["stall"]))[0]
+
+
+def kill_machine(engine: ShardEngineBase, state: DistState,
+                 machine: int, *, mode: str = "kill") -> DistState:
+    """Simulates the loss of one machine.
+
+    ``mode="kill"`` (the PR-4 fault): every leaf block the machine owned
+    is destroyed in place — NaN-poisoned floats, zeroed ints — so the loss
+    is loud; recovery must come from a journaled snapshot.  The machine
+    keeps "running" (on garbage), which is why this mode alone cannot
+    exercise failure *detection*.
+
+    ``mode="stall"``: data intact, the machine just goes silent (see
+    ``stall_machine``) — the watchdog-detectable failure.
+
+    ``mode="dead"``: both — the machine's data is destroyed AND it stops
+    participating, so survivors keep stepping and the poison never ships.
+    This is the live-migration fault model (dist/migrate.py): the mesh
+    stays up while the dead machine's shard is rebuilt elsewhere."""
+    S = engine.layout.n_machines
+    if not 0 <= machine < S:
+        raise ValueError(f"machine {machine} out of range (S={S})")
+    if mode not in ("kill", "stall", "dead"):
+        raise ValueError(f"unknown kill mode {mode!r}")
+    if mode in ("stall", "dead"):
+        stall_machine(engine, machine)
+    if mode == "stall":
+        return state
 
     def destroy(tree):
         def one(x):
@@ -65,6 +112,7 @@ def kill_machine(engine: ShardEngineBase, state: DistState,
         traffic_v=destroy(state.traffic_v),
         traffic_e=destroy(state.traffic_e),
         traffic_r=destroy(state.traffic_r),
+        beats=(destroy(state.beats) if state.beats is not None else None),
         snap=None)  # the in-flight wave died with the machine
 
 

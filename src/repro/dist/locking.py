@@ -75,12 +75,18 @@ class DistributedLockingEngine(ShardEngineBase):
                 "reverse edge lives with A")
         # p is per machine, like the paper's per-machine pipeline; the
         # per-machine queue can never hold more than n_loc vertices
+        self._req_pipeline_length = int(pipeline_length)
         self.pipeline_length = int(min(pipeline_length, self.layout.n_loc))
         if self.serializable:
             check_rank_range(
                 self.pipeline_length * self.layout.n_machines,
                 "DistributedLockingEngine")
         self._finalize()
+
+    def _clone_kwargs(self) -> dict:
+        return dict(super()._clone_kwargs(),
+                    pipeline_length=self._req_pipeline_length,
+                    serializable=self.serializable)
 
     def _make_step(self):
         exchange, phase_update = self._make_phase_helpers()
@@ -106,7 +112,12 @@ class DistributedLockingEngine(ShardEngineBase):
             tr = state.traffic_r
 
             # -- per-machine pipeline: top-p of the local queue ------------
-            prio_eff = jnp.where(tb["own_mask"], carry["prio"], 0.0)
+            # a stalled machine (DESIGN §3.13) selects nothing, so it ships
+            # no rank rows and can never hold a phantom lock that would
+            # livelock its boundary neighbors
+            live = jnp.logical_not(tb["stall"][0])
+            prio_eff = jnp.where(
+                jnp.logical_and(tb["own_mask"], live), carry["prio"], 0.0)
             selected, top_idx = pipeline_select(prio_eff, k, tol)
             if radius >= 1:
                 # canonical order (owner(v), v): rank = slot * S + machine,

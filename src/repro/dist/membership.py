@@ -1,0 +1,105 @@
+"""Heartbeat failure detection for the sharded engines (DESIGN §3.13).
+
+The paper's fault tolerance (Sec. 4.3) assumes an external oracle notices
+the dead machine; production descendants (ASYMP, PAPERS.md) make detection
+explicit.  Here each machine publishes a **monotone beat counter** through
+the engine state itself: ``DistState.beats[m]`` increments once per
+executed step inside the shard_map body, and a stalled machine — one whose
+``stall`` table flag is set, the model of a hung/partitioned host
+(dist/faults.py) — stops beating.  Because the counter rides the sharded
+state, "machine m is alive" means exactly "machine m's device slice is
+still producing steps", not "a side channel says so".
+
+``Watchdog`` is the host-side monitor: it polls ``state.beats`` between
+steps (the host loop is the natural observation point — it already reads
+``state.prio`` every step) and runs the classic phi-less escalation
+
+    live --k missed beats--> suspect --timeout--> dead
+
+where a "missed beat" is an observation at which the counter did not
+advance.  A suspect that beats again is **reinstated** — the
+false-positive path: no migration, no restart, just a cleared counter
+(tests/test_membership.py).  A machine declared dead stays dead until
+``mark_live`` (after dist/migrate.py rebuilt the mesh, or after an
+operator resumed it).
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+LIVE = "live"
+SUSPECT = "suspect"
+DEAD = "dead"
+
+
+class Watchdog:
+    """Host-side heartbeat monitor over ``DistState.beats``.
+
+    ``observe(beats)`` ingests one reading per machine and returns the
+    membership events it caused, each a ``(kind, machine)`` pair with kind
+    in {"suspect", "dead", "reinstated"}.  ``suspect_after`` consecutive
+    observations without progress raise a suspicion; ``dead_after`` (the
+    timeout, counted in observations) declare death.  The very first
+    observation of a machine only establishes its baseline.
+    """
+
+    def __init__(self, n_machines: int, *, suspect_after: int = 2,
+                 dead_after: int = 5):
+        if not 1 <= suspect_after <= dead_after:
+            raise ValueError(
+                f"need 1 <= suspect_after ({suspect_after}) <= "
+                f"dead_after ({dead_after})")
+        self.n_machines = int(n_machines)
+        self.suspect_after = int(suspect_after)
+        self.dead_after = int(dead_after)
+        self.state: List[str] = [LIVE] * self.n_machines
+        self.missed = np.zeros(self.n_machines, np.int64)
+        self._last: List[Optional[int]] = [None] * self.n_machines
+
+    def observe(self, beats) -> List[Tuple[str, int]]:
+        beats = np.asarray(beats).reshape(-1)
+        if beats.size != self.n_machines:
+            raise ValueError(
+                f"expected {self.n_machines} beat counters, got "
+                f"{beats.size}")
+        events: List[Tuple[str, int]] = []
+        for m in range(self.n_machines):
+            if self.state[m] == DEAD:
+                continue  # dead is sticky until mark_live
+            b = int(beats[m])
+            if self._last[m] is None or b != self._last[m]:
+                if self.state[m] == SUSPECT:
+                    events.append(("reinstated", m))
+                self._last[m] = b
+                self.state[m] = LIVE
+                self.missed[m] = 0
+                continue
+            self.missed[m] += 1
+            if self.missed[m] >= self.dead_after:
+                self.state[m] = DEAD
+                events.append(("dead", m))
+            elif self.missed[m] >= self.suspect_after \
+                    and self.state[m] == LIVE:
+                self.state[m] = SUSPECT
+                events.append(("suspect", m))
+        return events
+
+    def mark_live(self, machine: int) -> None:
+        """Resets a machine to live (after migration replaced it, or an
+        operator resumed it) so the watchdog tracks it afresh."""
+        self.state[machine] = LIVE
+        self.missed[machine] = 0
+        self._last[machine] = None
+
+    # -- queries ------------------------------------------------------------
+    def live(self) -> List[int]:
+        return [m for m in range(self.n_machines) if self.state[m] == LIVE]
+
+    def suspects(self) -> List[int]:
+        return [m for m in range(self.n_machines)
+                if self.state[m] == SUSPECT]
+
+    def dead(self) -> List[int]:
+        return [m for m in range(self.n_machines) if self.state[m] == DEAD]

@@ -1,0 +1,309 @@
+"""Live shard migration: machine leave/join without restarting survivors
+(DESIGN §3.13).
+
+PR-4 recovery is offline: kill → ``restore_engine_state`` → full restart,
+every vertex rescheduled.  This module is the online path.  On a death or
+an explicit leave, the dead machine's **atoms** are re-placed over the
+survivors with ``core.partition.rebalance_placement`` (the same two-phase
+scheme that made elastic restore work — applied incrementally, so atoms on
+surviving machines do not move), a new engine is built over the explicit
+placement (``clone_for_placement``), and state is carried across:
+
+  - survivors' vertex/edge rows and scheduler priorities move *live* —
+    their current values, not a checkpoint;
+  - only the dead machine's rows are rebuilt, from the latest committed
+    Chandy-Lamport cut (``dist.snapshot.load_snapshot``);
+  - exactly the closed scopes of the lost vertices are re-seeded
+    (``core.scheduler.reseed_scopes``) — the contractive-fixed-point
+    argument of DESIGN §3.11: converged survivors outside those scopes
+    keep priority 0 and are **never** restarted, which is the measurable
+    "zero full-engine restarts" property the churn bench asserts.
+
+``migrate_join`` is the reverse: a fresh machine enters, the balancer
+hands it atoms, and every row moves live — nothing is rescheduled at all.
+``shed_atoms`` is the straggler remedy at the placement level: move a slow
+machine's heaviest-backlog atoms to its least-loaded peers (work stealing
+at queue level lives in dist/balance.py).
+
+Streaming engines are refused here: their capacity layout and patch state
+cannot yet be cloned onto a new placement — use the offline
+``stream.recovery.recover_from_journal`` (cut + journal replay), which is
+elastic across any machine count.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core.partition import atom_meta_index, rebalance_placement
+from repro.core.scheduler import reseed_scopes
+from repro.core.snapshot import stitch_rows
+from repro.dist.engine import DistState, ShardEngineBase
+from repro.dist.snapshot import load_snapshot
+
+Pytree = object
+
+
+def _check_migratable(engine: ShardEngineBase) -> None:
+    if getattr(engine, "streaming", False):
+        raise NotImplementedError(
+            "live migration of a streaming engine is not supported: its "
+            "capacity layout/patch state cannot be cloned onto a new "
+            "placement — recover offline via "
+            "stream.recovery.recover_from_journal (cut + journal replay, "
+            "elastic across machine counts)")
+    if engine.atom_of is None:
+        raise ValueError(
+            "engine was built from an explicit machine_of without atoms; "
+            "migration re-places atoms — pass atom_of at construction")
+
+
+def _stitched(engine: ShardEngineBase, state: DistState):
+    """Global-order live views: (vdata, edata, prio [N] np arrays)."""
+    lay = engine.layout
+    st = engine.graph.structure
+    v = stitch_rows(state.vown, lay.own_gid, st.n_vertices)
+    e = stitch_rows(state.edata, lay.erow_gid, st.n_edges)
+    prio = np.zeros(st.n_vertices, np.float32)
+    ok = lay.own_gid >= 0
+    prio[lay.own_gid[ok]] = np.asarray(state.prio)[ok]
+    return v, e, prio
+
+
+def _patch_rows(dst: Pytree, src: Pytree, mask: np.ndarray) -> Pytree:
+    def one(d, s):
+        d = np.asarray(d).copy()
+        d[mask] = np.asarray(s)[mask]
+        return d
+
+    return jax.tree.map(one, dst, src)
+
+
+def _atom_placement_of(engine: ShardEngineBase) -> np.ndarray:
+    """The engine's machine_of_atom, derived from machine_of if the
+    explicit placement was not recorded (vertices of one atom always share
+    a machine, so any representative works)."""
+    if engine.atom_placement is not None:
+        return np.asarray(engine.atom_placement, np.int32)
+    atom_of = np.asarray(engine.atom_of)
+    placement = np.zeros(int(atom_of.max()) + 1, np.int32)
+    placement[atom_of] = engine.layout.machine_of
+    return placement
+
+
+def _carry_stall(old: ShardEngineBase, new: ShardEngineBase,
+                 keep: Sequence[int]) -> None:
+    """Stall flags survive a rebuild: machine old ``keep[i]`` becomes new
+    machine ``i`` (a straggler stays flagged through a shed, say); an out-
+    of-range keep id means "fresh machine", which enters un-stalled."""
+    flags = old.layout.tables["stall"]
+    new.layout.tables["stall"][:] = [
+        bool(flags[m]) if 0 <= m < flags.size else False for m in keep]
+    new.refresh_tables(["stall"])
+
+
+def _rebuild(engine: ShardEngineBase, mesh, placement_new: np.ndarray,
+             vdata: Pytree, edata: Pytree, prio: np.ndarray,
+             keep_machines: Sequence[int]
+             ) -> Tuple[ShardEngineBase, DistState]:
+    graph2 = engine.graph.replace(
+        vertex_data=jax.tree.map(np.asarray, vdata),
+        edge_data=jax.tree.map(np.asarray, edata))
+    atom_of = np.asarray(engine.atom_of, np.int32)
+    new_engine = engine.clone_for_placement(
+        graph2, mesh, placement_new[atom_of], atom_of=atom_of,
+        atom_placement=placement_new)
+    _carry_stall(engine, new_engine, keep_machines)
+    state = new_engine.init(initial_prio=np.asarray(prio, np.float32))
+    return new_engine, state
+
+
+def migrate_leave(
+    engine: ShardEngineBase,
+    state: DistState,
+    dead: int,
+    *,
+    mesh,
+    manager: CheckpointManager,
+) -> Tuple[ShardEngineBase, DistState, Dict]:
+    """Removes machine ``dead`` from the mesh, rebuilding its shard from
+    the latest committed cut while every survivor's state moves live.
+
+    ``mesh`` is the survivor mesh (one machine fewer along the engine's
+    axis); survivors keep their old order, so old machine ``m`` becomes
+    ``m - (m > dead)``.  Returns ``(new_engine, new_state, info)``; info
+    records the lost-vertex count, the cut step used, and — the zero-
+    restart evidence — exactly which survivors were re-seeded
+    (``scope_mask``) and how many of them crossed the tolerance
+    (``survivor_rescheduled``)."""
+    _check_migratable(engine)
+    lay = engine.layout
+    st = engine.graph.structure
+    S = lay.n_machines
+    if not 0 <= dead < S:
+        raise ValueError(f"machine {dead} out of range (S={S})")
+    S_new = int(mesh.shape[engine.axis])
+    if S_new != S - 1:
+        raise ValueError(
+            f"leave: survivor mesh must have {S - 1} machines along "
+            f"{engine.axis!r}, got {S_new}")
+
+    v, e, prio = _stitched(engine, state)
+    lost_v = lay.machine_of == dead
+    lost_e = lost_v[np.asarray(st.receivers)]
+
+    # the dead machine's rows come from the latest committed cut; the cut
+    # is complete by construction (save_snapshot refuses anything less),
+    # so it covers the lost vertices at their committed-cut age
+    step, cut = load_snapshot(manager, engine.graph)
+    v = _patch_rows(v, cut.saved_v, lost_v)
+    e = _patch_rows(e, cut.saved_e, lost_e)
+
+    # survivors must be clean: the stall gate keeps a dead machine's NaNs
+    # from ever shipping, so poison on a survivor row means containment
+    # failed — refuse to launder it into the new mesh
+    for leaf in jax.tree.leaves(v):
+        leaf = np.asarray(leaf)
+        if np.issubdtype(leaf.dtype, np.floating) \
+                and not np.isfinite(leaf[~lost_v]).all():
+            raise RuntimeError(
+                "survivor vertex rows contain non-finite values: the dead "
+                "machine's poison escaped containment")
+
+    # reschedule exactly the closed scopes of the lost vertices: their
+    # cut-age data is stale relative to live neighbors, so they and their
+    # neighbors re-run; converged survivors elsewhere stay converged
+    prio[lost_v] = 0.0  # dead block's prio is poison, not a schedule
+    prio = np.nan_to_num(prio, nan=0.0, posinf=0.0, neginf=0.0)
+    seed = np.asarray(
+        engine.program.initial_priority(st.n_vertices), np.float32)
+    before = prio.copy()
+    prio_j, scope = reseed_scopes(
+        prio, lost_v, np.asarray(st.senders), np.asarray(st.receivers),
+        np.ones(st.n_edges, bool), st.n_vertices, seed)
+    prio_new = np.asarray(prio_j, np.float32)
+    scope_mask = np.asarray(scope, bool)
+
+    placement = rebalance_placement(
+        atom_meta_index(st, engine.atom_of), _atom_placement_of(engine),
+        S, remove=(dead,))
+    placement = placement - (placement > dead)  # dense survivor ids
+    keep = [m for m in range(S) if m != dead]
+    new_engine, new_state = _rebuild(
+        engine, mesh, placement.astype(np.int32), v, e, prio_new, keep)
+
+    tol = engine.tolerance
+    resched = (prio_new > tol) & (before <= tol) & ~lost_v
+    return new_engine, new_state, {
+        "dead_machine": int(dead),
+        "restored_step": int(step),
+        "lost_vertices": int(lost_v.sum()),
+        "scope_mask": scope_mask,
+        "survivor_rescheduled": int(resched.sum()),
+        "survivor_rescheduled_frac": float(
+            resched.sum() / max(1, (~lost_v).sum())),
+        "updates_before": int(np.nansum(np.asarray(
+            state.update_count, np.float64))),
+    }
+
+
+def migrate_join(
+    engine: ShardEngineBase,
+    state: DistState,
+    *,
+    mesh,
+) -> Tuple[ShardEngineBase, DistState, Dict]:
+    """Adds one machine (the new last id on ``mesh``): the balancer hands
+    it atoms from the most-loaded survivors and every row moves live —
+    pure handoff, zero rescheduling, so a converged mesh stays converged
+    through the join (tests/test_migrate.py asserts this)."""
+    _check_migratable(engine)
+    S = engine.layout.n_machines
+    S_new = int(mesh.shape[engine.axis])
+    if S_new != S + 1:
+        raise ValueError(
+            f"join: mesh must have {S + 1} machines along "
+            f"{engine.axis!r}, got {S_new}")
+
+    v, e, prio = _stitched(engine, state)
+    old_placement = _atom_placement_of(engine)
+    placement = rebalance_placement(
+        atom_meta_index(engine.graph.structure, engine.atom_of),
+        old_placement, S_new)
+    keep = list(range(S)) + [S]  # id S is fresh: enters un-stalled
+    new_engine, new_state = _rebuild(
+        engine, mesh, placement.astype(np.int32), v, e, prio, keep)
+    moved = placement != old_placement
+    return new_engine, new_state, {
+        "joined_machine": S,
+        "moved_atoms": int(moved.sum()),
+        "moved_vertices": int(np.isin(
+            np.asarray(engine.atom_of), np.nonzero(moved)[0]).sum()),
+        "survivor_rescheduled": 0,  # by construction: prio is carried
+        "updates_before": int(np.nansum(np.asarray(
+            state.update_count, np.float64))),
+    }
+
+
+def shed_atoms(
+    engine: ShardEngineBase,
+    state: DistState,
+    machine: int,
+    *,
+    frac: float = 0.5,
+    mesh=None,
+) -> Tuple[ShardEngineBase, DistState, Dict]:
+    """Placement-level straggler mitigation: moves the top-backlog atoms
+    of ``machine`` (by pending scheduler priority mass, until ``frac`` of
+    its backlog has moved) onto its least-loaded peers.  Live handoff like
+    ``migrate_join`` — no rescheduling; the shed atoms' pending work is
+    simply executed elsewhere from now on."""
+    _check_migratable(engine)
+    mesh = mesh if mesh is not None else engine.mesh
+    S = engine.layout.n_machines
+    if not 0 <= machine < S:
+        raise ValueError(f"machine {machine} out of range (S={S})")
+
+    v, e, prio = _stitched(engine, state)
+    atom_of = np.asarray(engine.atom_of)
+    k = int(atom_of.max()) + 1
+    placement = _atom_placement_of(engine).copy()
+    backlog = np.zeros(k, np.float64)
+    # backlog is *scheduled* mass: sub-tolerance residuals are not work
+    p = np.nan_to_num(np.asarray(prio, np.float64), nan=0.0)
+    np.add.at(backlog, atom_of, np.where(p > engine.tolerance, p, 0.0))
+    mine = np.nonzero(placement == machine)[0]
+    total = float(backlog[mine].sum())
+    if total <= 0.0:
+        return engine, state, {"shed_atoms": 0, "shed_vertices": 0,
+                               "shed_backlog": 0.0}
+
+    index = atom_meta_index(engine.graph.structure, engine.atom_of)
+    w = (index.atom_nv + index.atom_ne).astype(np.int64)
+    load = np.zeros(S, np.int64)
+    np.add.at(load, placement, w)
+    shed, moved_backlog = [], 0.0
+    for a in sorted(mine.tolist(), key=lambda a: -backlog[a]):
+        if moved_backlog >= frac * total or backlog[a] <= 0.0:
+            break
+        peers = [m for m in range(S) if m != machine]
+        dst = min(peers, key=lambda m: load[m])
+        placement[a] = dst
+        load[machine] -= w[a]
+        load[dst] += w[a]
+        moved_backlog += float(backlog[a])
+        shed.append(a)
+
+    new_engine, new_state = _rebuild(
+        engine, mesh, placement.astype(np.int32), v, e, prio,
+        list(range(S)))
+    return new_engine, new_state, {
+        "shed_atoms": len(shed),
+        "shed_vertices": int(np.isin(atom_of, shed).sum()),
+        "shed_backlog": moved_backlog,
+        "updates_before": int(np.nansum(np.asarray(
+            state.update_count, np.float64))),
+    }

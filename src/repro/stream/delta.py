@@ -25,6 +25,7 @@ import dataclasses
 import os
 import re
 import tempfile
+import warnings
 from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
@@ -236,18 +237,46 @@ class DeltaJournal:
     Offsets are dense and monotone: entry ``k`` lives in
     ``delta_<k:010d>.npz`` and a cut "anchored at offset K" reflects
     exactly the journal prefix ``[0, K)``.  Appends are atomic (tmp file +
-    rename), so a crash mid-write never leaves a torn entry — the replay
-    path sees a clean prefix.
+    rename), so our own crash mid-write never leaves a torn entry — but
+    the *final* entry can still arrive torn from outside the append path
+    (power loss between rename and data sync, a truncated copy/restore of
+    the journal directory), so ``scan`` validates it on open: a torn tail
+    is warned about and truncated, because an entry whose bytes never hit
+    the disk was never a committed prefix anyone could have anchored a cut
+    past.  A *gap* (a missing or unreadable middle entry) stays a hard
+    error — atomic in-order appends cannot produce one, so it means real
+    corruption that truncation cannot paper over.
     """
 
     def __init__(self, directory: str):
         self.directory = directory
         os.makedirs(directory, exist_ok=True)
+        self._next = self.scan()
+
+    def scan(self) -> int:
+        """Validates the on-disk log and returns its committed length.
+
+        Dense offsets are required; the final entry is additionally opened
+        and decoded.  If it is torn, warn, unlink it, and retry on the new
+        final entry (a double-crash can tear two tails in a row)."""
         offs = sorted(self._offsets())
         if offs != list(range(len(offs))):
             raise ValueError(
-                f"journal at {directory} has a gap: offsets {offs}")
-        self._next = len(offs)
+                f"journal at {self.directory} has a gap: offsets {offs}")
+        while offs:
+            last = offs[-1]
+            try:
+                with np.load(self._path(last)) as z:
+                    _decode_batch(z)
+                break
+            except Exception as exc:
+                warnings.warn(
+                    f"journal at {self.directory}: torn final entry "
+                    f"delta_{last:010d}.npz ({exc!r}); truncating the log "
+                    f"to {last} entries", RuntimeWarning, stacklevel=2)
+                os.unlink(self._path(last))
+                offs.pop()
+        return len(offs)
 
     def _offsets(self) -> List[int]:
         out = []

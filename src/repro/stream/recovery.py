@@ -159,8 +159,11 @@ def run_stream_kill_restore(
                          f"{len(batches)})")
     engine, state = build()
     attach_journal(engine, journal)
+    regrown = []
     for i, batch in enumerate(batches[: kill_after + 1]):
-        engine, state, _ = apply_delta_growing(engine, state, batch)
+        engine, state, regrew = apply_delta_growing(engine, state, batch)
+        if regrew:
+            regrown.append(i)
         state, _ = engine.run(state, max_steps=max_steps)
         if i == snapshot_after:
             state = _drain_snapshot(engine, state, manager, initiators,
@@ -176,5 +179,9 @@ def run_stream_kill_restore(
         engine, state, _ = apply_delta_growing(engine, state, batch)
         state, _ = engine.run(state, max_steps=max_steps)
     state, _ = engine.run(state, max_steps=max_steps)
-    info.update(killed_machine=int(machine), kill_after_batch=kill_after)
+    # which live batches forced a regrow — a regrow after snapshot_after
+    # means the capacity layout changed between the cut and the crash, the
+    # hard case for replay (it must re-derive the same growth)
+    info.update(killed_machine=int(machine), kill_after_batch=kill_after,
+                regrown_live_batches=regrown)
     return engine, state, info

@@ -1,0 +1,167 @@
+"""Work-stealing straggler mitigation (dist/balance.py, DESIGN §3.13).
+
+The correctness contract: WorkStealingScheduler is MultiQueueScheduler
+with queue membership lifted into scheduler state — so before any steal
+its selection must be *bit-identical* to the static multi-queue, and
+after a steal the rank scheme ``slot * S + machine`` stays globally
+unique (queues still partition the vertices), so arbitration safety is
+untouched and the engine converges to the same fixed point while the
+stolen vertices actually execute (``stolen_updates > 0`` — the
+acceptance counter).
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.apps.pagerank import PageRankProgram, make_pagerank_graph
+from repro.core import Consistency, Engine, MultiQueueScheduler
+from repro.core.graph import GraphStructure
+from repro.dist.balance import (StragglerMonitor, WorkStealingScheduler,
+                                steal_backlog, stolen_updates)
+from repro.graphs.generators import power_law_graph
+
+TOL = 1e-3
+
+
+def random_graph(n, avg_deg, seed):
+    st_ = power_law_graph(n, avg_degree=avg_deg, seed=seed)
+    if st_.n_edges == 0:
+        st_, _ = GraphStructure.undirected([0], [1], n)
+    return st_
+
+
+def program_with(model, n):
+    class P(PageRankProgram):
+        consistency = model
+    return P(0.15, n)
+
+
+def random_prio(n, seed):
+    rng = np.random.default_rng(seed)
+    prio = rng.uniform(0, 1, n).astype(np.float32)
+    prio[rng.uniform(0, 1, n) < 0.3] = 0.0
+    return prio
+
+
+# ---------------------------------------------------------------------------
+# pre-steal equivalence: same queues => same winners, bitwise
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("model", [Consistency.VERTEX, Consistency.EDGE,
+                                   Consistency.FULL])
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 4])
+def test_matches_multi_queue_before_any_steal(model, seed):
+    st_ = random_graph(50, 4, seed)
+    rng = np.random.default_rng(seed + 1)
+    machine_of = rng.integers(0, 4, st_.n_vertices)
+    prog = program_with(model, st_.n_vertices)
+    static = MultiQueueScheduler(prog, st_, TOL, machine_of,
+                                 pipeline_length=4)
+    dynamic = WorkStealingScheduler(prog, st_, TOL, machine_of,
+                                    pipeline_length=4)
+    prio = jnp.asarray(random_prio(st_.n_vertices, seed))
+    want = np.asarray(static.select((), prio)[0])
+    got = np.asarray(dynamic.select(dynamic.init(prio), prio)[0])
+    np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# steal_backlog mechanics
+# ---------------------------------------------------------------------------
+
+def test_steal_backlog_moves_top_p_round_robin():
+    st_ = random_graph(40, 4, 7)
+    machine_of = np.arange(st_.n_vertices) % 4
+    prog = program_with(Consistency.VERTEX, st_.n_vertices)
+    ws = WorkStealingScheduler(prog, st_, TOL, machine_of,
+                               pipeline_length=4)
+    prio = random_prio(st_.n_vertices, 7)
+    sched = ws.init(jnp.asarray(prio))
+
+    backlog = np.nonzero((machine_of == 2) & (prio > TOL))[0]
+    backlog = backlog[np.argsort(-prio[backlog], kind="stable")]
+    sched2, moved = steal_backlog(ws, sched, prio, 2, top_p=3)
+    take = backlog[:3]
+    assert moved == min(3, backlog.size)
+    q = np.asarray(sched2["queue_of"])
+    assert (q[take] != 2).all()
+    # round-robin over the peers, and everyone else stays home
+    assert list(q[take]) == [[0, 1, 3][i % 3] for i in range(take.size)]
+    untouched = np.setdiff1d(np.arange(st_.n_vertices), take)
+    np.testing.assert_array_equal(q[untouched], machine_of[untouched])
+    assert np.asarray(sched2["stolen"])[take].all()
+    assert moved == 0 or not np.asarray(sched2["stolen"])[untouched].any()
+
+    # `to=` restricts the receivers
+    sched3, _ = steal_backlog(ws, sched, prio, 2, top_p=3, to=[1])
+    assert (np.asarray(sched3["queue_of"])[take] == 1).all()
+
+
+def test_steal_backlog_noops_without_backlog_or_peers():
+    st_ = random_graph(20, 3, 9)
+    machine_of = np.zeros(st_.n_vertices, np.int32)
+    prog = program_with(Consistency.VERTEX, st_.n_vertices)
+    ws = WorkStealingScheduler(prog, st_, TOL, machine_of,
+                               pipeline_length=4)
+    prio = random_prio(st_.n_vertices, 9)
+    sched = ws.init(jnp.asarray(prio))
+    # single machine: no peers to steal to
+    _, moved = steal_backlog(ws, sched, prio, 0)
+    assert moved == 0
+    # converged victim: nothing scheduled to steal
+    _, moved = steal_backlog(ws, sched, np.zeros_like(prio), 0, to=[0])
+    assert moved == 0
+
+
+# ---------------------------------------------------------------------------
+# end to end: stolen vertices execute and the fixed point is preserved
+# ---------------------------------------------------------------------------
+
+def test_engine_converges_through_steal_with_stolen_updates():
+    st_ = random_graph(60, 4, 3)
+    g = make_pagerank_graph(st_)
+    prog = PageRankProgram(0.15, st_.n_vertices)
+    ref_eng = Engine(prog, g, tolerance=1e-7)
+    ref_state, _ = ref_eng.run(ref_eng.init(g), max_steps=3000)
+    ref = np.asarray(ref_state.graph.vertex_data["rank"])
+
+    machine_of = np.arange(st_.n_vertices) % 4
+    ws = WorkStealingScheduler(prog, st_, 1e-7, machine_of,
+                               pipeline_length=8)
+    eng = Engine(prog, g, tolerance=1e-7, scheduler=ws)
+    state = eng.init(g)
+    for _ in range(3):
+        state = eng.step(state)
+    # machine 0 "straggles": move most of its backlog to its peers
+    sched, moved = steal_backlog(ws, state.sched, np.asarray(state.prio),
+                                 0, frac=0.8)
+    assert moved > 0
+    state = dataclasses.replace(state, sched=sched)
+    state, _ = eng.run(state, max_steps=3000)
+    out = np.asarray(state.graph.vertex_data["rank"])
+    assert np.abs(out - ref).max() <= 1e-5
+    # the acceptance counter: stolen vertices actually won arbitration
+    assert stolen_updates(state.sched) > 0
+
+
+# ---------------------------------------------------------------------------
+# the skew detector
+# ---------------------------------------------------------------------------
+
+def test_straggler_monitor_flags_progress_skew():
+    mon = StragglerMonitor(4, skew=4)
+    assert mon.laggards([10, 10, 10, 10]) == []
+    assert mon.laggards([10, 9, 7, 10]) == []  # behind, but under the skew
+    assert mon.laggards([10, 6, 3, 10]) == [1, 2]
+    with pytest.raises(ValueError, match="beat counters"):
+        mon.laggards([1, 2, 3])
+
+
+def test_work_stealing_validates_machine_map():
+    st_ = random_graph(12, 3, 1)
+    prog = program_with(Consistency.VERTEX, st_.n_vertices)
+    with pytest.raises(ValueError, match="machine_of"):
+        WorkStealingScheduler(prog, st_, TOL, np.zeros(5, np.int32),
+                              pipeline_length=2)

@@ -1,0 +1,200 @@
+"""Heartbeat failure detection (dist/membership.py, dist/faults.py stall
+modes; DESIGN §3.13; ISSUE 7 satellite 3).
+
+Two layers.  ``TestWatchdog`` covers the host-side escalation machine on
+synthetic beat streams: baseline, live→suspect→dead, reinstatement of a
+false positive, sticky death.  The engine-level tests then close the
+loop through the real sharded state: ``DistState.beats`` advances once
+per executed step per machine, a silently stalled machine stops beating
+and the watchdog notices *without any NaN reaching survivor rows* (the
+acceptance criterion — detection by heartbeat, not by poison), and the
+false-positive path (suspect → resume → reinstated) converges to the
+uninterrupted fixed point with zero migration.  ``machine_data_lost``
+gets its direct tests here too: it is the loud-evidence predicate the
+chaos harness asserts, so its own truth table deserves coverage.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.apps.pagerank import PageRankProgram, make_pagerank_graph
+from repro.dist.engine import DistributedEngine
+from repro.dist.faults import (kill_machine, machine_data_lost,
+                               resume_machine, stall_machine,
+                               stalled_machines)
+from repro.dist.membership import DEAD, LIVE, SUSPECT, Watchdog
+from repro.graphs.generators import connected_power_law_graph as \
+    connected_graph
+
+needs_mesh = pytest.mark.skipif(
+    jax.device_count() < 4, reason="needs 4 forced host devices "
+    "(XLA_FLAGS=--xla_force_host_platform_device_count=4)")
+
+
+# ---------------------------------------------------------------------------
+# the escalation machine, on synthetic beats
+# ---------------------------------------------------------------------------
+
+class TestWatchdog:
+    def test_escalates_live_suspect_dead(self):
+        wd = Watchdog(3, suspect_after=2, dead_after=4)
+        assert wd.observe([0, 0, 0]) == []  # baseline only
+        # machine 1 freezes; 0 and 2 keep beating
+        b = np.array([0, 0, 0])
+        events = []
+        for _ in range(5):
+            b += [1, 0, 1]
+            events += wd.observe(b)
+        assert events == [("suspect", 1), ("dead", 1)]
+        assert wd.state == [LIVE, DEAD, LIVE]
+        assert wd.live() == [0, 2] and wd.dead() == [1]
+
+    def test_suspect_reinstated_on_next_beat(self):
+        wd = Watchdog(2, suspect_after=2, dead_after=10)
+        wd.observe([0, 0])
+        assert wd.observe([1, 0]) == []
+        assert wd.observe([2, 0]) == [("suspect", 1)]
+        assert wd.suspects() == [1]
+        # it was merely slow: one fresh beat clears the suspicion
+        assert wd.observe([3, 1]) == [("reinstated", 1)]
+        assert wd.state == [LIVE, LIVE]
+        assert int(wd.missed[1]) == 0
+
+    def test_dead_is_sticky_until_mark_live(self):
+        wd = Watchdog(2, suspect_after=1, dead_after=2)
+        wd.observe([0, 0])
+        wd.observe([1, 0])
+        assert ("dead", 1) in wd.observe([2, 0])
+        # beats resuming do NOT resurrect a declared-dead machine
+        assert wd.observe([3, 9]) == []
+        assert wd.state[1] == DEAD
+        wd.mark_live(1)
+        assert wd.observe([4, 10]) == []  # fresh baseline
+        assert wd.state[1] == LIVE
+
+    def test_validates_thresholds_and_width(self):
+        with pytest.raises(ValueError, match="suspect_after"):
+            Watchdog(2, suspect_after=3, dead_after=2)
+        with pytest.raises(ValueError, match="suspect_after"):
+            Watchdog(2, suspect_after=0)
+        wd = Watchdog(4)
+        with pytest.raises(ValueError, match="beat counters"):
+            wd.observe([1, 2, 3])
+
+
+# ---------------------------------------------------------------------------
+# through the sharded engine state
+# ---------------------------------------------------------------------------
+
+def _engine(mesh, n=60, seed=3, tol=1e-9):
+    g = make_pagerank_graph(connected_graph(n, seed=seed))
+    return DistributedEngine(PageRankProgram(0.15, n), g, mesh,
+                             tolerance=tol), g
+
+
+@needs_mesh
+class TestHeartbeatEngine:
+    def test_beats_advance_per_step_and_freeze_on_stall(self, cpu_mesh):
+        eng, _ = _engine(cpu_mesh)
+        state = eng.init()
+        np.testing.assert_array_equal(np.asarray(state.beats), [0] * 4)
+        state = eng.step(eng.step(state))
+        np.testing.assert_array_equal(np.asarray(state.beats), [2] * 4)
+        stall_machine(eng, 2)
+        assert list(stalled_machines(eng)) == [2]
+        state = eng.step(eng.step(state))
+        np.testing.assert_array_equal(np.asarray(state.beats),
+                                      [4, 4, 2, 4])
+        resume_machine(eng, 2)
+        assert list(stalled_machines(eng)) == []
+        state = eng.step(state)
+        np.testing.assert_array_equal(np.asarray(state.beats),
+                                      [5, 5, 3, 5])
+
+    def test_watchdog_detects_dead_machine_without_nan_spread(self,
+                                                              cpu_mesh):
+        """The acceptance scenario: a machine dies silently (data poisoned
+        AND it stops beating).  Survivors keep stepping, the watchdog
+        declares it dead from the frozen counter alone, and no NaN ever
+        reaches a survivor row — detection by heartbeat, not by poison."""
+        eng, _ = _engine(cpu_mesh)
+        state = eng.step(eng.init())
+        wd = Watchdog(4, suspect_after=2, dead_after=4)
+        wd.observe(state.beats)
+        state = kill_machine(eng, state, 1, mode="dead")
+        assert machine_data_lost(eng, state, 1)
+        events = []
+        for _ in range(6):
+            state = eng.step(state)
+            events += wd.observe(state.beats)
+        assert ("suspect", 1) in events and ("dead", 1) in events
+        lost = eng.layout.machine_of == 1
+        for leaf in jax.tree.leaves(eng.vertex_data(state)):
+            leaf = np.asarray(leaf)
+            if np.issubdtype(leaf.dtype, np.floating):
+                assert np.isfinite(leaf[~lost]).all(), \
+                    "poison escaped the dead machine"
+
+    def test_false_positive_suspect_reinstated_without_migration(
+            self, cpu_mesh):
+        """Satellite 3: a merely-slow machine is suspected, resumes, and is
+        reinstated in place — no migration, no restart — and the engine
+        still reaches the uninterrupted fixed point."""
+        eng, g = _engine(cpu_mesh)
+        ref_eng, _ = _engine(cpu_mesh)
+        rs, _ = ref_eng.run(ref_eng.init(), max_steps=3000)
+        ref = np.asarray(ref_eng.vertex_data(rs)["rank"])
+
+        state = eng.step(eng.init())
+        wd = Watchdog(4, suspect_after=2, dead_after=50)
+        wd.observe(state.beats)
+        stall_machine(eng, 3)
+        events = []
+        while ("suspect", 3) not in events:
+            state = eng.step(state)
+            events += wd.observe(state.beats)
+        assert wd.suspects() == [3]
+        resume_machine(eng, 3)
+        state = eng.step(state)
+        assert ("reinstated", 3) in wd.observe(state.beats)
+        assert wd.state == [LIVE] * 4
+        # same engine object, same placement: nothing migrated
+        state, _ = eng.run(state, max_steps=3000)
+        out = np.asarray(eng.vertex_data(state)["rank"])
+        assert np.abs(out - ref).max() <= 1e-5
+
+
+@needs_mesh
+class TestMachineDataLost:
+    def test_true_only_for_the_killed_machine(self, cpu_mesh):
+        eng, _ = _engine(cpu_mesh)
+        state = eng.step(eng.init())
+        assert not machine_data_lost(eng, state, 2)
+        state = kill_machine(eng, state, 2)  # default mode="kill"
+        assert machine_data_lost(eng, state, 2)
+        for m in (0, 1, 3):
+            assert not machine_data_lost(eng, state, m)
+        # legacy mode poisons but does NOT stall: the machine keeps running
+        assert list(stalled_machines(eng)) == []
+
+    def test_stall_mode_keeps_data_intact(self, cpu_mesh):
+        eng, _ = _engine(cpu_mesh)
+        state = eng.step(eng.init())
+        before = np.asarray(eng.vertex_data(state)["rank"])
+        state2 = kill_machine(eng, state, 0, mode="stall")
+        assert not machine_data_lost(eng, state2, 0)
+        np.testing.assert_array_equal(
+            np.asarray(eng.vertex_data(state2)["rank"]), before)
+        assert list(stalled_machines(eng)) == [0]
+        resume_machine(eng, 0)
+
+    def test_rejects_bad_mode_and_machine(self, cpu_mesh):
+        eng, _ = _engine(cpu_mesh)
+        state = eng.init()
+        with pytest.raises(ValueError, match="unknown kill mode"):
+            kill_machine(eng, state, 0, mode="maim")
+        with pytest.raises(ValueError, match="out of range"):
+            kill_machine(eng, state, 7)
+        with pytest.raises(ValueError, match="out of range"):
+            stall_machine(eng, -1)

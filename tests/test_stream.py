@@ -554,6 +554,35 @@ class TestDeltaJournal:
         with pytest.raises(ValueError, match="gap"):
             DeltaJournal(str(tmp_path))
 
+    def test_torn_final_entry_truncated_with_warning(self, tmp_path):
+        """ISSUE 7 satellite 2: a torn *tail* (truncated bytes — power
+        loss after rename, a bad copy) is warned about and truncated on
+        reopen; the surviving prefix stays fully readable and appendable."""
+        import os
+        j = DeltaJournal(str(tmp_path))
+        for b in self._batches() + [DeltaBatch([AddVertex(vid=9)])]:
+            j.append(b)
+        last = os.path.join(str(tmp_path), "delta_0000000002.npz")
+        with open(last, "r+b") as f:
+            f.truncate(os.path.getsize(last) // 2)
+        with pytest.warns(RuntimeWarning, match="torn final entry"):
+            j2 = DeltaJournal(str(tmp_path))
+        assert j2.next_offset == 2
+        assert not os.path.exists(last)  # the torn bytes are gone
+        # the committed prefix is intact and the log accepts new appends
+        assert [k for k, _ in j2.read_since(0)] == [0, 1]
+        assert j2.append(DeltaBatch([AddVertex(vid=11)])) == 2
+        assert j2.read(2).commands[0].vid == 11
+        # double-crash: two torn tails in a row truncate twice
+        for off in (1, 2):
+            p = os.path.join(str(tmp_path), f"delta_000000000{off}.npz")
+            with open(p, "r+b") as f:
+                f.truncate(4)
+        with pytest.warns(RuntimeWarning, match="torn final entry"):
+            j3 = DeltaJournal(str(tmp_path))
+        assert j3.next_offset == 1
+        assert [k for k, _ in j3.read_since(0)] == [0]
+
     def test_journal_records_committed_batches_only(self, tmp_path):
         """attach_journal + apply_delta: committed batches append under
         monotone offsets; a batch that fails capacity is not recorded."""

@@ -18,8 +18,9 @@ from repro.checkpoint.manager import CheckpointManager
 from repro.core.graph import GraphStructure
 from repro.graphs.generators import power_law_graph
 from repro.stream import (DeltaJournal, SlackConfig, apply_delta_growing,
-                          lbp_churn, make_dist_engine, pagerank_churn,
-                          readback, run_stream_kill_restore)
+                          lbp_churn, make_dist_engine, pagerank_arrivals,
+                          pagerank_churn, readback,
+                          run_stream_kill_restore)
 
 pytestmark = pytest.mark.skipif(
     jax.device_count() < 4, reason="needs 4 forced host devices "
@@ -95,3 +96,49 @@ class TestCrashEqualsUninterrupted:
         assert info["killed_machine"] == 2
         assert journal.next_offset == len(batches)
         assert np.abs(out[alive] - ref[alive]).max() <= 1e-5
+
+    def test_regrow_between_cut_and_crash(self, tmp_path):
+        """ISSUE 7 satellite 1: a batch after the cut exhausts the
+        (deliberately tiny) slack, so the live run regrows its capacity
+        layout *between the cut and the crash*.  Recovery replays the
+        journal suffix with the same growth escalation, so it must regrow
+        at the same batch and still match the uninterrupted run."""
+        st_ = _connected_power_law(90, 4, seed=3)
+        prefix_g, batches, _ = pagerank_arrivals(
+            st_, prefix_frac=0.8, n_batches=3, seed=1)
+        prog = PageRankProgram(0.15, st_.n_vertices)
+        tiny = SlackConfig(edge_frac=0.0, edge_min=1, vertex_min=1,
+                           ghost_slack=1, eghost_slack=1)
+        mesh = _mesh(4)
+
+        def build():
+            return make_dist_engine(prog, prefix_g, mesh, tolerance=1e-7,
+                                    slack=tiny)
+
+        # uninterrupted reference under the same tiny slack + growth path
+        eng, state = build()
+        state, _ = eng.run(state, max_steps=2000)
+        regrew_ref = []
+        for i, b in enumerate(batches):
+            eng, state, rg = apply_delta_growing(eng, state, b)
+            if rg:
+                regrew_ref.append(i)
+            state, _ = eng.run(state, max_steps=2000)
+        ref = np.asarray(readback(eng, state).vertex_data["rank"])
+        assert any(i > 0 for i in regrew_ref), \
+            "tiny slack was expected to force a regrow after batch 0"
+
+        journal = DeltaJournal(str(tmp_path / "journal"))
+        manager = CheckpointManager(str(tmp_path / "ckpt"),
+                                    async_writes=False)
+        eng2, state2, info = run_stream_kill_restore(
+            build, journal, manager, batches,
+            snapshot_after=0, kill_after=2, machine=1)
+        out = np.asarray(readback(eng2, state2).vertex_data["rank"])
+
+        # the regression: capacity changed between cut (after batch 0) and
+        # crash (after batch 2), and recovery still lands on the reference
+        assert any(i > info["journal_offset"] - 1
+                   for i in info["regrown_live_batches"]), \
+            f"no regrow between cut and crash: {info}"
+        assert np.abs(out - ref).max() <= 1e-5
