@@ -23,6 +23,7 @@ from benchmarks import pipeline_bench
 from benchmarks import roofline
 from benchmarks import snapshot_bench
 from benchmarks import stream_bench
+from benchmarks import wire_bench
 
 HARNESSES = {
     "fig1a": pf.fig1a_async_vs_sync_convergence,
@@ -39,6 +40,7 @@ HARNESSES = {
     "roofline": roofline.engine_roofline,
     "snapshot": snapshot_bench.snapshot_overhead,
     "stream": stream_bench.stream_reconvergence,
+    "wire": wire_bench.wire_roundtwo,
 }
 
 

@@ -1,0 +1,259 @@
+"""Wire & kernel round 2: quantized + top-k ghost shipping, fused scatter.
+
+Two claims, each self-checked (DESIGN.md §3.14):
+
+**Wire.**  On the 4-machine mesh, int8 delta shipping with error feedback
+plus top-k residual selection cuts the *bytes* on the wire by ≥ 4× against
+the PR-old f32 changed-only protocol, while the fixed point stays within
+1e-5 of the f32 run — for PageRank AND LBP.  The ablation rides along:
+absolute int8 shipping *without* error feedback (replace-merge, no
+mirrors) stalls at a quantization-limited fixed point, which is why the
+protocol carries mirrors at all.
+
+**Kernel.**  The fused scatter/reschedule phase (kernels/gas/scatter.py)
+produces the same priorities as the dense
+``where(active,0,prio) + segment_sum`` path (≤ 1e-5) across every engine
+that reschedules neighbors — local sweep, chromatic, both distributed
+engines, and a streaming-delta scenario — and an analytic roofline model
+of the phase (both paths are memory-bound) predicts the fused direction:
+fewer HBM bytes than the dense scatter, because the [E] float gather temp
+and the dense [N] scatter intermediate are gone and inactive edge blocks
+are skipped.
+
+Operating points are deliberately inside the staleness contract: wire_tol
+bounds the undelivered residual per cached row, so the quantized fixed
+point can differ from f32's by O(wire_tol · degree) — the configs below
+keep that well under the 1e-5 verdict with margin.  LBP uses a weakly
+coupled MRF (smoothing 0.5): under strong Potts coupling loopy BP has
+multiple fixed points and *any* reordering (including a fault or a
+different machine count) can hop basins, which would measure the model,
+not the wire.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+MAX_STEPS = 2000
+
+
+def _mesh(n):
+    devs = np.asarray(jax.devices()[:n]).reshape(n, 1)
+    return jax.sharding.Mesh(devs, ("data", "model"))
+
+
+def _cases():
+    from repro.apps.lbp import LoopyBPProgram, make_mrf_graph
+    from repro.apps.pagerank import PageRankProgram, make_pagerank_graph
+    from repro.graphs.generators import connected_power_law_graph
+
+    st = connected_power_law_graph(80, seed=3)
+    yield ("pagerank", make_pagerank_graph(st), PageRankProgram(0.15, 80),
+           "rank", 1e-9, 7e-7)
+    st = connected_power_law_graph(60, seed=3)
+    yield ("lbp", make_mrf_graph(st, n_states=3, seed=1),
+           LoopyBPProgram(3, smoothing=0.5), "belief", 3e-6, 3e-7)
+
+
+def _run_dist(prog, g, tol, wire, use_fused=None):
+    from repro.dist.engine import DistributedEngine
+
+    eng = DistributedEngine(prog, g, _mesh(4), tolerance=tol, method="bfs",
+                            wire=wire, use_fused=use_fused)
+    state, trace = eng.run(eng.init(), max_steps=MAX_STEPS)
+    return eng, state, trace
+
+
+def _total_bytes(eng, state):
+    return eng.ghost_bytes_sent(state) + eng.ghost_edge_bytes_sent(state)
+
+
+def _wire_case(name, g, prog, key, tol, wtol) -> Dict:
+    from repro.dist.wire import WireConfig
+
+    t0 = time.time()
+    e0, s0, tr0 = _run_dist(prog, g, tol, None)
+    ref = np.asarray(e0.vertex_data(s0)[key])
+    base_bytes = _total_bytes(e0, s0)
+    rec: Dict = {
+        "case": name, "tolerance": tol, "wire_tol": wtol,
+        "f32_ghost_rows": e0.ghost_rows_sent(s0),
+        "f32_edge_rows": e0.ghost_edge_rows_sent(s0),
+        "f32_ghost_bytes": e0.ghost_bytes_sent(s0),
+        "f32_edge_bytes": e0.ghost_edge_bytes_sent(s0),
+        "f32_steps": len(tr0),
+    }
+
+    def quant(tag, cfg):
+        e1, s1, tr1 = _run_dist(prog, g, tol, cfg)
+        out = np.asarray(e1.vertex_data(s1)[key])
+        b = _total_bytes(e1, s1)
+        rec[f"{tag}_bytes"] = b
+        rec[f"{tag}_rows"] = (e1.ghost_rows_sent(s1)
+                              + e1.ghost_edge_rows_sent(s1))
+        rec[f"{tag}_steps"] = len(tr1)
+        rec[f"{tag}_ratio"] = round(base_bytes / max(b, 1), 2)
+        rec[f"{tag}_err"] = float(np.abs(out - ref).max())
+        rec[f"{tag}_backlog"] = e1._wire_backlog(s1)
+
+    quant("int8", WireConfig(codec="int8", top_k=6, wire_tol=wtol))
+    quant("bf16", WireConfig(codec="bf16", top_k=6, wire_tol=wtol))
+    # the ablation: absolute int8, no mirrors, no error feedback — the
+    # quantization error never drains, so the fixed point is wrong at the
+    # codec's resolution (orders of magnitude above the EF error)
+    quant("abs8", WireConfig(codec="int8", error_feedback=False))
+
+    rec["beats_4x"] = bool(rec["int8_ratio"] >= 4.0)
+    rec["fixed_point_ok"] = bool(rec["int8_err"] <= 1e-5
+                                 and rec["bf16_err"] <= 1e-5)
+    rec["backlog_drained"] = (rec["int8_backlog"] == 0
+                              and rec["bf16_backlog"] == 0)
+    rec["ef_needed"] = bool(rec["abs8_err"] > 10 * max(rec["int8_err"],
+                                                       1e-12))
+    rec["wall_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def _scatter_parity() -> Dict:
+    """Fused scatter/reschedule ≡ dense reschedule across every engine
+    shape that schedules neighbors, plus one streaming-delta scenario."""
+    from repro.apps.pagerank import PageRankProgram, make_pagerank_graph
+    from repro.core.chromatic import ChromaticEngine
+    from repro.core.engine_base import Engine, init_state
+    from repro.dist.locking import DistributedLockingEngine
+    from repro.graphs.generators import connected_power_law_graph
+
+    t0 = time.time()
+    st = connected_power_law_graph(80, seed=3)
+    g = make_pagerank_graph(st)
+    prog = PageRankProgram(0.15, 80)
+    rec: Dict = {"case": "fused_scatter_parity"}
+
+    def local(cls):
+        outs = []
+        for fused in (True, False):
+            eng = cls(prog, g, tolerance=1e-9, use_fused=fused)
+            state = init_state(prog, g, scheduler=eng.scheduler)
+            state, _ = eng.run(state, max_steps=MAX_STEPS)
+            outs.append(np.asarray(state.graph.vertex_data["rank"]))
+        return float(np.abs(outs[0] - outs[1]).max())
+
+    rec["local_sweep_err"] = local(Engine)
+    rec["chromatic_err"] = local(ChromaticEngine)
+
+    def dist(cls):
+        outs = []
+        for fused in (True, False):
+            eng = cls(prog, g, _mesh(4), tolerance=1e-9, method="bfs",
+                      use_fused=fused)
+            state, _ = eng.run(eng.init(), max_steps=MAX_STEPS)
+            outs.append(np.asarray(eng.vertex_data(state)["rank"]))
+        return float(np.abs(outs[0] - outs[1]).max())
+
+    from repro.dist.engine import DistributedEngine
+    rec["dist_sweep_err"] = dist(DistributedEngine)
+    rec["dist_locking_err"] = dist(DistributedLockingEngine)
+    rec["stream_delta_err"] = _stream_parity(prog)
+
+    errs = [v for k, v in rec.items() if k.endswith("_err")]
+    rec["parity_ok"] = bool(max(errs) <= 1e-5)
+    rec["wall_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def _stream_parity(prog) -> float:
+    """Streaming-delta scenario: converge, splice growth batches in while
+    the engine runs, reconverge — fused scatter vs dense, same answer."""
+    from repro.graphs.generators import connected_power_law_graph
+    from repro.stream import (apply_delta_growing, make_local_engine,
+                              pagerank_arrivals, readback)
+
+    st = connected_power_law_graph(200, seed=5)
+    g0, batches, _ = pagerank_arrivals(st, n_batches=2, seed=7)
+    outs = []
+    for fused in (True, False):
+        eng, state = make_local_engine(prog, g0, tolerance=1e-9,
+                                       use_fused=fused)
+        state, _ = eng.run(state, max_steps=MAX_STEPS)
+        for b in batches:
+            eng, state, _ = apply_delta_growing(eng, state, b)
+            state, _ = eng.run(state, max_steps=MAX_STEPS)
+        outs.append(np.asarray(readback(eng, state).vertex_data["rank"]))
+    return float(np.abs(outs[0] - outs[1]).max())
+
+
+def _roofline_direction() -> Dict:
+    """Analytic memory-traffic model of one reschedule phase — both paths
+    are memory-bound (≪ 1 flop/byte), so predicted time follows predicted
+    bytes; the verdict is the *direction*: fused ≤ dense.
+
+    dense:  gather contrib[senders] ([E]·4B data + [E]·4B senders index
+            reads), [E]·4B float vals temp write+read, receivers index
+            read for the segment sum, dense bump temp ([N+1]·4B
+            write+read), prio read/write — every edge, every step.
+    fused:  per *active* edge block, senders/receivers/weights block reads
+            + one 4B DMA per live edge; prio/consume/out streamed once;
+            inactive edge blocks cost nothing (the activity bitmap).
+
+    Evaluated at a representative scale (the paper's graphs are 10⁶–10⁸
+    edges) with the bench graph's edge/vertex ratio, so the fixed
+    EDGE_BLOCK padding of the 80-vertex correctness graph doesn't distort
+    the asymptotic traffic the model is about.
+    """
+    from repro.graphs.generators import connected_power_law_graph
+    from repro.kernels.gas.gas import EDGE_BLOCK
+
+    st = connected_power_law_graph(80, seed=3)
+    N = 1_000_000
+    E = int(st.n_edges / st.n_vertices * N)
+    e_pad = -(-E // EDGE_BLOCK) * EDGE_BLOCK
+    dense_bytes = 4 * (2 * E      # contrib[senders]: data + index reads
+                       + 2 * E    # [E] float vals temp: write + read
+                       + E        # receivers index read (segment sum)
+                       + 2 * (N + 1)   # dense bump: segment write + read
+                       + 2 * N)   # prio read + write
+    recs = {}
+    for frac in (1.0, 0.5, 0.1):
+        act_blocks = max(int(np.ceil(frac * e_pad / EDGE_BLOCK)), 1)
+        recs[f"fused_bytes_at_{frac}"] = (
+            act_blocks * EDGE_BLOCK * (4 + 4 + 4)
+            # senders + receivers + weights of active blocks
+            + int(frac * E) * 4       # one contrib DMA per live edge
+            + 3 * N * 4)              # prio + consume + out
+    rec = {"case": "roofline_direction", "n_vertices": N, "n_edges": E,
+           "dense_bytes": dense_bytes, **recs}
+    rec["memory_bound"] = True  # ~1 MAC per 12 bytes on either path
+    rec["fused_wins"] = bool(
+        all(v < dense_bytes for v in recs.values()))
+    return rec
+
+
+def wire_roundtwo() -> List[Dict]:
+    """int8+top-k wire ≥4× fewer bytes at ≤1e-5 fixed-point drift on
+    4-machine PageRank+LBP; fused scatter ≡ dense on every engine."""
+    if jax.device_count() < 4:
+        return [{"case": "skipped",
+                 "reason": "needs 4 devices "
+                           "(XLA_FLAGS=--xla_force_host_platform_"
+                           "device_count=4)"}]
+    records = [_wire_case(*case) for case in _cases()]
+    for r in records:
+        assert r["beats_4x"], r
+        assert r["fixed_point_ok"], r
+        assert r["backlog_drained"], r
+        assert r["ef_needed"], r
+    par = _scatter_parity()
+    assert par["parity_ok"], par
+    records.append(par)
+    roof = _roofline_direction()
+    assert roof["fused_wins"], roof
+    records.append(roof)
+    return records
+
+
+if __name__ == "__main__":
+    for r in wire_roundtwo():
+        print(r)

@@ -31,7 +31,8 @@ from repro.core.update import (EdgeCtx, VertexProgram, edge_ctx,
                                fused_edge_weight, fused_gather_leaves,
                                masked_update, supports_fused_gather)
 from repro.kernels.gas.gas import EDGE_BLOCK, ROW_BLOCK
-from repro.kernels.gas.ops import EdgeSet, active_row_blocks, gather_combine
+from repro.kernels.gas.ops import (EdgeSet, ScatterCtx, active_row_blocks,
+                                   gather_combine)
 
 Pytree = Any
 
@@ -433,9 +434,10 @@ class Engine:
 
     @property
     def _full_edges(self) -> Optional[EdgeSet]:
-        """Full-graph EdgeSet for fused engines, built on first use — the
-        chromatic engine only ever uses its per-color subsets and must not
-        pay for (or hold) the full-graph metadata twice.
+        """Full-graph EdgeSet for fused engines, built on first use.  The
+        chromatic engine gathers through its per-color subsets but still
+        needs this for the fused reschedule scatter (contributions target
+        every out-neighbor, not just the executing color's edges).
 
         First use usually happens while tracing ``_step``; without
         ``ensure_compile_time_eval`` the cached index arrays would be that
@@ -452,6 +454,40 @@ class Engine:
     def _phase_edges(self, phase: int) -> Optional[EdgeSet]:
         """Prepared EdgeSet for one phase (chromatic overrides per color)."""
         return self._full_edges
+
+    def _scatter_ctx(self, tables) -> Optional[ScatterCtx]:
+        """ScatterCtx for the fused reschedule (DESIGN.md §3.14), or None
+        to keep the dense scatter.  Always the FULL edge structure — an
+        executed vertex's contribution targets every out-neighbor, so the
+        chromatic per-color subsets must not be used here.  Gated on f32
+        priorities: the f64 residual opt-in keeps the dense path rather
+        than silently downcasting through the f32 kernel."""
+        if not (self.use_fused and self.program.schedule_neighbors):
+            return None
+        if self.residual_dtype != jnp.float32:
+            return None
+        if tables is None:
+            return ScatterCtx(edges=self._full_edges,
+                              interpret=self.gas_interpret)
+        if self._stream_fused_meta is None:
+            return None
+        # dynamic structure: the capacity EdgeSet streams through the
+        # trace (values change, shapes never do); slack slots carry real
+        # receiver ids, so the live edge mask must ride as the weights —
+        # otherwise a reserved self-loop would bump its own receiver
+        _, _, eblk_start, n_eblk, max_eblk, e_pad = self._stream_fused_meta
+        n = self.structure.n_vertices
+        e_cap = tables["senders"].shape[0]
+        es = EdgeSet(
+            n_vertices=n, n_edges=e_cap,
+            senders=jnp.pad(tables["senders"], (0, e_pad - e_cap)),
+            receivers=jnp.pad(tables["receivers"], (0, e_pad - e_cap),
+                              constant_values=n + ROW_BLOCK),
+            eblk_start=eblk_start, n_eblk=n_eblk, max_eblk=max_eblk)
+        w = jnp.pad(tables["edge_mask"].astype(jnp.float32),
+                    (0, e_pad - e_cap))
+        return ScatterCtx(edges=es, weights=w,
+                          interpret=self.gas_interpret)
 
     def _step(self, state: EngineState, tables=None) -> EngineState:
         self._trace_count += 1
@@ -478,8 +514,9 @@ class Engine:
                     fused_meta=self._stream_fused_meta,
                     interpret=self.gas_interpret, tolerance=self.tolerance,
                     residual_dtype=self.residual_dtype)
-            prio, sched = self.scheduler.reschedule(sched, prio, mask,
-                                                    residual, tables=tables)
+            prio, sched = self.scheduler.reschedule(
+                sched, prio, mask, residual, tables=tables,
+                scatter=self._scatter_ctx(tables))
             if tables is not None and bump is not None:
                 prio = prio + bump
             count = count + mask.astype(jnp.int32)

@@ -41,6 +41,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.graph import GraphStructure, scatter_to_neighbors
+from repro.kernels.gas.ops import scatter_reschedule
 
 Pytree = Any
 
@@ -172,13 +173,25 @@ def exclusion_winners(selected: jnp.ndarray, rank: jnp.ndarray, senders,
 
 
 def reschedule_prio(program, structure, prio: jnp.ndarray, mask: jnp.ndarray,
-                    residual: jnp.ndarray, tables=None) -> jnp.ndarray:
+                    residual: jnp.ndarray, tables=None,
+                    scatter=None) -> jnp.ndarray:
     """T ← (T \\ executed) ∪ T' — executed vertices consume their priority;
     their priority contribution is scattered to neighbors (Alg. 1 pattern).
 
     ``tables`` (streaming engines, DESIGN.md §3.11) supplies the *dynamic*
     edge arrays {senders, receivers, edge_mask} in place of the static
-    structure, so the scatter follows edges added after the jit trace."""
+    structure, so the scatter follows edges added after the jit trace.
+
+    ``scatter`` (a ``kernels.gas.ops.ScatterCtx``, DESIGN.md §3.14) routes
+    the whole consume-and-deposit through the fused scatter/reschedule
+    kernel dispatch — no per-edge float gather, no dense [N] scatter-add
+    temp on the kernel path; the CPU oracle is numerically identical to
+    the dense branches below."""
+    if scatter is not None and program.schedule_neighbors:
+        contrib = jnp.where(mask, program.priority(residual), 0.0)
+        return scatter_reschedule(contrib, prio, mask, scatter.edges,
+                                  scatter.weights,
+                                  interpret=scatter.interpret)
     prio = jnp.where(mask, 0.0, prio)
     if program.schedule_neighbors:
         contrib = jnp.where(mask, program.priority(residual), 0.0)
@@ -276,10 +289,11 @@ class Scheduler:
         raise NotImplementedError
 
     def reschedule(self, sched: Pytree, prio: jnp.ndarray, mask: jnp.ndarray,
-                   residual: jnp.ndarray, tables=None
+                   residual: jnp.ndarray, tables=None, scatter=None
                    ) -> Tuple[jnp.ndarray, Pytree]:
         return reschedule_prio(self.program, self.structure, prio, mask,
-                               residual, tables=tables), sched
+                               residual, tables=tables,
+                               scatter=scatter), sched
 
     def done(self, sched: Pytree, prio: jnp.ndarray) -> jnp.ndarray:
         return jnp.max(prio) <= self.tolerance
@@ -373,10 +387,11 @@ class FifoScheduler(Scheduler):
         rank = pipeline_ranks(prio, top_idx, self.tolerance)
         return self._arbitrate(selected, rank), sched
 
-    def reschedule(self, sched, prio, mask, residual, tables=None):
+    def reschedule(self, sched, prio, mask, residual, tables=None,
+                   scatter=None):
         was_in = scheduled_mask(prio, self.tolerance)
         prio = reschedule_prio(self.program, self.structure, prio, mask,
-                               residual, tables=tables)
+                               residual, tables=tables, scatter=scatter)
         now_in = scheduled_mask(prio, self.tolerance)
         # (re-)enqueue at the current clock anything that entered T this
         # round: executed-and-rescheduled vertices go to the back of the

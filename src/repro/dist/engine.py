@@ -60,8 +60,12 @@ from repro.core.sync_op import SyncOp, run_syncs
 from repro.core.update import (EdgeCtx, VertexProgram, fused_edge_weight,
                                fused_gather_leaves, masked_update,
                                supports_fused_gather)
+from repro.dist.wire import (WireConfig, decode_payload, encode_payload,
+                             encode_rows, payload_row_nbytes,
+                             tree_add_where, tree_rows_maxabs, tree_sub)
 from repro.kernels.gas.gas import EDGE_BLOCK, ROW_BLOCK
-from repro.kernels.gas.ops import EdgeSet, active_row_blocks, gather_combine
+from repro.kernels.gas.ops import (EdgeSet, active_row_blocks,
+                                   gather_combine, scatter_reschedule)
 
 Pytree = Any
 
@@ -81,10 +85,14 @@ class DistState:
     traffic_v: jnp.ndarray  # [S] i32 — ghost vertex rows actually shipped
     traffic_e: jnp.ndarray  # [S] i32 — ghost edge rows actually shipped
     traffic_r: jnp.ndarray  # [S] i32 — arbitration rank rows shipped
+    traffic_bytes_v: jnp.ndarray  # [S] i32 — payload bytes of those rows
+    traffic_bytes_e: jnp.ndarray  # [S] i32
+    traffic_bytes_r: jnp.ndarray  # [S] i32
     step_index: jnp.ndarray  # scalar i32
     snap: Pytree = None     # DistSnapshotState while a snapshot is live
     globals_: Pytree = ()   # sync-op outputs (replicated), DESIGN §3.9
     beats: Pytree = None    # [S] i32 heartbeat counters (DESIGN §3.13)
+    wire: Pytree = None     # quantized-wire mirrors (DESIGN §3.14) or None
 
     def replace(self, **kw) -> "DistState":
         return dataclasses.replace(self, **kw)
@@ -294,6 +302,13 @@ def _expand_slabs(lay: _Layout, extra_b: int, extra_eb: int) -> None:
         lay.e_budget = neb
 
 
+def _rows_where(m: jnp.ndarray, new: jnp.ndarray,
+                old: jnp.ndarray) -> jnp.ndarray:
+    """Row-masked replace with a cast to the stored dtype."""
+    mm = m.reshape((-1,) + (1,) * (old.ndim - 1))
+    return jnp.where(mm, new.astype(old.dtype), old)
+
+
 def _take_rows(tree: Pytree, idx: np.ndarray) -> Pytree:
     """Gathers global rows by id (pad ids < 0 -> zero rows)."""
 
@@ -347,6 +362,7 @@ class ShardEngineBase:
         sync_ops: Sequence[SyncOp] = (),
         use_fused: Optional[bool] = None,
         gas_interpret: Optional[bool] = None,
+        wire: Optional[WireConfig] = None,
         stream_real_edges: Optional[np.ndarray] = None,
         ghost_slack: int = 0,
         eghost_slack: int = 0,
@@ -404,6 +420,31 @@ class ShardEngineBase:
         # silent-failure model (dist/faults.py sets these).
         self.layout.tables["stall"] = np.zeros(S, bool)
         self._trace_count = 0  # bumped at trace time; delta tests assert 0
+
+        # Quantized wire (DESIGN §3.14): codec + top-k residual shipping.
+        self.wire = wire if wire is not None else WireConfig()
+        if self.streaming and not self.wire.is_default:
+            raise ValueError(
+                "quantized/top-k wire is incompatible with streaming "
+                "ingestion: DistIngest patches ghost caches host-side with "
+                "exact owner rows, which desyncs the delta mirrors; use the "
+                "default WireConfig() with streaming engines")
+        # has-cacher masks: rows some remote machine caches (the only rows
+        # dirtiness can ever drain for — interior rows never ship).  Derived
+        # from the final (post-slack) send tables: entry o*(S*B)+d*B+b ships
+        # owner o's local row send_idx[entry].
+        lay = self.layout
+        vhas = np.zeros(S * lay.n_loc, bool)
+        ent = np.nonzero(lay.tables["send_mask"])[0]
+        vhas[(ent // (S * lay.budget)) * lay.n_loc
+             + lay.tables["send_idx"][ent]] = True
+        lay.tables["vhas_cacher"] = vhas
+        ehas = np.zeros(S * lay.e_loc, bool)
+        if lay.has_rev:
+            ent = np.nonzero(lay.tables["esend_mask"])[0]
+            ehas[(ent // (S * lay.e_budget)) * lay.e_loc
+                 + lay.tables["esend_idx"][ent]] = True
+        lay.tables["ehas_cacher"] = ehas
 
         # Fused GAS local compute (DESIGN.md §3.5): per-machine CSR block
         # metadata over the *local* edge rows.  Within a machine the real
@@ -481,7 +522,7 @@ class ShardEngineBase:
         a new mesh/placement; subclasses extend with their own knobs."""
         return dict(tolerance=self.tolerance, sync_ops=self.sync_ops,
                     use_fused=self._use_fused,
-                    gas_interpret=self._gas_interpret)
+                    gas_interpret=self._gas_interpret, wire=self.wire)
 
     def clone_for_placement(self, graph: DataGraph, mesh,
                             machine_of: np.ndarray, *,
@@ -527,6 +568,24 @@ class ShardEngineBase:
         ok = lay.own_gid >= 0
         prio[ok] = prio_g[lay.own_gid[ok]]
 
+        # delta-wire mirrors (DESIGN §3.14): vref/eref start equal to every
+        # cache (both sides gathered the same initial global rows), acc
+        # mirrors start at the accumulator's zero, nothing is dirty
+        wire_st = None
+        if self.wire.uses_delta:
+            wire_st = {
+                "vref": _take_rows(vdata, lay.own_gid),
+                "cpend": np.zeros(S * lay.n_loc, np.float32),
+                "backlog": np.zeros(S, np.int32),
+            }
+            if self.program.has_edge_out:
+                wire_st["alast"] = self._acc_zero_rows(S * lay.n_loc)
+                wire_st["aref"] = self._acc_zero_rows(S * lay.n_loc)
+                wire_st["aghost"] = self._acc_zero_rows(
+                    S * (S * lay.budget))
+            if lay.has_rev:
+                wire_st["eref"] = _take_rows(edata, lay.erow_gid)
+
         put = lambda t: jax.tree.map(
             lambda x: jax.device_put(jnp.asarray(x), self._shard), t)
         return DistState(
@@ -536,13 +595,38 @@ class ShardEngineBase:
             traffic_v=put(np.zeros(S, np.int32)),
             traffic_e=put(np.zeros(S, np.int32)),
             traffic_r=put(np.zeros(S, np.int32)),
+            traffic_bytes_v=put(np.zeros(S, np.int32)),
+            traffic_bytes_e=put(np.zeros(S, np.int32)),
+            traffic_bytes_r=put(np.zeros(S, np.int32)),
             step_index=jax.device_put(jnp.zeros((), jnp.int32), self._rep),
             snap=None,
             beats=put(np.zeros(S, np.int32)),
+            wire=None if wire_st is None else put(wire_st),
             globals_=jax.tree.map(
                 lambda x: jax.device_put(jnp.asarray(x), self._rep),
                 run_syncs(self.sync_ops, vdata, vdata,
                           graph.structure.n_vertices)))
+
+    def _acc_zero_rows(self, rows: int) -> Pytree:
+        """f32 zero rows shaped like the per-vertex gather accumulator
+        (trailing dims of ``prog.gather``'s message tree) — the shape of
+        the §3.14 acc mirrors, discovered by abstract evaluation."""
+        prog = self.program
+        vdata = jax.tree.map(np.asarray, self.graph.vertex_data)
+        edata = jax.tree.map(np.asarray, self.graph.edge_data)
+        row = lambda t: jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct((1,) + np.asarray(x).shape[1:],
+                                           np.asarray(x).dtype), t)
+
+        def g(src, dst, ed):
+            deg = jnp.zeros(1, jnp.int32)
+            ctx = EdgeCtx(edata=ed, rev_edata=ed, src=src, dst=dst,
+                          src_deg=deg, dst_deg=deg)
+            return prog.gather(ctx)
+
+        msgs = jax.eval_shape(g, row(vdata), row(vdata), row(edata))
+        return jax.tree.map(
+            lambda m: np.zeros((rows,) + m.shape[1:], np.float32), msgs)
 
     # -- the shared phase machinery -------------------------------------------
     def _make_phase_helpers(self):
@@ -572,6 +656,11 @@ class ShardEngineBase:
             gas_leaves, gas_treedef = self._gas_leaves, self._gas_treedef
             gas_max_eblk = self._gas_max_eblk
             gas_interpret = self._gas_interpret
+        wire_cfg = self.wire
+        codec = wire_cfg.codec
+        top_k = wire_cfg.top_k
+        use_delta = wire_cfg.uses_delta
+        wtol = wire_cfg.resolve_tol(self.tolerance)
 
         def exchange(payload, changed, send_idx, send_mask, budget):
             ship = jnp.logical_and(send_mask, changed[send_idx])
@@ -594,12 +683,14 @@ class ShardEngineBase:
             # a stalled machine (membership: dead or hung) executes no
             # updates — and, through the versioned exchange below, ships
             # nothing, so poisoned data never leaves it (DESIGN §3.13)
-            active = jnp.logical_and(active,
-                                     jnp.logical_not(tb["stall"][0]))
+            live = jnp.logical_not(tb["stall"][0])
+            active = jnp.logical_and(active, live)
             vown, vghost = carry["vown"], carry["vghost"]
             edata, eghost = carry["edata"], carry["eghost"]
             prio, count = carry["prio"], carry["count"]
             tv, te = carry["tv"], carry["te"]
+            bv, be = carry["bv"], carry["be"]
+            wire_st = dict(carry["wire"]) if use_delta else carry["wire"]
 
             sl, rl = tb["senders_local"], tb["receivers_local"]
             emask = tb["edge_mask"]
@@ -614,12 +705,13 @@ class ShardEngineBase:
                 # own+ghost rows, per-edge scalar weight, one GAS
                 # gather⊕combine per leaf — no [e_loc, D] messages, and
                 # row blocks with no scheduled own vertex are skipped.
-                blk_active = active_row_blocks(active)
+                # ``es`` is reused below by the fused reschedule scatter.
                 es = EdgeSet(
                     n_vertices=n_loc, n_edges=e_loc,
                     senders=tb["gas_send"], receivers=tb["gas_recv"],
                     eblk_start=tb["gas_start"], n_eblk=tb["gas_neblk"],
                     max_eblk=gas_max_eblk)
+                blk_active = active_row_blocks(active)
                 accs = []
                 for leaf in gas_leaves:
                     feat = leaf.feature(v_all)
@@ -669,20 +761,87 @@ class ShardEngineBase:
                 active, prog.priority(residual.astype(jnp.float32)), 0.0)
 
             # versioned ghost exchange: vdata (+acc for edge writes,
-            # +contrib for remote scheduling) of *changed* rows only
-            payload = {"v": vown, "contrib": contrib}
-            if prog.has_edge_out:
-                payload["acc"] = acc
-            recv, recv_ch, shipped = exchange(
-                payload, active, tb["send_idx"], tb["send_mask"], B)
-            tv = tv + shipped
+            # +contrib for remote scheduling).  Default wire ships f32
+            # rows of *changed* vertices; a non-default WireConfig ships
+            # quantized rows — absolute (replace-merge) without error
+            # feedback, else deltas against the owner-side mirror of what
+            # every cache holds, with top-k residual selection (§3.14).
+            if use_delta:
+                # contrib of cached rows accrues until a ship delivers it
+                cpend = wire_st["cpend"] + jnp.where(
+                    jnp.logical_and(active, tb["vhas_cacher"]), contrib,
+                    0.0)
+                if prog.has_edge_out:
+                    # fused gather zeroes acc rows in inactive row blocks,
+                    # so the shippable accumulator is the last *valid* one
+                    alast = jax.tree.map(
+                        lambda o, n: _rows_where(active, n, o),
+                        wire_st["alast"], acc)
+                vdelta = tree_sub(vown, wire_st["vref"])
+                pend = tree_rows_maxabs(vdelta)
+                if prog.has_edge_out:
+                    adelta = tree_sub(alast, wire_st["aref"])
+                    pend = jnp.maximum(pend, tree_rows_maxabs(adelta))
+                dirty = jnp.logical_and(
+                    jnp.logical_or(pend > wtol, jnp.abs(cpend) > wtol),
+                    jnp.logical_and(tb["vhas_cacher"], live))
+                if top_k is not None:
+                    k = min(int(top_k), n_loc)
+                    score = jnp.where(dirty, pend + jnp.abs(cpend),
+                                      -jnp.inf)
+                    _, tki = jax.lax.top_k(score, k)
+                    in_top = jnp.zeros(n_loc, bool).at[tki].set(True)
+                    ship_rows = jnp.logical_and(dirty, in_top)
+                else:
+                    ship_rows = dirty
+                payload = {"v": encode_payload(vdelta, codec),
+                           "contrib": encode_rows(cpend, codec)}
+                if prog.has_edge_out:
+                    payload["acc"] = encode_payload(adelta, codec)
+                recv, recv_ch, shipped = exchange(
+                    payload, ship_rows, tb["send_idx"], tb["send_mask"],
+                    B)
+                tv = tv + shipped
+                bv = bv + shipped * payload_row_nbytes(payload)
+                # owner-side error feedback: fold the decoded (= applied)
+                # delta into the mirrors; the quantization residue stays
+                # in vown − vref / cpend and re-ships until < wire_tol
+                dec_own = decode_payload(payload, codec)
+                wire_st["vref"] = tree_add_where(
+                    wire_st["vref"], dec_own["v"], ship_rows)
+                wire_st["cpend"] = jnp.where(
+                    ship_rows, cpend - dec_own["contrib"], cpend)
+                if prog.has_edge_out:
+                    wire_st["aref"] = tree_add_where(
+                        wire_st["aref"], dec_own["acc"], ship_rows)
+                    wire_st["alast"] = alast
+                # receiver side: additive delta merge (owner folded the
+                # identical decode into its mirror, so caches track it)
+                dec = decode_payload(recv, codec)
+                vghost = tree_add_where(vghost, dec["v"], recv_ch)
+                ghost_contrib = jnp.where(recv_ch, dec["contrib"], 0.0)
+                if prog.has_edge_out:
+                    wire_st["aghost"] = tree_add_where(
+                        wire_st["aghost"], dec["acc"], recv_ch)
+            else:
+                raw = {"v": vown, "contrib": contrib}
+                if prog.has_edge_out:
+                    raw["acc"] = acc
+                payload = raw if codec == "f32" \
+                    else encode_payload(raw, codec)
+                recv, recv_ch, shipped = exchange(
+                    payload, active, tb["send_idx"], tb["send_mask"], B)
+                tv = tv + shipped
+                bv = bv + shipped * payload_row_nbytes(payload)
+                dec = recv if codec == "f32" \
+                    else decode_payload(recv, codec)
 
-            def _merge(old, new):
-                m = recv_ch.reshape((-1,) + (1,) * (old.ndim - 1))
-                return jnp.where(m, new.astype(old.dtype), old)
+                def _merge(old, new):
+                    m = recv_ch.reshape((-1,) + (1,) * (old.ndim - 1))
+                    return jnp.where(m, new.astype(old.dtype), old)
 
-            vghost = jax.tree.map(_merge, vghost, recv["v"])
-            ghost_contrib = jnp.where(recv_ch, recv["contrib"], 0.0)
+                vghost = jax.tree.map(_merge, vghost, dec["v"])
+                ghost_contrib = jnp.where(recv_ch, dec["contrib"], 0.0)
 
             # live snapshot: record post-cut rows (updated-after-save own
             # rows, rows arriving from already-saved remote vertices)
@@ -692,21 +851,33 @@ class ShardEngineBase:
                 snap = mark_stale(snap, active, recv_ch)
 
             # T ← (T \ executed) ∪ T': winners consume their priority,
-            # losers/remotes keep theirs (a still-queued lock request)
-            prio = jnp.where(active, 0.0, prio)
+            # losers/remotes keep theirs (a still-queued lock request).
+            # On the fused path consume + per-edge deposit run as one
+            # scatter_reschedule — no [e_loc] float gather temp, no dense
+            # [n_loc+1] scatter-add intermediate.
             if prog.schedule_neighbors:
                 contrib_all = jnp.concatenate([contrib, ghost_contrib])
-                vals = jnp.where(emask, contrib_all[sl], 0.0)
-                prio = prio + jax.ops.segment_sum(
-                    vals, recv_idx, n_loc + 1)[:n_loc]
+                if use_fused:
+                    prio = scatter_reschedule(
+                        contrib_all, prio, active, es,
+                        emask.astype(jnp.float32),
+                        interpret=gas_interpret)
+                else:
+                    prio = jnp.where(active, 0.0, prio)
+                    vals = jnp.where(emask, contrib_all[sl], 0.0)
+                    prio = prio + jax.ops.segment_sum(
+                        vals, recv_idx, n_loc + 1)[:n_loc]
+            else:
+                prio = jnp.where(active, 0.0, prio)
 
             if prog.has_edge_out:
                 v_all2 = jax.tree.map(
                     lambda o, g: jnp.concatenate([o, g], 0), vown,
                     vghost)
+                recv_acc = wire_st["aghost"] if use_delta else dec["acc"]
                 acc_all = jax.tree.map(
-                    lambda a, g: jnp.concatenate([a, g], 0), acc,
-                    recv["acc"])
+                    lambda a, g: jnp.concatenate(
+                        [a, g.astype(a.dtype)], 0), acc, recv_acc)
                 changed_all = jnp.concatenate(
                     [active, recv_ch.astype(active.dtype)])
                 ctx2 = ctx._replace(
@@ -730,22 +901,71 @@ class ShardEngineBase:
                 edata = masked_update(edata, new_e, wmask)
 
                 if use_rev:  # refresh remote reverse-message caches
-                    erecv, erecv_ch, eshipped = exchange(
-                        edata, wmask, tb["esend_idx"],
-                        tb["esend_mask"], EB)
-                    te = te + eshipped
+                    if use_delta:
+                        # edge wire: same delta + error-feedback protocol,
+                        # dirtiness-driven (re-ships quantization residue
+                        # until < wire_tol); no top-k on edges
+                        edelta = tree_sub(edata, wire_st["eref"])
+                        edirty = jnp.logical_and(
+                            tree_rows_maxabs(edelta) > wtol,
+                            jnp.logical_and(tb["ehas_cacher"], live))
+                        epayload = encode_payload(edelta, codec)
+                        erecv, erecv_ch, eshipped = exchange(
+                            epayload, edirty, tb["esend_idx"],
+                            tb["esend_mask"], EB)
+                        te = te + eshipped
+                        be = be + eshipped * payload_row_nbytes(epayload)
+                        wire_st["eref"] = tree_add_where(
+                            wire_st["eref"],
+                            decode_payload(epayload, codec), edirty)
+                        eghost = tree_add_where(
+                            eghost, decode_payload(erecv, codec),
+                            erecv_ch)
+                    else:
+                        epayload = edata if codec == "f32" \
+                            else encode_payload(edata, codec)
+                        erecv, erecv_ch, eshipped = exchange(
+                            epayload, wmask, tb["esend_idx"],
+                            tb["esend_mask"], EB)
+                        te = te + eshipped
+                        be = be + eshipped * payload_row_nbytes(epayload)
+                        edec = erecv if codec == "f32" \
+                            else decode_payload(erecv, codec)
 
-                    def _emerge(old, new):
-                        m = erecv_ch.reshape(
-                            (-1,) + (1,) * (old.ndim - 1))
-                        return jnp.where(m, new.astype(old.dtype), old)
+                        def _emerge(old, new):
+                            m = erecv_ch.reshape(
+                                (-1,) + (1,) * (old.ndim - 1))
+                            return jnp.where(m, new.astype(old.dtype),
+                                             old)
 
-                    eghost = jax.tree.map(_emerge, eghost, erecv)
+                        eghost = jax.tree.map(_emerge, eghost, edec)
+
+            if use_delta:
+                # backlog: rows still owed to some cache (top-k leftovers,
+                # quantization residue) — run() refuses to terminate while
+                # any machine's backlog is nonzero, so every deferred
+                # delta is eventually delivered
+                pend2 = tree_rows_maxabs(tree_sub(vown, wire_st["vref"]))
+                if prog.has_edge_out:
+                    pend2 = jnp.maximum(pend2, tree_rows_maxabs(
+                        tree_sub(wire_st["alast"], wire_st["aref"])))
+                vd = jnp.logical_and(
+                    jnp.logical_or(pend2 > wtol,
+                                   jnp.abs(wire_st["cpend"]) > wtol),
+                    jnp.logical_and(tb["vhas_cacher"], live))
+                nback = jnp.sum(vd, dtype=jnp.int32)
+                if use_rev:
+                    ed = jnp.logical_and(
+                        tree_rows_maxabs(
+                            tree_sub(edata, wire_st["eref"])) > wtol,
+                        jnp.logical_and(tb["ehas_cacher"], live))
+                    nback = nback + jnp.sum(ed, dtype=jnp.int32)
+                wire_st["backlog"] = nback.reshape(1)
 
             count = count + active.astype(jnp.int32)
             return dict(vown=vown, vghost=vghost, edata=edata, eghost=eghost,
-                        prio=prio, count=count, tv=tv, te=te, snap=snap,
-                        glob=carry.get("glob"))
+                        prio=prio, count=count, tv=tv, te=te, bv=bv, be=be,
+                        wire=wire_st, snap=snap, glob=carry.get("glob"))
 
         return exchange, phase_update
 
@@ -811,8 +1031,9 @@ class ShardEngineBase:
         state_specs = DistState(
             vown=spec, vghost=spec, edata=spec, eghost=spec, prio=spec,
             update_count=spec, traffic_v=spec, traffic_e=spec,
-            traffic_r=spec, step_index=P(), snap=spec, globals_=P(),
-            beats=spec)
+            traffic_r=spec, traffic_bytes_v=spec, traffic_bytes_e=spec,
+            traffic_bytes_r=spec, step_index=P(), snap=spec, globals_=P(),
+            beats=spec, wire=spec)
         sharded = shard_map(
             full_body, mesh=self.mesh,
             in_specs=(state_specs, spec), out_specs=state_specs,
@@ -836,16 +1057,29 @@ class ShardEngineBase:
             max_steps: int = 100) -> Tuple[DistState, "list[dict]"]:
         trace = []
         for _ in range(max_steps):
-            if float(jnp.max(state.prio)) <= self.tolerance:
+            # under a quantized wire, converged priorities are not enough:
+            # deferred/top-k deltas still owed to remote caches (the wire
+            # backlog) must drain first — deferral is never a drop
+            if (float(jnp.max(state.prio)) <= self.tolerance
+                    and self._wire_backlog(state) == 0):
                 break
             state = self.step(state)
             trace.append({
                 "step": int(state.step_index),
                 "updates": int(jnp.sum(state.update_count)),
                 "ghost_rows": int(jnp.sum(state.traffic_v)),
+                "ghost_bytes": int(jnp.sum(state.traffic_bytes_v)),
+                "edge_rows": int(jnp.sum(state.traffic_e)),
+                "edge_bytes": int(jnp.sum(state.traffic_bytes_e)),
                 "rank_rows": int(jnp.sum(state.traffic_r)),
+                "rank_bytes": int(jnp.sum(state.traffic_bytes_r)),
             })
         return state, trace
+
+    def _wire_backlog(self, state: DistState) -> int:
+        if state.wire is None:
+            return 0
+        return int(np.asarray(state.wire["backlog"]).sum())
 
     # -- snapshots (paper Sec. 4.3; DESIGN.md §3.10) ---------------------------
     def start_snapshot(self, state: DistState,
@@ -957,6 +1191,18 @@ class ShardEngineBase:
         traffic; always 0 for the sweep-scheduled engine)."""
         return int(np.asarray(state.traffic_r).sum())
 
+    def ghost_bytes_sent(self, state: DistState) -> int:
+        """Payload bytes of the vertex ghost rows shipped (per-row codec
+        bytes × rows; the per-entry ship bitmap rides free either way and
+        is excluded, matching the row counters)."""
+        return int(np.asarray(state.traffic_bytes_v).sum())
+
+    def ghost_edge_bytes_sent(self, state: DistState) -> int:
+        return int(np.asarray(state.traffic_bytes_e).sum())
+
+    def rank_bytes_sent(self, state: DistState) -> int:
+        return int(np.asarray(state.traffic_bytes_r).sum())
+
     def total_ghost_slots(self) -> int:
         """Distinct (vertex, caching machine) pairs — the per-sweep upper
         bound on versioned traffic when every vertex updates."""
@@ -1014,6 +1260,9 @@ class DistributedEngine(ShardEngineBase):
                          edata=state.edata, eghost=state.eghost,
                          prio=state.prio, count=state.update_count,
                          tv=state.traffic_v, te=state.traffic_e,
+                         bv=state.traffic_bytes_v,
+                         be=state.traffic_bytes_e,
+                         wire=state.wire,
                          snap=state.snap, glob=state.globals_)
             for c in range(num_colors):
                 active = jnp.logical_and(
@@ -1026,7 +1275,9 @@ class DistributedEngine(ShardEngineBase):
                 prio=carry["prio"], update_count=carry["count"],
                 traffic_v=carry["tv"], traffic_e=carry["te"],
                 traffic_r=state.traffic_r,
+                traffic_bytes_v=carry["bv"], traffic_bytes_e=carry["be"],
+                traffic_bytes_r=state.traffic_bytes_r,
                 step_index=state.step_index, snap=carry["snap"],
-                globals_=state.globals_)
+                wire=carry["wire"], globals_=state.globals_)
 
         return self._wrap_step(body)

@@ -112,7 +112,11 @@ def kill_machine(engine: ShardEngineBase, state: DistState,
         traffic_v=destroy(state.traffic_v),
         traffic_e=destroy(state.traffic_e),
         traffic_r=destroy(state.traffic_r),
+        traffic_bytes_v=destroy(state.traffic_bytes_v),
+        traffic_bytes_e=destroy(state.traffic_bytes_e),
+        traffic_bytes_r=destroy(state.traffic_bytes_r),
         beats=(destroy(state.beats) if state.beats is not None else None),
+        wire=(destroy(state.wire) if state.wire is not None else None),
         snap=None)  # the in-flight wave died with the machine
 
 

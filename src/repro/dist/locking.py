@@ -47,6 +47,7 @@ from repro.core.scheduler import (check_rank_range, pipeline_ranks,
                                   pipeline_select)
 from repro.core.update import VertexProgram
 from repro.dist.engine import DistState, ShardEngineBase
+from repro.dist.wire import decode_rank, encode_rank, rank_codec_fits
 
 
 class DistributedLockingEngine(ShardEngineBase):
@@ -96,6 +97,13 @@ class DistributedLockingEngine(ShardEngineBase):
         tol, ax = self.tolerance, self.axis
         radius = self.radius if self.serializable else 0
         inf = jnp.inf
+        # rank wire narrowing (DESIGN §3.14): arbitration needs *exact*
+        # ranks (a lossy rank can grant two adjacent locks → livelock), so
+        # a non-default wire narrows them losslessly to int16 — every rank
+        # is a small integer < k*S — with a sentinel for +inf.  f32
+        # fallback when the rank range can't fit.
+        rank16 = (not self.wire.is_default) and rank_codec_fits(k * S)
+        rank_nbytes = 2 if rank16 else 4
 
         def nb_min(vals_by_edge, recv_idx):
             """min over each own vertex's in-edges (= its full neighborhood
@@ -108,8 +116,12 @@ class DistributedLockingEngine(ShardEngineBase):
                          edata=state.edata, eghost=state.eghost,
                          prio=state.prio, count=state.update_count,
                          tv=state.traffic_v, te=state.traffic_e,
+                         bv=state.traffic_bytes_v,
+                         be=state.traffic_bytes_e,
+                         wire=state.wire,
                          snap=state.snap, glob=state.globals_)
             tr = state.traffic_r
+            br = state.traffic_bytes_r
 
             # -- per-machine pipeline: top-p of the local queue ------------
             # a stalled machine (DESIGN §3.13) selects nothing, so it ships
@@ -129,10 +141,12 @@ class DistributedLockingEngine(ShardEngineBase):
                 # -- lock requests: selected boundary ranks ride the
                 # versioned ghost tables --------------------------------
                 recv, recv_ch, shipped = exchange(
-                    {"r": rank}, selected, tb["send_idx"], tb["send_mask"],
-                    B)
+                    {"r": encode_rank(rank) if rank16 else rank},
+                    selected, tb["send_idx"], tb["send_mask"], B)
                 tr = tr + shipped
-                ghost_rank = jnp.where(recv_ch, recv["r"], inf)
+                br = br + shipped * rank_nbytes
+                rr = decode_rank(recv["r"]) if rank16 else recv["r"]
+                ghost_rank = jnp.where(recv_ch, rr, inf)
                 rank_all = jnp.concatenate([rank, ghost_rank])
 
                 sl, rl = tb["senders_local"], tb["receivers_local"]
@@ -156,14 +170,21 @@ class DistributedLockingEngine(ShardEngineBase):
                         drop(rank, c1),
                         nb_min(jnp.where(emask, drop(rank_all[sl], c1[rl]),
                                          inf), recv_idx))
+                    cpay = {"c1": encode_rank(c1), "c2": encode_rank(c2)} \
+                        if rank16 else {"c1": c1, "c2": c2}
                     erecv, erecv_ch, shipped2 = exchange(
-                        {"c1": c1, "c2": c2}, jnp.isfinite(c1),
+                        cpay, jnp.isfinite(c1),
                         tb["send_idx"], tb["send_mask"], B)
                     tr = tr + shipped2
+                    br = br + shipped2 * (2 * rank_nbytes)
+                    rc1 = decode_rank(erecv["c1"]) if rank16 \
+                        else erecv["c1"]
+                    rc2 = decode_rank(erecv["c2"]) if rank16 \
+                        else erecv["c2"]
                     c1_all = jnp.concatenate(
-                        [c1, jnp.where(erecv_ch, erecv["c1"], inf)])
+                        [c1, jnp.where(erecv_ch, rc1, inf)])
                     c2_all = jnp.concatenate(
-                        [c2, jnp.where(erecv_ch, erecv["c2"], inf)])
+                        [c2, jnp.where(erecv_ch, rc2, inf)])
                     relay = jnp.where(c1_all[sl] == rank[rl],
                                       c2_all[sl], c1_all[sl])
                     d2 = nb_min(jnp.where(emask, relay, inf), recv_idx)
@@ -181,7 +202,10 @@ class DistributedLockingEngine(ShardEngineBase):
                 edata=carry["edata"], eghost=carry["eghost"],
                 prio=carry["prio"], update_count=carry["count"],
                 traffic_v=carry["tv"], traffic_e=carry["te"],
-                traffic_r=tr, step_index=state.step_index,
-                snap=carry["snap"], globals_=state.globals_)
+                traffic_r=tr,
+                traffic_bytes_v=carry["bv"], traffic_bytes_e=carry["be"],
+                traffic_bytes_r=br, step_index=state.step_index,
+                snap=carry["snap"], wire=carry["wire"],
+                globals_=state.globals_)
 
         return self._wrap_step(body)

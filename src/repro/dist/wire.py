@@ -1,0 +1,219 @@
+"""Wire codecs for the versioned ghost exchange (DESIGN.md §3.14).
+
+The paper's network story (Sec. 5.1, Fig. 6(c)) is *which* rows ship:
+versioned changed-only exchange.  This module is about *how big* each
+shipped row is and *how many* of the changed rows ship per phase:
+
+  - **Row codecs** — ``f32`` (the seed wire), ``bf16`` (2 B/component),
+    and ``int8`` (1 B/component + 1 B/row shared power-of-two exponent).
+    The int8 layout quantizes a row against its own max magnitude:
+    ``e = ceil(log2(max|x| / 127))``, ``q = round(x / 2^e)``, so the
+    per-element error is at most ``2^(e-1) <= max|x| / 127``.  A per-row
+    f32 scale would erase all savings on scalar payloads (PageRank's rank
+    is one component: 1+4 B >= the 4 B it replaces); the int8 exponent
+    keeps every row at ``C + 1`` bytes.
+
+  - **Delta shipping with error feedback** — lossy codecs ship the
+    *delta* against an owner-side mirror of what every cache holds
+    (``vref``); the owner folds the decoded (= actually applied) delta
+    back into the mirror, so the quantization residual ``vown - vref``
+    is carried locally and included in the next ship.  Each ship shrinks
+    the carried error by >= 127x (int8) / >= 256x (bf16), so the ghost
+    caches converge to the owner values to far below the engine
+    tolerance — the ASYMP-style compressed-state argument.
+
+  - **Rank narrowing** — arbitration ranks (dist/locking.py) are exact
+    small integers ``slot * S + machine`` (< pipeline_length * S), so
+    they ship losslessly as int16 with +inf mapped to a sentinel.  Lossy
+    rank compression is *forbidden*: colliding ranks make tied exclusion
+    neighbors both lose arbitration forever (core/scheduler.py
+    ``check_rank_range``).
+
+``WireConfig`` selects all of this per engine; the default config is the
+seed wire bit-for-bit.  ``payload_row_nbytes`` prices an encoded payload
+row so ``DistState.traffic_bytes_*`` can account bytes, not rows.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+CODECS = ("f32", "bf16", "int8")
+
+# int16 rank sentinel for +inf (an unselected vertex / empty neighborhood)
+RANK_INF = np.int16(32767)
+
+
+@dataclasses.dataclass(frozen=True)
+class WireConfig:
+    """Per-engine wire protocol selection.
+
+    ``codec``          row codec for ghost vertex/edge payloads.
+    ``top_k``          among dirty rows, ship only the k highest-residual
+                       rows per machine per phase (None = ship all);
+                       PriorityScheduler ordering absorbs the staleness,
+                       and unshipped rows stay dirty (eventual delivery).
+    ``error_feedback`` carry the quantization residual locally and fold
+                       it into the next ship (delta protocol).  Turning
+                       it off (ablation) ships absolute quantized rows
+                       with replace-merge — the fixed point then carries
+                       the full one-shot quantization error.
+    ``wire_tol``       dirtiness threshold for the delta protocol: a row
+                       re-ships until its carried error drops below this
+                       (None = 0.1x the engine tolerance).
+    """
+
+    codec: str = "f32"
+    top_k: Optional[int] = None
+    error_feedback: bool = True
+    wire_tol: Optional[float] = None
+
+    def __post_init__(self):
+        if self.codec not in CODECS:
+            raise ValueError(f"unknown wire codec {self.codec!r}; "
+                             f"choose from {CODECS}")
+        if self.top_k is not None:
+            if int(self.top_k) < 1:
+                raise ValueError("top_k must be >= 1")
+            if not self.error_feedback:
+                raise ValueError(
+                    "top_k requires error_feedback: deferring a row only "
+                    "works if its pending delta is carried locally")
+
+    @property
+    def is_default(self) -> bool:
+        """True iff this config reproduces the seed wire bit-for-bit."""
+        return self.codec == "f32" and self.top_k is None
+
+    @property
+    def uses_delta(self) -> bool:
+        """True iff the delta + error-feedback protocol is active."""
+        return not self.is_default and self.error_feedback
+
+    def resolve_tol(self, tolerance: float) -> float:
+        return float(self.wire_tol if self.wire_tol is not None
+                     else 0.1 * tolerance)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class QRows:
+    """An int8-encoded row batch: ``q`` mantissas + per-row power-of-two
+    exponent ``e``.  Registered as a pytree so it rides the exchange's
+    ``tree.map``/``all_to_all`` machinery like any raw leaf."""
+
+    q: jnp.ndarray   # int8 [R, ...] mantissas
+    e: jnp.ndarray   # int8 [R] shared row exponent
+
+
+def _row_scale_exp(x: jnp.ndarray) -> jnp.ndarray:
+    """Per-row int8 power-of-two exponent: smallest e with
+    ``max|row| / 2^e <= 127``; zero rows get the minimum exponent so they
+    encode (and decode) to exact zeros."""
+    m = jnp.max(jnp.abs(x.astype(jnp.float32)).reshape(x.shape[0], -1),
+                axis=1)
+    e = jnp.ceil(jnp.log2(jnp.where(m > 0, m, 1.0) / 127.0))
+    return jnp.clip(jnp.where(m > 0, e, -126.0), -126, 127).astype(jnp.int8)
+
+
+def encode_rows(x: jnp.ndarray, codec: str):
+    """[R, ...] float rows -> wire leaf (f32 passthrough / bf16 / QRows)."""
+    if codec == "f32":
+        return x.astype(jnp.float32)
+    if codec == "bf16":
+        return x.astype(jnp.bfloat16)
+    e = _row_scale_exp(x)
+    scale = jnp.exp2(e.astype(jnp.float32))
+    scale = scale.reshape((-1,) + (1,) * (x.ndim - 1))
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return QRows(q=q.astype(jnp.int8), e=e)
+
+
+def decode_rows(wire, codec: str) -> jnp.ndarray:
+    """Wire leaf -> f32 rows.  Encoding is deterministic, so the owner's
+    local decode (for the error-feedback mirror) and the receiver's decode
+    of the shipped bits agree exactly."""
+    if codec == "f32":
+        return wire
+    if codec == "bf16":
+        return wire.astype(jnp.float32)
+    scale = jnp.exp2(wire.e.astype(jnp.float32))
+    scale = scale.reshape((-1,) + (1,) * (wire.q.ndim - 1))
+    return wire.q.astype(jnp.float32) * scale
+
+
+def encode_payload(tree: Pytree, codec: str) -> Pytree:
+    """Encodes every leaf of a payload pytree with ``encode_rows``."""
+    return jax.tree.map(lambda x: encode_rows(x, codec), tree)
+
+
+def decode_payload(wire_tree: Pytree, codec: str) -> Pytree:
+    """Inverse of ``encode_payload`` (QRows nodes are treated as leaves)."""
+    return jax.tree.map(lambda w: decode_rows(w, codec), wire_tree,
+                        is_leaf=lambda x: isinstance(x, QRows))
+
+
+def payload_row_nbytes(tree: Pytree) -> int:
+    """Bytes per shipped row of a (possibly encoded) payload pytree —
+    itemsize x trailing components, summed over leaves.  Static: shapes
+    and dtypes are trace-time constants.  The 1-bit ship bitmap the
+    exchange sends alongside (``recv_changed``) is not counted, matching
+    the row counters which never counted it either."""
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        total += leaf.dtype.itemsize * int(np.prod(leaf.shape[1:]))
+    return int(total)
+
+
+def tree_rows_maxabs(tree: Pytree) -> jnp.ndarray:
+    """[R] f32: per-row max-magnitude across every leaf/component of a
+    row-batched pytree — the dirtiness metric of the delta protocol."""
+    leaves = jax.tree.leaves(tree)
+    out = None
+    for x in leaves:
+        m = jnp.max(jnp.abs(x.astype(jnp.float32)).reshape(x.shape[0], -1),
+                    axis=1)
+        out = m if out is None else jnp.maximum(out, m)
+    return out
+
+
+def tree_sub(a: Pytree, b: Pytree) -> Pytree:
+    """a - b in f32, leafwise."""
+    return jax.tree.map(
+        lambda x, y: x.astype(jnp.float32) - y.astype(jnp.float32), a, b)
+
+
+def tree_add_where(tree: Pytree, delta: Pytree,
+                   mask: jnp.ndarray) -> Pytree:
+    """tree + delta on masked rows, cast back to each leaf's dtype."""
+
+    def one(x, d):
+        m = mask.reshape((-1,) + (1,) * (x.ndim - 1))
+        return jnp.where(m, (x.astype(jnp.float32) + d).astype(x.dtype), x)
+
+    return jax.tree.map(one, tree, delta)
+
+
+# -- arbitration rank narrowing (lossless) ---------------------------------
+
+def rank_codec_fits(max_rank: int) -> bool:
+    """True iff every finite rank is strictly below the int16 sentinel."""
+    return int(max_rank) < int(RANK_INF)
+
+
+def encode_rank(rank: jnp.ndarray) -> jnp.ndarray:
+    """f32 ranks (small exact integers or +inf) -> int16, inf -> sentinel."""
+    return jnp.where(jnp.isfinite(rank), rank,
+                     jnp.float32(RANK_INF)).astype(jnp.int16)
+
+
+def decode_rank(q: jnp.ndarray) -> jnp.ndarray:
+    """int16 -> f32 ranks, sentinel -> +inf.  Exact: ranks are integers
+    below 2**15, far inside f32 integer precision."""
+    return jnp.where(q == RANK_INF, jnp.inf, q.astype(jnp.float32))

@@ -24,7 +24,8 @@ import numpy as np
 
 from repro.kernels.gas.gas import (EDGE_BLOCK, ROW_BLOCK,
                                    gas_gather_combine_pallas)
-from repro.kernels.gas.ref import gather_combine_ref
+from repro.kernels.gas.ref import gather_combine_ref, scatter_reschedule_ref
+from repro.kernels.gas.scatter import gas_scatter_reschedule_pallas
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -130,3 +131,57 @@ def gather_combine(
         feat, w, edges.senders, edges.receivers, edges.n_vertices,
         edges.eblk_start, edges.n_eblk, edges.max_eblk, block_active,
         interpret=bool(interpret))
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ScatterCtx:
+    """How an engine wants its reschedule scatter fused: the prepared
+    edge subset (the FULL out-edge structure — contributions target every
+    neighbor, so per-color subsets are wrong here), optional per-edge
+    weights (dynamic-structure engines pass the live edge mask; None means
+    all real edges weigh 1), and the Pallas interpret flag."""
+
+    edges: EdgeSet
+    weights: Optional[jnp.ndarray] = None   # [E] or [E_pad]; None = ones
+    interpret: Optional[bool] = None
+
+
+def scatter_reschedule(
+    contrib: jnp.ndarray,          # [N_src] per-source contribution
+    prio: jnp.ndarray,             # [N] current priorities
+    consume: jnp.ndarray,          # [N] bool — executed this phase
+    edges: EdgeSet,
+    weights: Optional[jnp.ndarray] = None,
+    *,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Fused ``where(consume, 0, prio) + Σ_{u→v} w_e · contrib[u]`` → [N].
+
+    The scheduler update of a GAS phase (T ← (T \\ executed) ∪ T') without
+    the dense per-edge float gather + [N] scatter-add temp.  ``contrib``
+    may be longer than ``edges.n_vertices`` (the dist engines index an
+    own+ghost contribution table).  Dispatch mirrors ``gather_combine``:
+    TPU → Pallas kernel (scatter.py), CPU production → jnp oracle,
+    ``interpret=True`` → kernel body through the Pallas interpreter.
+    """
+    e_pad = edges.senders.shape[0]
+    if weights is None:
+        w = jnp.ones((e_pad,), jnp.float32)   # pads drop via receivers >= n
+    else:
+        w = weights.astype(jnp.float32)
+        if w.shape[0] != e_pad:
+            w = jnp.pad(w, (0, e_pad - w.shape[0]))
+
+    if not interpret and jax.default_backend() != "tpu":
+        return scatter_reschedule_ref(
+            contrib, prio, consume, w, edges.senders, edges.receivers,
+            edges.n_vertices)
+    # edge-block activity: a block matters only if some edge in it has a
+    # contributing source and nonzero weight — bool work, invisible to the
+    # float-intermediate accounting the kernel path is measured by
+    live = jnp.logical_and(contrib[edges.senders] != 0.0, w != 0.0)
+    eblk_active = live.reshape(-1, EDGE_BLOCK).any(axis=1)
+    return gas_scatter_reschedule_pallas(
+        contrib, prio, consume, w, edges.senders, edges.receivers,
+        edges.n_vertices, edges.eblk_start, edges.n_eblk, edges.max_eblk,
+        eblk_active, interpret=bool(interpret))

@@ -42,3 +42,25 @@ def gather_combine_ref(
         act = jnp.repeat(block_active.astype(bool), row_block)[:n_rows]
         acc = jnp.where(act[:, None], acc, 0.0)
     return acc.astype(feat.dtype)
+
+
+def scatter_reschedule_ref(
+    contrib: jnp.ndarray,       # [N_src] per-source priority contribution
+    prio: jnp.ndarray,          # [N] current priorities
+    consume: jnp.ndarray,       # [N] bool — executed this phase
+    weights: jnp.ndarray,       # [E] per-edge scalar (pad rows 0)
+    senders: jnp.ndarray,       # [E] i32 into contrib (pad rows 0)
+    receivers: jnp.ndarray,     # [E] i32 sorted; entries >= n are padding
+    n_rows: int,
+) -> jnp.ndarray:
+    """T ← (T \\ executed) ∪ T' in one call: executed rows consume their
+    priority, each edge deposits ``w_e · contrib[send(e)]`` at its
+    receiver.  The deposit is the same receiver-sorted ``segment_sum`` as
+    ``core.graph.scatter_to_neighbors``, so on CPU this path is
+    numerically identical to the dense reschedule it replaces."""
+    w = jnp.where(receivers < n_rows, weights.astype(jnp.float32), 0.0)
+    r = jnp.clip(receivers, 0, max(n_rows - 1, 0))
+    bump = jax.ops.segment_sum(w * contrib[senders].astype(jnp.float32),
+                               r, num_segments=n_rows,
+                               indices_are_sorted=True)
+    return jnp.where(consume, 0.0, prio.astype(jnp.float32)) + bump

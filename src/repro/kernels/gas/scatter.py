@@ -1,0 +1,154 @@
+"""Pallas TPU kernel: fused residual-scatter → reschedule (DESIGN.md §3.14).
+
+The back half of a GAS phase is the scheduler update ``T ← (T \\ executed)
+∪ T'`` (paper Alg. 1): every executed vertex's priority contribution is
+scattered along its out-edges into the neighbors' priorities, and executed
+vertices consume their own.  The dense path materializes a per-edge float
+gather ``contrib[senders]`` and a dense ``[N]``-segment scatter-add; this
+kernel fuses the whole chain with the same CSR block streaming as the
+gather⊕combine kernel (gas.py):
+
+  - edges are receiver-sorted, so each ``ROW_BLOCK`` output block owns a
+    contiguous edge range (scalar-prefetched ``csr_block_offsets``);
+  - the per-edge contribution gather is the embedding_bag idiom: contrib
+    stays in HBM (``memory_space=ANY``) as an ``[N_src, 1]`` table and each
+    edge's scalar moves to VMEM via an explicit ``make_async_copy`` DMA,
+    double-buffered two-deep;
+  - the deposit is the one-hot MXU matmul of the segsum kernel
+    (``onehot[RB, EB] @ msgs[EB, 1]``), accumulated in VMEM;
+  - an **edge-block activity bitmap** (scalar prefetch, computed by the
+    dispatch layer from ``contrib != 0``) skips the DMA/matmul for edge
+    blocks with no contributing source — the scatter twin of the gather
+    kernel's active row blocks.  Skipped blocks deposit exact zeros, and
+    the flush (consume + deposit) always runs, so every row gets its
+    ``where(consume, 0, prio) + bump``.
+
+Unlike the gather kernel the activity bitmap is per *edge block*, not per
+row block: scatter activity is a property of the sources feeding a block,
+which the receiver-major grid cannot know statically.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.gas.gas import EDGE_BLOCK, ROW_BLOCK
+
+
+def _kernel(snd_ref, start_ref, neblk_ref, eact_ref,   # scalar prefetch
+            contrib_hbm,                               # ANY [N_src, 1]
+            w_ref, recv_ref,                           # VMEM blocks [EB]
+            prio_ref, consume_ref,                     # VMEM blocks [RB]
+            out_ref,                                   # VMEM block [RB]
+            msg_ref, acc_ref, sem):                    # scratch
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    n_eblk = neblk_ref[i]
+    blk = start_ref[i] + jnp.minimum(j, n_eblk - 1)
+    base = blk * EDGE_BLOCK
+
+    @pl.when((eact_ref[blk] > 0) & (j < n_eblk))
+    def _scatter():
+        # Stage the EDGE_BLOCK source contributions: HBM → msg_ref,
+        # two-deep DMA pipeline (same idiom as gas.py's feature gather).
+        def issue(r):
+            idx = snd_ref[base + r]
+            return pltpu.make_async_copy(
+                contrib_hbm.at[pl.ds(idx, 1), :],
+                msg_ref.at[pl.ds(r, 1), :],
+                sem.at[jax.lax.rem(r, 2)])
+
+        issue(0).start()
+
+        def body(r, _):
+            @pl.when(r + 1 < EDGE_BLOCK)
+            def _prefetch():
+                issue(r + 1).start()
+
+            issue(r).wait()
+            return ()
+
+        jax.lax.fori_loop(0, EDGE_BLOCK, body, (), unroll=False)
+
+        # weighted per-edge contribution (VPU) + one-hot deposit (MXU);
+        # padding edges carry w == 0 and receiver >= n_rows + ROW_BLOCK,
+        # so they contribute exactly nothing through either factor.
+        w = w_ref[...].astype(jnp.float32)                         # [EB]
+        msgs = msg_ref[...].astype(jnp.float32)[:, 0] * w          # [EB]
+        local = recv_ref[...] - i * ROW_BLOCK
+        valid = (local >= 0) & (local < ROW_BLOCK)
+        rows = jax.lax.broadcasted_iota(jnp.int32, (ROW_BLOCK, EDGE_BLOCK),
+                                        0)
+        onehot = jnp.where(
+            valid[None, :] & (rows == local[None, :]), 1.0, 0.0)
+        acc_ref[...] += jax.lax.dot_general(
+            onehot, msgs[:, None], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(j == jnp.maximum(n_eblk, 1) - 1)
+    def _flush():
+        # reschedule: winners consume, everyone collects their deposits —
+        # runs for every row block, including fully skipped ones
+        keep = jnp.where(consume_ref[...] > 0, 0.0,
+                         prio_ref[...].astype(jnp.float32))
+        out_ref[...] = (keep + acc_ref[...][:, 0]).astype(out_ref.dtype)
+
+
+def gas_scatter_reschedule_pallas(
+    contrib: jnp.ndarray,      # [N_src] f32 source contributions (HBM)
+    prio: jnp.ndarray,         # [N] f32 current priorities
+    consume: jnp.ndarray,      # [N] i32/bool — executed this phase
+    weights: jnp.ndarray,      # [E_pad] f32, pad rows 0
+    senders: jnp.ndarray,      # [E_pad] i32 into contrib, pad rows 0
+    receivers: jnp.ndarray,    # [E_pad] i32 sorted, pads >= n + ROW_BLOCK
+    n_rows: int,
+    eblk_start: jnp.ndarray,   # [n_row_blocks] i32
+    n_eblk: jnp.ndarray,       # [n_row_blocks] i32 (>= 1)
+    max_eblk: int,
+    eblk_active: jnp.ndarray,  # [E_pad // EDGE_BLOCK] i32 bitmap
+    interpret: bool = False,
+) -> jnp.ndarray:
+    E, = weights.shape
+    assert E % EDGE_BLOCK == 0, (E,)
+    n_pad = -(-n_rows // ROW_BLOCK) * ROW_BLOCK
+    prio_p = jnp.pad(prio.astype(jnp.float32), (0, n_pad - n_rows))
+    cons_p = jnp.pad(consume.astype(jnp.int32), (0, n_pad - n_rows))
+    grid = (n_pad // ROW_BLOCK, max_eblk)
+
+    eblk = lambda i, j, snd, s, n, a: (s[i] + jnp.minimum(j, n[i] - 1),)
+    rblk = lambda i, j, snd, s, n, a: (i,)
+
+    out = pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=4,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec(memory_space=pltpu.ANY),   # contrib in HBM
+                pl.BlockSpec((EDGE_BLOCK,), eblk),      # weights
+                pl.BlockSpec((EDGE_BLOCK,), eblk),      # receivers
+                pl.BlockSpec((ROW_BLOCK,), rblk),       # prio
+                pl.BlockSpec((ROW_BLOCK,), rblk),       # consume
+            ],
+            out_specs=pl.BlockSpec((ROW_BLOCK,), rblk),
+            scratch_shapes=[
+                pltpu.VMEM((EDGE_BLOCK, 1), jnp.float32),  # staged contribs
+                pltpu.VMEM((ROW_BLOCK, 1), jnp.float32),   # accumulator
+                pltpu.SemaphoreType.DMA((2,)),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), jnp.float32),
+        interpret=interpret,
+    )(senders.astype(jnp.int32), eblk_start.astype(jnp.int32),
+      n_eblk.astype(jnp.int32), eblk_active.astype(jnp.int32),
+      contrib.astype(jnp.float32).reshape(-1, 1),
+      weights.astype(jnp.float32), receivers.astype(jnp.int32),
+      prio_p, cons_p)
+    return out[:n_rows]
