@@ -282,6 +282,16 @@ def _expand_slabs(lay: _Layout, extra_b: int, extra_eb: int) -> None:
         lay.tables["senders_local"] = np.where(
             is_ghost, lay.n_loc + (off // B) * nb + off % B,
             sl).astype(np.int32)
+        # the fused kernel's sender table holds the same local indices
+        # (present only on live expansion — at construction the GAS
+        # metadata is built after the slack expansion)
+        if "gas_send" in lay.tables:
+            gs = lay.tables["gas_send"].astype(np.int64)
+            is_ghost = gs >= lay.n_loc
+            off = gs - lay.n_loc
+            lay.tables["gas_send"] = np.where(
+                is_ghost, lay.n_loc + (off // B) * nb + off % B,
+                gs).astype(np.int32)
         lay.budget = nb
     EB = lay.e_budget
     if extra_eb > 0 and lay.has_rev:
@@ -363,6 +373,7 @@ class ShardEngineBase:
         use_fused: Optional[bool] = None,
         gas_interpret: Optional[bool] = None,
         wire: Optional[WireConfig] = None,
+        overlap: bool = False,
         stream_real_edges: Optional[np.ndarray] = None,
         ghost_slack: int = 0,
         eghost_slack: int = 0,
@@ -422,13 +433,15 @@ class ShardEngineBase:
         self._trace_count = 0  # bumped at trace time; delta tests assert 0
 
         # Quantized wire (DESIGN §3.14): codec + top-k residual shipping.
+        # Streaming engines are fully supported: stream/ingest.py patches
+        # the error-feedback mirrors in lockstep with every ghost splice.
         self.wire = wire if wire is not None else WireConfig()
-        if self.streaming and not self.wire.is_default:
-            raise ValueError(
-                "quantized/top-k wire is incompatible with streaming "
-                "ingestion: DistIngest patches ghost caches host-side with "
-                "exact owner rows, which desyncs the delta mirrors; use the "
-                "default WireConfig() with streaming engines")
+        # Double-buffered phase overlap (DESIGN §3.14): defer each phase's
+        # encoded ship one phase, so the all_to_all of color c-1's rows is
+        # issued before — and carries no data dependency into — color c's
+        # local gather⊕combine.  Merges are delayed one phase, never
+        # dropped; the last phase of a step always flushes synchronously.
+        self.overlap = bool(overlap)
         # has-cacher masks: rows some remote machine caches (the only rows
         # dirtiness can ever drain for — interior rows never ship).  Derived
         # from the final (post-slack) send tables: entry o*(S*B)+d*B+b ships
@@ -522,7 +535,8 @@ class ShardEngineBase:
         a new mesh/placement; subclasses extend with their own knobs."""
         return dict(tolerance=self.tolerance, sync_ops=self.sync_ops,
                     use_fused=self._use_fused,
-                    gas_interpret=self._gas_interpret, wire=self.wire)
+                    gas_interpret=self._gas_interpret, wire=self.wire,
+                    overlap=self.overlap)
 
     def clone_for_placement(self, graph: DataGraph, mesh,
                             machine_of: np.ndarray, *,
@@ -679,7 +693,7 @@ class ShardEngineBase:
             recv_changed = a2a(ship)
             return recv, recv_changed, jnp.sum(ship, dtype=jnp.int32)
 
-        def phase_update(tb, carry, active):
+        def phase_update(tb, carry, active, defer=False):
             # a stalled machine (membership: dead or hung) executes no
             # updates — and, through the versioned exchange below, ships
             # nothing, so poisoned data never leaves it (DESIGN §3.13)
@@ -691,6 +705,29 @@ class ShardEngineBase:
             tv, te = carry["tv"], carry["te"]
             bv, be = carry["bv"], carry["be"]
             wire_st = dict(carry["wire"]) if use_delta else carry["wire"]
+
+            # Double-buffered overlap (DESIGN §3.14): the previous phase
+            # deferred its encoded rows into ``carry["pkt"]``; issue their
+            # all_to_all here, before this phase's gather⊕combine.  Nothing
+            # between here and the merge below reads the result, so the
+            # collective carries no data dependency into the local compute
+            # and XLA overlaps the two.  The recv merges after the compute
+            # — delivery is delayed one phase, never dropped.
+            pkt = carry.get("pkt")
+            pkt_recv = pkt_ch = epkt_recv = epkt_ch = None
+            if pkt is not None:
+                pkt_recv, pkt_ch, shipped = exchange(
+                    pkt["payload"], pkt["ship"], tb["send_idx"],
+                    tb["send_mask"], B)
+                tv = tv + shipped
+                bv = bv + shipped * payload_row_nbytes(pkt["payload"])
+                if "epayload" in pkt:
+                    epkt_recv, epkt_ch, eshipped = exchange(
+                        pkt["epayload"], pkt["eship"], tb["esend_idx"],
+                        tb["esend_mask"], EB)
+                    te = te + eshipped
+                    be = be + eshipped * payload_row_nbytes(
+                        pkt["epayload"])
 
             sl, rl = tb["senders_local"], tb["receivers_local"]
             emask = tb["edge_mask"]
@@ -766,6 +803,9 @@ class ShardEngineBase:
             # quantized rows — absolute (replace-merge) without error
             # feedback, else deltas against the owner-side mirror of what
             # every cache holds, with top-k residual selection (§3.14).
+            pkt_out = None
+            ghost_contrib = jnp.zeros(S * B, jnp.float32)
+            merged_ch = jnp.zeros(S * B, bool)
             if use_delta:
                 # contrib of cached rows accrues until a ship delivers it
                 cpend = wire_st["cpend"] + jnp.where(
@@ -798,11 +838,18 @@ class ShardEngineBase:
                            "contrib": encode_rows(cpend, codec)}
                 if prog.has_edge_out:
                     payload["acc"] = encode_payload(adelta, codec)
-                recv, recv_ch, shipped = exchange(
-                    payload, ship_rows, tb["send_idx"], tb["send_mask"],
-                    B)
-                tv = tv + shipped
-                bv = bv + shipped * payload_row_nbytes(payload)
+                if defer:
+                    # overlap: the ship rides the *next* phase's top-of-
+                    # phase all_to_all; the owner folds now (below), so
+                    # these rows are in flight, not pending
+                    recv = recv_ch = None
+                    pkt_out = {"payload": payload, "ship": ship_rows}
+                else:
+                    recv, recv_ch, shipped = exchange(
+                        payload, ship_rows, tb["send_idx"],
+                        tb["send_mask"], B)
+                    tv = tv + shipped
+                    bv = bv + shipped * payload_row_nbytes(payload)
                 # owner-side error feedback: fold the decoded (= applied)
                 # delta into the mirrors; the quantization residue stays
                 # in vown − vref / cpend and re-ships until < wire_tol
@@ -815,40 +862,68 @@ class ShardEngineBase:
                     wire_st["aref"] = tree_add_where(
                         wire_st["aref"], dec_own["acc"], ship_rows)
                     wire_st["alast"] = alast
-                # receiver side: additive delta merge (owner folded the
-                # identical decode into its mirror, so caches track it)
-                dec = decode_payload(recv, codec)
-                vghost = tree_add_where(vghost, dec["v"], recv_ch)
-                ghost_contrib = jnp.where(recv_ch, dec["contrib"], 0.0)
-                if prog.has_edge_out:
-                    wire_st["aghost"] = tree_add_where(
-                        wire_st["aghost"], dec["acc"], recv_ch)
+                # receiver side: additive delta merges — last phase's
+                # deferred packet first, then this phase's own rows
+                # (owner folded the identical decodes into its mirrors,
+                # so caches track them; addition commutes anyway)
+                for r_, ch_ in ((pkt_recv, pkt_ch), (recv, recv_ch)):
+                    if r_ is None:
+                        continue
+                    d_ = decode_payload(r_, codec)
+                    vghost = tree_add_where(vghost, d_["v"], ch_)
+                    ghost_contrib = ghost_contrib + jnp.where(
+                        ch_, d_["contrib"], 0.0)
+                    if prog.has_edge_out:
+                        wire_st["aghost"] = tree_add_where(
+                            wire_st["aghost"], d_["acc"], ch_)
+                    merged_ch = jnp.logical_or(merged_ch, ch_)
+                recv_acc = wire_st["aghost"] if prog.has_edge_out \
+                    else None
             else:
                 raw = {"v": vown, "contrib": contrib}
                 if prog.has_edge_out:
                     raw["acc"] = acc
                 payload = raw if codec == "f32" \
                     else encode_payload(raw, codec)
-                recv, recv_ch, shipped = exchange(
-                    payload, active, tb["send_idx"], tb["send_mask"], B)
-                tv = tv + shipped
-                bv = bv + shipped * payload_row_nbytes(payload)
-                dec = recv if codec == "f32" \
-                    else decode_payload(recv, codec)
+                if defer:
+                    recv = recv_ch = None
+                    pkt_out = {"payload": payload, "ship": active}
+                else:
+                    recv, recv_ch, shipped = exchange(
+                        payload, active, tb["send_idx"], tb["send_mask"],
+                        B)
+                    tv = tv + shipped
+                    bv = bv + shipped * payload_row_nbytes(payload)
+                # replace-merges, deferred packet first (a row ships at
+                # most once per step here — one color per vertex — so the
+                # two merges never collide)
+                recv_acc = jax.tree.map(
+                    lambda a: jnp.zeros((S * B,) + a.shape[1:], a.dtype),
+                    acc) if prog.has_edge_out else None
+                for r_, ch_ in ((pkt_recv, pkt_ch), (recv, recv_ch)):
+                    if r_ is None:
+                        continue
+                    d_ = r_ if codec == "f32" else decode_payload(r_,
+                                                                  codec)
 
-                def _merge(old, new):
-                    m = recv_ch.reshape((-1,) + (1,) * (old.ndim - 1))
-                    return jnp.where(m, new.astype(old.dtype), old)
+                    def _merge(old, new, ch=ch_):
+                        m = ch.reshape((-1,) + (1,) * (old.ndim - 1))
+                        return jnp.where(m, new.astype(old.dtype), old)
 
-                vghost = jax.tree.map(_merge, vghost, dec["v"])
-                ghost_contrib = jnp.where(recv_ch, dec["contrib"], 0.0)
+                    vghost = jax.tree.map(_merge, vghost, d_["v"])
+                    ghost_contrib = ghost_contrib + jnp.where(
+                        ch_, d_["contrib"], 0.0)
+                    if prog.has_edge_out:
+                        recv_acc = jax.tree.map(_merge, recv_acc,
+                                                d_["acc"])
+                    merged_ch = jnp.logical_or(merged_ch, ch_)
 
             # live snapshot: record post-cut rows (updated-after-save own
             # rows, rows arriving from already-saved remote vertices)
             # BEFORE any later capture could read them
             snap = carry["snap"]
             if snap is not None:
-                snap = mark_stale(snap, active, recv_ch)
+                snap = mark_stale(snap, active, merged_ch)
 
             # T ← (T \ executed) ∪ T': winners consume their priority,
             # losers/remotes keep theirs (a still-queued lock request).
@@ -874,12 +949,11 @@ class ShardEngineBase:
                 v_all2 = jax.tree.map(
                     lambda o, g: jnp.concatenate([o, g], 0), vown,
                     vghost)
-                recv_acc = wire_st["aghost"] if use_delta else dec["acc"]
                 acc_all = jax.tree.map(
                     lambda a, g: jnp.concatenate(
                         [a, g.astype(a.dtype)], 0), acc, recv_acc)
                 changed_all = jnp.concatenate(
-                    [active, recv_ch.astype(active.dtype)])
+                    [active, merged_ch.astype(active.dtype)])
                 ctx2 = ctx._replace(
                     src=jax.tree.map(lambda x: x[sl], v_all2),
                     dst=jax.tree.map(lambda x: x[rl], vown))
@@ -910,35 +984,54 @@ class ShardEngineBase:
                             tree_rows_maxabs(edelta) > wtol,
                             jnp.logical_and(tb["ehas_cacher"], live))
                         epayload = encode_payload(edelta, codec)
-                        erecv, erecv_ch, eshipped = exchange(
-                            epayload, edirty, tb["esend_idx"],
-                            tb["esend_mask"], EB)
-                        te = te + eshipped
-                        be = be + eshipped * payload_row_nbytes(epayload)
+                        if defer:
+                            erecv = erecv_ch = None
+                            pkt_out["epayload"] = epayload
+                            pkt_out["eship"] = edirty
+                        else:
+                            erecv, erecv_ch, eshipped = exchange(
+                                epayload, edirty, tb["esend_idx"],
+                                tb["esend_mask"], EB)
+                            te = te + eshipped
+                            be = be + eshipped * payload_row_nbytes(
+                                epayload)
                         wire_st["eref"] = tree_add_where(
                             wire_st["eref"],
                             decode_payload(epayload, codec), edirty)
-                        eghost = tree_add_where(
-                            eghost, decode_payload(erecv, codec),
-                            erecv_ch)
+                        for r_, ch_ in ((epkt_recv, epkt_ch),
+                                        (erecv, erecv_ch)):
+                            if r_ is None:
+                                continue
+                            eghost = tree_add_where(
+                                eghost, decode_payload(r_, codec), ch_)
                     else:
                         epayload = edata if codec == "f32" \
                             else encode_payload(edata, codec)
-                        erecv, erecv_ch, eshipped = exchange(
-                            epayload, wmask, tb["esend_idx"],
-                            tb["esend_mask"], EB)
-                        te = te + eshipped
-                        be = be + eshipped * payload_row_nbytes(epayload)
-                        edec = erecv if codec == "f32" \
-                            else decode_payload(erecv, codec)
+                        if defer:
+                            erecv = erecv_ch = None
+                            pkt_out["epayload"] = epayload
+                            pkt_out["eship"] = wmask
+                        else:
+                            erecv, erecv_ch, eshipped = exchange(
+                                epayload, wmask, tb["esend_idx"],
+                                tb["esend_mask"], EB)
+                            te = te + eshipped
+                            be = be + eshipped * payload_row_nbytes(
+                                epayload)
+                        for r_, ch_ in ((epkt_recv, epkt_ch),
+                                        (erecv, erecv_ch)):
+                            if r_ is None:
+                                continue
+                            ed_ = r_ if codec == "f32" \
+                                else decode_payload(r_, codec)
 
-                        def _emerge(old, new):
-                            m = erecv_ch.reshape(
-                                (-1,) + (1,) * (old.ndim - 1))
-                            return jnp.where(m, new.astype(old.dtype),
-                                             old)
+                            def _emerge(old, new, ch=ch_):
+                                m = ch.reshape(
+                                    (-1,) + (1,) * (old.ndim - 1))
+                                return jnp.where(m, new.astype(old.dtype),
+                                                 old)
 
-                        eghost = jax.tree.map(_emerge, eghost, edec)
+                            eghost = jax.tree.map(_emerge, eghost, ed_)
 
             if use_delta:
                 # backlog: rows still owed to some cache (top-k leftovers,
@@ -965,7 +1058,8 @@ class ShardEngineBase:
             count = count + active.astype(jnp.int32)
             return dict(vown=vown, vghost=vghost, edata=edata, eghost=eghost,
                         prio=prio, count=count, tv=tv, te=te, bv=bv, be=be,
-                        wire=wire_st, snap=snap, glob=carry.get("glob"))
+                        wire=wire_st, snap=snap, glob=carry.get("glob"),
+                        pkt=pkt_out)
 
         return exchange, phase_update
 
@@ -1254,6 +1348,7 @@ class DistributedEngine(ShardEngineBase):
     def _make_step(self):
         _, phase_update = self._make_phase_helpers()
         num_colors, tol = self.num_colors, self.tolerance
+        overlap = self.overlap
 
         def body(state: DistState, tb: Dict[str, jnp.ndarray]) -> DistState:
             carry = dict(vown=state.vown, vghost=state.vghost,
@@ -1263,12 +1358,20 @@ class DistributedEngine(ShardEngineBase):
                          bv=state.traffic_bytes_v,
                          be=state.traffic_bytes_e,
                          wire=state.wire,
-                         snap=state.snap, glob=state.globals_)
+                         snap=state.snap, glob=state.globals_,
+                         pkt=None)
+            # overlap is a trace-time choice, and it stands down while a
+            # snapshot is live: the marker wave's channel accounting
+            # assumes each phase's sends merge in-phase (§3.10).  The last
+            # color never defers, so no packet outlives the step and the
+            # run() termination check stays exact.
+            defer_ok = overlap and state.snap is None
             for c in range(num_colors):
                 active = jnp.logical_and(
                     tb["own_mask"],
                     sweep_mask(tb["colors_own"], carry["prio"], tol, c))
-                carry = phase_update(tb, carry, active)
+                carry = phase_update(tb, carry, active,
+                                     defer=defer_ok and c < num_colors - 1)
             return DistState(
                 vown=carry["vown"], vghost=carry["vghost"],
                 edata=carry["edata"], eghost=carry["eghost"],
@@ -1281,3 +1384,89 @@ class DistributedEngine(ShardEngineBase):
                 wire=carry["wire"], globals_=state.globals_)
 
         return self._wrap_step(body)
+
+
+# ---------------------------------------------------------------------------
+# overlap audit (DESIGN §3.14): jaxpr-level schedule assertion
+# ---------------------------------------------------------------------------
+
+def exchange_overlap_report(engine, state: Optional[DistState] = None
+                            ) -> Dict[str, int]:
+    """Traces one engine step and audits the exchange schedule at the
+    jaxpr level — the §3.14 "collective issued before the dependent
+    gather" assertion, in checkable form.
+
+    Inside the shard_map body, equations are walked in program order.
+    Collectives issued back-to-back (no ``gather`` between them) form one
+    exchange *group* — the per-phase ship.  Every ``gather`` that follows
+    a group is classified against the most recent group: *dependent* if
+    it transitively consumes any of the group's outputs (it must wait for
+    the wire), *independent* if it consumes none (XLA is free to run it
+    concurrently with the in-flight collectives).
+
+    In the sequential build each phase's exchange merges before the next
+    color's local gather⊕combine, so those gathers are dependent.  The
+    double-buffered overlap build issues color c−1's deferred packet at
+    the top of phase c and merges it only *after* the local compute, so
+    phase c's gathers are independent of the group in flight.  Compared
+    at equal collective counts, overlap therefore strictly raises
+    ``independent_gathers`` and strictly lowers ``dependent_gathers`` —
+    that pairwise comparison is the assertion tests and the benchmark
+    make (absolute counts vary with program and color count).
+
+    Trace with ``use_fused=False`` engines: the fused path hides the
+    local gather inside a ``pallas_call``.
+    """
+    if state is None:
+        state = engine.init()
+    closed = jax.make_jaxpr(engine._make_step())(state, engine._tables)
+
+    def _subjaxprs(eqn):
+        for v in eqn.params.values():
+            vs = v if isinstance(v, (tuple, list)) else (v,)
+            for w in vs:
+                inner = getattr(w, "jaxpr", w)
+                if hasattr(inner, "eqns"):
+                    yield inner
+
+    def _find_body(j):
+        if any(e.primitive.name == "all_to_all" for e in j.eqns):
+            return j
+        for e in j.eqns:
+            for sj in _subjaxprs(e):
+                hit = _find_body(sj)
+                if hit is not None:
+                    return hit
+        return None
+
+    body = _find_body(closed.jaxpr)
+    report = {"all_to_all": 0, "independent_gathers": 0,
+              "dependent_gathers": 0}
+    if body is None:
+        return report
+    deps: Dict[int, frozenset] = {}
+    group: frozenset = frozenset()
+    last_sig = None
+    nid = 0
+    for eqn in body.eqns:
+        d = frozenset()
+        for v in eqn.invars:
+            d |= deps.get(id(v), frozenset())
+        name = eqn.primitive.name
+        if name == "all_to_all":
+            if last_sig == "gather":
+                group = frozenset()
+            group |= frozenset([nid])
+            d |= frozenset([nid])
+            nid += 1
+            report["all_to_all"] += 1
+            last_sig = "a2a"
+        elif name == "gather":
+            if group:
+                key = ("dependent_gathers" if d & group
+                       else "independent_gathers")
+                report[key] += 1
+            last_sig = "gather"
+        for v in eqn.outvars:
+            deps[id(v)] = d
+    return report

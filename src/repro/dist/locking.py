@@ -65,6 +65,15 @@ class DistributedLockingEngine(ShardEngineBase):
         **kw,
     ):
         super().__init__(program, graph, mesh, **kw)
+        if self.overlap:
+            # one exchange phase per pipeline round: there is no next
+            # phase to defer a packet into, and deferring across rounds
+            # would let a lock grant read the previous round's stale
+            # ghost ranks — reject loudly instead of no-opping silently
+            raise ValueError(
+                "overlap=True is a multi-phase (chromatic) engine knob; "
+                "DistributedLockingEngine arbitrates and ships within a "
+                "single phase per round")
         self.serializable = bool(serializable)
         self.radius = program.consistency.exclusion_radius
         if self.serializable and self.radius >= 1 and \

@@ -29,6 +29,14 @@ Streaming engines are refused here: their capacity layout and patch state
 cannot yet be cloned onto a new placement — use the offline
 ``stream.recovery.recover_from_journal`` (cut + journal replay), which is
 elastic across any machine count.
+
+Quantized wire (DESIGN §3.14): ``clone_for_placement`` carries the wire
+config and ``init`` re-seeds the error-feedback mirrors consistently from
+the carried rows (owner and every cache gather the same values, nothing
+pending).  The rebuild therefore *delivers* any unshipped delta exactly —
+but its scheduling signal (contribs owed to remote scopes) would be
+silently dropped, so every migration re-seeds the scopes of rows whose
+mirrors still carried pending residual (``_reseed_wire_pending``).
 """
 from __future__ import annotations
 
@@ -92,6 +100,57 @@ def _atom_placement_of(engine: ShardEngineBase) -> np.ndarray:
     placement = np.zeros(int(atom_of.max()) + 1, np.int32)
     placement[atom_of] = engine.layout.machine_of
     return placement
+
+
+def _reseed_wire_pending(engine: ShardEngineBase, state: DistState,
+                         prio: np.ndarray) -> np.ndarray:
+    """Re-seeds the scopes of rows whose §3.14 error-feedback mirrors still
+    carry nonzero pending residual (``vown−vref``, ``cpend``,
+    ``alast−aref``, ``edata−eref``).  The rebuild's ``init`` delivers the
+    *data* of those deltas exactly, but their scheduling signal — remote
+    scopes still owed a contrib-driven priority bump — would be silently
+    lost with the mirrors; without the re-seed a migration under top-k
+    wire can orphan deferred deltas and converge to the wrong fixed point.
+    No-op (identity) under the default wire.  NaN rows (a dead machine's
+    poison) never compare dirty, so they cannot leak a bogus re-seed."""
+    if getattr(state, "wire", None) is None:
+        return prio
+    lay = engine.layout
+    st = engine.graph.structure
+    w = jax.tree.map(np.asarray, state.wire)
+    wtol = engine.wire.resolve_tol(engine.tolerance)
+
+    def rows_gap(a, b):
+        out = None
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+            d = np.abs(np.asarray(x, np.float32)
+                       - np.asarray(y, np.float32))
+            d = d.reshape(len(d), -1).max(axis=1)
+            out = d if out is None else np.maximum(out, d)
+        return out
+
+    dirty = rows_gap(jax.tree.map(np.asarray, state.vown), w["vref"]) > wtol
+    dirty |= np.abs(np.asarray(w["cpend"])) > wtol
+    if "alast" in w:
+        dirty |= rows_gap(w["alast"], w["aref"]) > wtol
+    mask = np.zeros(st.n_vertices, bool)
+    sel = (lay.own_gid >= 0) & dirty
+    mask[lay.own_gid[sel]] = True
+    if "eref" in w:
+        epend = rows_gap(jax.tree.map(np.asarray, state.edata),
+                         w["eref"]) > wtol
+        slots = lay.erow_gid[np.nonzero(epend)[0]]
+        slots = slots[slots >= 0]
+        mask[np.asarray(st.senders)[slots]] = True
+        mask[np.asarray(st.receivers)[slots]] = True
+    if not mask.any():
+        return prio
+    seed = np.asarray(
+        engine.program.initial_priority(st.n_vertices), np.float32)
+    bumped, _ = reseed_scopes(
+        prio, mask, np.asarray(st.senders), np.asarray(st.receivers),
+        np.ones(st.n_edges, bool), st.n_vertices, seed)
+    return np.asarray(bumped, np.float32)
 
 
 def _carry_stall(old: ShardEngineBase, new: ShardEngineBase,
@@ -184,7 +243,8 @@ def migrate_leave(
     prio_j, scope = reseed_scopes(
         prio, lost_v, np.asarray(st.senders), np.asarray(st.receivers),
         np.ones(st.n_edges, bool), st.n_vertices, seed)
-    prio_new = np.asarray(prio_j, np.float32)
+    prio_new = _reseed_wire_pending(engine, state,
+                                    np.asarray(prio_j, np.float32))
     scope_mask = np.asarray(scope, bool)
 
     placement = rebalance_placement(
@@ -229,6 +289,10 @@ def migrate_join(
             f"{engine.axis!r}, got {S_new}")
 
     v, e, prio = _stitched(engine, state)
+    before = prio.copy()
+    # pure handoff under the default wire; a lossy wire's pending-residual
+    # scopes re-seed so unshipped deltas keep their scheduling signal
+    prio = _reseed_wire_pending(engine, state, prio)
     old_placement = _atom_placement_of(engine)
     placement = rebalance_placement(
         atom_meta_index(engine.graph.structure, engine.atom_of),
@@ -237,12 +301,14 @@ def migrate_join(
     new_engine, new_state = _rebuild(
         engine, mesh, placement.astype(np.int32), v, e, prio, keep)
     moved = placement != old_placement
+    tol = engine.tolerance
     return new_engine, new_state, {
         "joined_machine": S,
         "moved_atoms": int(moved.sum()),
         "moved_vertices": int(np.isin(
             np.asarray(engine.atom_of), np.nonzero(moved)[0]).sum()),
-        "survivor_rescheduled": 0,  # by construction: prio is carried
+        # 0 by construction under the default wire: prio is carried
+        "survivor_rescheduled": int(((prio > tol) & (before <= tol)).sum()),
         "updates_before": int(np.nansum(np.asarray(
             state.update_count, np.float64))),
     }
@@ -268,6 +334,7 @@ def shed_atoms(
         raise ValueError(f"machine {machine} out of range (S={S})")
 
     v, e, prio = _stitched(engine, state)
+    prio = _reseed_wire_pending(engine, state, prio)
     atom_of = np.asarray(engine.atom_of)
     k = int(atom_of.max()) + 1
     placement = _atom_placement_of(engine).copy()

@@ -115,23 +115,35 @@ class QRows:
 def _row_scale_exp(x: jnp.ndarray) -> jnp.ndarray:
     """Per-row int8 power-of-two exponent: smallest e with
     ``max|row| / 2^e <= 127``; zero rows get the minimum exponent so they
-    encode (and decode) to exact zeros."""
-    m = jnp.max(jnp.abs(x.astype(jnp.float32)).reshape(x.shape[0], -1),
-                axis=1)
+    encode (and decode) to exact zeros.  Non-finite components (a dead
+    machine's NaN-poisoned state riding a stalled-but-not-yet-detected
+    shard) are excluded from the max: poison must never pick the scale."""
+    a = jnp.abs(x.astype(jnp.float32)).reshape(x.shape[0], -1)
+    a = jnp.where(jnp.isfinite(a), a, 0.0)
+    m = jnp.max(a, axis=1)
     e = jnp.ceil(jnp.log2(jnp.where(m > 0, m, 1.0) / 127.0))
     return jnp.clip(jnp.where(m > 0, e, -126.0), -126, 127).astype(jnp.int8)
 
 
 def encode_rows(x: jnp.ndarray, codec: str):
-    """[R, ...] float rows -> wire leaf (f32 passthrough / bf16 / QRows)."""
+    """[R, ...] float rows -> wire leaf (f32 passthrough / bf16 / QRows).
+
+    NaN containment: for the lossy codecs, non-finite components encode
+    as exact zeros (``round(nan).astype(int8)`` is undefined in XLA and
+    must never reach survivors' caches; the f32 path is the seed wire and
+    stays a bit-exact passthrough, guarded by the stall gate alone).
+    """
     if codec == "f32":
         return x.astype(jnp.float32)
     if codec == "bf16":
-        return x.astype(jnp.bfloat16)
+        x32 = x.astype(jnp.float32)
+        return jnp.where(jnp.isfinite(x32), x32, 0.0).astype(jnp.bfloat16)
     e = _row_scale_exp(x)
     scale = jnp.exp2(e.astype(jnp.float32))
     scale = scale.reshape((-1,) + (1,) * (x.ndim - 1))
-    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    x32 = x.astype(jnp.float32)
+    x32 = jnp.where(jnp.isfinite(x32), x32, 0.0)
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127)
     return QRows(q=q.astype(jnp.int8), e=e)
 
 
@@ -146,6 +158,21 @@ def decode_rows(wire, codec: str) -> jnp.ndarray:
     scale = jnp.exp2(wire.e.astype(jnp.float32))
     scale = scale.reshape((-1,) + (1,) * (wire.q.ndim - 1))
     return wire.q.astype(jnp.float32) * scale
+
+
+def encdec_rows(x, codec: str) -> np.ndarray:
+    """``decode_rows(encode_rows(x))`` as host-side f32 numpy — the exact
+    rows a receiver reconstructs from the wire.  Identity for f32.  Delta
+    splices warm fresh ghost cache lines AND the owner-side EF mirrors
+    with this, so owner and cacher stay bit-identical and the residual
+    ``x - encdec_rows(x)`` is carried as pending delta (DESIGN §3.14)."""
+    x = np.asarray(x, np.float32)
+    if codec == "f32":
+        return x
+    flat = x.reshape(len(x), -1) if x.ndim > 1 else x.reshape(len(x), 1)
+    out = np.asarray(decode_rows(encode_rows(jnp.asarray(flat), codec),
+                                 codec), np.float32)
+    return out.reshape(x.shape)
 
 
 def encode_payload(tree: Pytree, codec: str) -> Pytree:

@@ -27,7 +27,20 @@ back to the inert self-loop of the slack layout (swap-with-last keeps the
 receiver region contiguous, so the data row of at most one surviving edge
 moves), ``DelVertex`` cascades over its incident edges and returns the
 slot to spare capacity, and the *former* distance-1 neighborhood is
-re-seeded so stale contributions drain.  Same-color delta edges are
+re-seeded so stale contributions drain.
+
+Quantized wire (DESIGN §3.14) is fully supported: under a lossy
+``WireConfig`` every splice patches the owner-side error-feedback mirrors
+in lockstep with the ghost caches — a fresh cache line, its ``vref``/
+``aref`` mirror row and every *existing* line of the same vertex warm with
+the **encoded-then-decoded** owner row (owner and all cachers stay
+bit-identical; the residual against the exact owner value rides the
+pending delta and ships next step), deletions zero the mirror rows, data
+writes put the exact value on the owner and the wire image on caches and
+mirrors, and ghost-slab growth re-lays the ``aghost`` mirror together with
+the cache slabs.  ``regrow_engine`` re-seeds the scopes of rows with
+nonzero pending residual, so deferred top-k deltas are never orphaned by
+a rebuild.  Same-color delta edges are
 repaired at apply time (``_repair_colors``) instead of degrading to
 Jacobi reads.  ``apply_delta`` is fenced against a live Chandy-Lamport
 marker wave (``SnapshotInFlightError``), and when a ``DeltaJournal`` is
@@ -50,7 +63,9 @@ from repro.core.coloring import coloring_for
 from repro.core.engine_base import Engine, EngineState
 from repro.core.graph import DataGraph
 from repro.core.scheduler import reseed_scopes
-from repro.dist.engine import DistState, DistributedEngine, ShardEngineBase
+from repro.dist.engine import (DistState, DistributedEngine,
+                               ShardEngineBase, _expand_slabs)
+from repro.dist.wire import encdec_rows
 from repro.stream.delta import (AddEdge, AddVertex, DelEdge, DeltaBatch,
                                 DeltaJournal, DelVertex, SetEdgeData,
                                 SetVertexData)
@@ -426,6 +441,16 @@ def _restore_sg(sg: StreamingGraph, cp: dict) -> None:
     sg._next_vid = cp["next_vid"]
 
 
+def _relay_slab_rows(x: np.ndarray, S: int, b: int, nb: int) -> np.ndarray:
+    """Re-lays a ``[S*S*b, ...]`` slab-shaped state/mirror array to the
+    per-pair budget ``nb`` (new slots zero) — the host twin of the layout's
+    ``_pad_slab`` for row-batched state leaves."""
+    a = x.reshape((S * S, b) + x.shape[1:])
+    out = np.zeros((S * S, nb) + x.shape[1:], x.dtype)
+    out[:, :b] = a
+    return out.reshape((S * S * nb,) + x.shape[1:])
+
+
 class _DistPatcher:
     """Incremental layout surgery for the shard_map engines.
 
@@ -433,6 +458,15 @@ class _DistPatcher:
     hold a cache line, which slots are free) so a delta edge can claim a
     slot without scanning — the device tables and state rows are patched
     to match and re-uploaded once per batch.
+
+    Under a lossy wire the §3.14 error-feedback mirrors (``vref``/``cpend``
+    /``alast``/``aref``/``aghost``/``eref``) ride the same host pass
+    (``self._wire``, flattened per component) and every splice patches them
+    in lockstep with the caches — see the module docstring for the
+    protocol.  When a (dest, owner) pair runs out of slack cache lines the
+    slabs grow in place (``_grow_slabs``) instead of failing the batch; the
+    per-batch checkpoint covers budgets, so a later failure in the same
+    batch rolls the expansion back with everything else.
     """
 
     def __init__(self, engine: ShardEngineBase):
@@ -456,6 +490,11 @@ class _DistPatcher:
         if engine._use_fused:
             self.e_pad = lay.tables["gas_send"].size // self.S
         self.changed: Set[str] = set()
+        # per-apply() scratch: flattened host leaves of the state slabs and
+        # of the §3.14 wire mirrors (None between batches / default wire)
+        self._leaves: Optional[Dict[str, List[np.ndarray]]] = None
+        self._wire: Optional[Dict[str, tuple]] = None
+        self._expanded = False
 
     def _scan_slab(self, slab_gid, budget, slot_map, rows_map, free_map):
         S = self.S
@@ -483,17 +522,67 @@ class _DistPatcher:
             dict(self.eghost_slot),
             {k: list(v) for k, v in self.eghost_rows.items()},
             {k: list(v) for k, v in self.eghost_free.items()},
+            (lay.budget, lay.e_budget),
         )
 
     def _restore(self, cp):
         lay = self.engine.layout
-        (sgcp, tables, gg, egg, gs, gr, gf, egs, egr, egf) = cp
+        (sgcp, tables, gg, egg, gs, gr, gf, egs, egr, egf, budgets) = cp
         _restore_sg(self.sg, sgcp)
         lay.tables = tables
         lay.ghost_gid = gg
         lay.eghost_gid = egg
         self.ghost_slot, self.ghost_rows, self.ghost_free = gs, gr, gf
         self.eghost_slot, self.eghost_rows, self.eghost_free = egs, egr, egf
+        # roll back any in-batch slab expansion: the checkpointed tables
+        # and gid maps already carry the old shapes, only the budgets (and
+        # their cached copies) need resetting — the device tables were
+        # never touched (refresh happens on success only)
+        lay.budget, lay.e_budget = budgets
+        self.B, self.EB = lay.budget, lay.e_budget
+
+    # -- in-batch slab growth -------------------------------------------------
+    def _grow_slabs(self, extra_b: int, extra_eb: int) -> None:
+        """Grows every (dest, owner) ghost slab in place instead of failing
+        the batch: routes through ``_expand_slabs`` (the same remap path
+        construction-time slack uses), re-lays the slab-shaped state leaves
+        and the ``aghost`` wire mirror, and rebuilds the slab maps.  Shapes
+        change, so the jitted step retraces once on success — within-slack
+        batches stay zero-recompile."""
+        lay = self.engine.layout
+        S = self.S
+        old_b, old_eb = lay.budget, lay.e_budget
+        _expand_slabs(lay, int(extra_b), int(extra_eb))
+        if extra_b > 0:
+            nb = lay.budget
+            vgh = self._leaves["vghost"]
+            for i, x in enumerate(vgh):
+                vgh[i] = _relay_slab_rows(x, S, old_b, nb)
+            if self._wire is not None and "aghost" in self._wire:
+                agh = self._wire["aghost"][0]
+                for i, x in enumerate(agh):
+                    agh[i] = _relay_slab_rows(x, S, old_b, nb)
+            self.B = nb
+            self.ghost_slot, self.ghost_rows, self.ghost_free = {}, {}, {}
+            self._scan_slab(lay.ghost_gid, nb, self.ghost_slot,
+                            self.ghost_rows, self.ghost_free)
+        if extra_eb > 0 and lay.has_rev:
+            neb = lay.e_budget
+            egh = self._leaves["eghost"]
+            for i, x in enumerate(egh):
+                egh[i] = _relay_slab_rows(x, S, old_eb, neb)
+            self.EB = neb
+            self.eghost_slot, self.eghost_rows, self.eghost_free = {}, {}, {}
+            self._scan_slab(lay.eghost_gid, neb, self.eghost_slot,
+                            self.eghost_rows, self.eghost_free)
+        self._expanded = True
+
+    # -- §3.14 mirror splicing ------------------------------------------------
+    def _enc1(self, val) -> np.ndarray:
+        """One row's wire image: exactly what a receiver decodes from the
+        wire for this row (``encdec_rows`` on a single row)."""
+        x = np.asarray(val, np.float32)
+        return encdec_rows(x[None], self.engine.wire.codec)[0]
 
     # -- slab allocation -----------------------------------------------------
     def _vertex_ghost(self, dest: int, vid: int, vown, vghost) -> int:
@@ -506,8 +595,13 @@ class _DistPatcher:
         if key not in self.ghost_slot:
             free = self.ghost_free.get((dest, owner), [])
             if not free:
-                raise CapacityError(
-                    f"ghost slab ({dest} <- {owner}) vertex cache lines")
+                # slack exhausted: grow the slabs in place (one retrace on
+                # success) instead of failing the whole batch
+                self._grow_slabs(max(1, self.B), 0)
+                free = self.ghost_free.get((dest, owner), [])
+                if not free:  # pragma: no cover - growth always adds slots
+                    raise CapacityError(
+                        f"ghost slab ({dest} <- {owner}) vertex cache lines")
             b = free.pop(0)
             self.ghost_slot[key] = b
             S, B = self.S, self.B
@@ -520,8 +614,36 @@ class _DistPatcher:
             lay.tables["send_mask"][send_row] = True
             self.changed.update(("send_idx", "send_mask"))
             own_row = int(lay.row_of[vid])
-            for gleaf, oleaf in zip(vghost, vown):
-                gleaf[row] = oleaf[own_row]
+            if self._wire is not None:
+                # §3.14 mirror splice: warm the new line AND re-anchor the
+                # owner mirror + every existing cache line of ``vid`` at
+                # the wire image of the owner row, so owner and all cachers
+                # agree bit-identically; the residual vs. the exact owner
+                # value rides the pending delta and ships next step
+                rows = self.ghost_rows[vid]
+                first = len(rows) == 1
+                vref = self._wire["vref"][0]
+                for gleaf, oleaf, rleaf in zip(vghost, vown, vref):
+                    x = self._enc1(oleaf[own_row])
+                    rleaf[own_row] = x
+                    for rw in rows:
+                        gleaf[rw] = x
+                if first:
+                    # no cacher accumulated contribs while unmapped; a
+                    # stale residual from a long-gone cacher must not be
+                    # delivered to the new one
+                    self._wire["cpend"][0][0][own_row] = 0.0
+                if "alast" in self._wire:
+                    for al, ar, ag in zip(self._wire["alast"][0],
+                                          self._wire["aref"][0],
+                                          self._wire["aghost"][0]):
+                        a = self._enc1(al[own_row])
+                        ar[own_row] = a
+                        for rw in rows:
+                            ag[rw] = a
+            else:
+                for gleaf, oleaf in zip(vghost, vown):
+                    gleaf[row] = oleaf[own_row]
         b = self.ghost_slot[key]
         return self.n_loc + int(lay.machine_of[vid]) * self.B + b
 
@@ -534,8 +656,11 @@ class _DistPatcher:
         if key not in self.eghost_slot:
             free = self.eghost_free.get((dest, owner), [])
             if not free:
-                raise CapacityError(
-                    f"ghost slab ({dest} <- {owner}) edge cache lines")
+                self._grow_slabs(0, max(1, self.EB))
+                free = self.eghost_free.get((dest, owner), [])
+                if not free:  # pragma: no cover - growth always adds slots
+                    raise CapacityError(
+                        f"ghost slab ({dest} <- {owner}) edge cache lines")
             b = free.pop(0)
             self.eghost_slot[key] = b
             S, EB = self.S, self.EB
@@ -547,8 +672,18 @@ class _DistPatcher:
             lay.tables["esend_idx"][send_row] = lrow - owner * self.e_loc
             lay.tables["esend_mask"][send_row] = True
             self.changed.update(("esend_idx", "esend_mask"))
-            for gleaf, oleaf in zip(eghost, edata):
-                gleaf[row] = oleaf[lrow]
+            if self._wire is not None and "eref" in self._wire:
+                # edge mirror splice: same bit-identical warm as vertices
+                rows = self.eghost_rows[slot]
+                for gleaf, oleaf, rleaf in zip(eghost, edata,
+                                               self._wire["eref"][0]):
+                    x = self._enc1(oleaf[lrow])
+                    rleaf[lrow] = x
+                    for rw in rows:
+                        gleaf[rw] = x
+            else:
+                for gleaf, oleaf in zip(eghost, edata):
+                    gleaf[row] = oleaf[lrow]
         b = self.eghost_slot[key]
         return self.e_loc + owner * self.EB + b
 
@@ -665,6 +800,9 @@ class _DistPatcher:
             self.changed.add("gas_send")
         for leaf in edata:
             leaf[lrow] = 0
+        if self._wire is not None and "eref" in self._wire:
+            for rleaf in self._wire["eref"][0]:
+                rleaf[lrow] = 0
 
     def _remove_edge(self, src: int, dst: int, vown, vghost, edata,
                      eghost) -> None:
@@ -687,6 +825,10 @@ class _DistPatcher:
             mrow = int(lay.erow_of[moved_from])
             for leaf in edata:
                 leaf[lrow] = leaf[mrow]
+            if self._wire is not None and "eref" in self._wire:
+                # the EF mirror row moves with its data row
+                for rleaf in self._wire["eref"][0]:
+                    rleaf[lrow] = rleaf[mrow]
             if lay.has_rev:
                 lay.tables["rev_local"][lrow] = -1  # splice re-links twins
                 self.changed.add("rev_local")
@@ -714,8 +856,21 @@ class _DistPatcher:
             if (vid, u) in sg.edge_slot:
                 self._remove_edge(vid, u, vown, vghost, edata, eghost)
         sg.del_vertex(vid)
+        own_row = int(lay.row_of[vid])
         for leaf in vown:
-            leaf[int(lay.row_of[vid])] = 0
+            leaf[own_row] = 0
+        if self._wire is not None:
+            # a dead vertex's mirrors reset to the engine-init zero: a
+            # later re-add of this slot must not inherit stale pending
+            # residual (it would be "delivered" to the wrong vertex)
+            for rleaf in self._wire["vref"][0]:
+                rleaf[own_row] = 0
+            self._wire["cpend"][0][0][own_row] = 0.0
+            if "alast" in self._wire:
+                for al in self._wire["alast"][0]:
+                    al[own_row] = 0
+                for ar in self._wire["aref"][0]:
+                    ar[own_row] = 0
         # release the dead vertex's remote cache lines
         S, B = self.S, self.B
         for grow in self.ghost_rows.pop(vid, []):
@@ -729,6 +884,9 @@ class _DistPatcher:
             self.changed.add("send_mask")
             for gleaf in vghost:
                 gleaf[grow] = 0
+            if self._wire is not None and "aghost" in self._wire:
+                for ag in self._wire["aghost"][0]:
+                    ag[grow] = 0
 
     def _refresh_degrees(self) -> None:
         sg, lay = self.sg, self.engine.layout
@@ -743,10 +901,18 @@ class _DistPatcher:
         lay = engine.layout
         cp = self._checkpoint()
         self.changed = set()
+        self._expanded = False
         vown, vdef = jax.tree.flatten(_host(state.vown))
         vghost, _ = jax.tree.flatten(_host(state.vghost))
         edata, edef = jax.tree.flatten(_host(state.edata))
         eghost, egdef = jax.tree.flatten(_host(state.eghost))
+        self._leaves = {"vghost": vghost, "eghost": eghost}
+        # §3.14 mirror splicing: the EF mirrors ride the same host pass as
+        # the caches and every splice patches both in lockstep
+        self._wire = None
+        if state.wire is not None and engine.wire.uses_delta:
+            self._wire = {k: jax.tree.flatten(_host(v))
+                          for k, v in state.wire.items()}
         prio = np.asarray(state.prio).copy()
         touched = np.zeros(sg.n_cap, bool)
         new_pairs: List[Tuple[int, int]] = []
@@ -755,29 +921,62 @@ class _DistPatcher:
             for cmd in batch:
                 if isinstance(cmd, AddVertex):
                     vid = sg.add_vertex(cmd.vid)
-                    _write_row(vown, int(lay.row_of[vid]),
-                               _leaf_rows(cmd.data, len(vown)))
+                    rows = _leaf_rows(cmd.data, len(vown))
+                    own_row = int(lay.row_of[vid])
+                    _write_row(vown, own_row, rows)
+                    if self._wire is not None and rows is not None:
+                        for val, rleaf in zip(rows, self._wire["vref"][0]):
+                            rleaf[own_row] = self._enc1(val)
                     touched[vid] = True
                 elif isinstance(cmd, AddEdge):
                     slot = sg.add_edge(cmd.src, cmd.dst)
-                    _write_row(edata, int(lay.erow_of[slot]),
-                               _leaf_rows(cmd.data, len(edata)))
+                    rows = _leaf_rows(cmd.data, len(edata))
+                    lrow = int(lay.erow_of[slot])
+                    _write_row(edata, lrow, rows)
+                    if self._wire is not None and "eref" in self._wire \
+                            and rows is not None:
+                        for val, rleaf in zip(rows, self._wire["eref"][0]):
+                            rleaf[lrow] = self._enc1(val)
                     self._splice_edge(slot, vown, vghost, edata, eghost)
                     touched[cmd.src] = touched[cmd.dst] = True
                     new_pairs.append((int(cmd.src), int(cmd.dst)))
                 elif isinstance(cmd, SetVertexData):
                     vid = int(cmd.vid)
                     rows = _leaf_rows(cmd.data, len(vown))
-                    _write_row(vown, int(lay.row_of[vid]), rows)
-                    for grow in self.ghost_rows.get(vid, ()):
-                        _write_row(vghost, grow, rows)
+                    own_row = int(lay.row_of[vid])
+                    _write_row(vown, own_row, rows)
+                    grows = self.ghost_rows.get(vid, ())
+                    if self._wire is not None and rows is not None:
+                        # owner takes the exact value; caches and the vref
+                        # mirror take its wire image, so the residual ships
+                        # as pending delta (never silently dropped)
+                        for val, rleaf, gleaf in zip(
+                                rows, self._wire["vref"][0], vghost):
+                            x = self._enc1(val)
+                            rleaf[own_row] = x
+                            for grow in grows:
+                                gleaf[grow] = x
+                    else:
+                        for grow in grows:
+                            _write_row(vghost, grow, rows)
                     touched[vid] = True
                 elif isinstance(cmd, SetEdgeData):
                     slot = sg.slot_of(cmd.src, cmd.dst)
                     rows = _leaf_rows(cmd.data, len(edata))
-                    _write_row(edata, int(lay.erow_of[slot]), rows)
-                    for grow in self.eghost_rows.get(slot, ()):
-                        _write_row(eghost, grow, rows)
+                    lrow = int(lay.erow_of[slot])
+                    _write_row(edata, lrow, rows)
+                    egrows = self.eghost_rows.get(slot, ())
+                    if self._wire is not None and "eref" in self._wire \
+                            and rows is not None:
+                        for val, rleaf, gleaf in zip(
+                                rows, self._wire["eref"][0], eghost):
+                            x = self._enc1(val)
+                            rleaf[lrow] = x
+                            for grow in egrows:
+                                gleaf[grow] = x
+                    else:
+                        for grow in egrows:
+                            _write_row(eghost, grow, rows)
                     touched[cmd.src] = touched[cmd.dst] = True
                 elif isinstance(cmd, DelEdge):
                     touched[int(cmd.src)] = touched[int(cmd.dst)] = True
@@ -802,9 +1001,29 @@ class _DistPatcher:
         except BaseException:
             self._restore(cp)  # a batch applies atomically or not at all
             raise
+        finally:
+            self._leaves = None
         if new_colors is not None:
             engine.colors = new_colors  # table rollback covers the rest
         self._refresh_degrees()
+        # the has-cacher masks are derived tables (which owned rows some
+        # remote machine caches — the delta wire's dirtiness gate reads
+        # them); recompute whenever the send tables or slab strides moved
+        if self._expanded or self.changed & {"send_idx", "send_mask"}:
+            vhas = np.zeros(self.S * self.n_loc, bool)
+            ent = np.nonzero(lay.tables["send_mask"])[0]
+            vhas[(ent // (self.S * lay.budget)) * self.n_loc
+                 + lay.tables["send_idx"][ent]] = True
+            lay.tables["vhas_cacher"] = vhas
+            self.changed.add("vhas_cacher")
+        if lay.has_rev and (self._expanded
+                            or self.changed & {"esend_idx", "esend_mask"}):
+            ehas = np.zeros(self.S * self.e_loc, bool)
+            ent = np.nonzero(lay.tables["esend_mask"])[0]
+            ehas[(ent // (self.S * lay.e_budget)) * self.e_loc
+                 + lay.tables["esend_idx"][ent]] = True
+            lay.tables["ehas_cacher"] = ehas
+            self.changed.add("ehas_cacher")
 
         # re-seed exactly the touched scopes, in global vertex space, then
         # map onto the machine-major priority rows
@@ -819,14 +1038,25 @@ class _DistPatcher:
                              0.0).astype(np.float32)
         prio[ok] = prio_host[lay.own_gid[ok]]
 
-        engine.refresh_tables(sorted(self.changed))
+        if self._expanded:
+            # slab shapes changed: re-upload every table and rebuild the
+            # jitted step (one retrace); within-slack batches never get
+            # here and stay zero-recompile
+            engine._finalize()
+        else:
+            engine.refresh_tables(sorted(self.changed))
         put = lambda leaves, tdef: jax.tree.map(
             lambda x: jax.device_put(jnp.asarray(x), engine._shard),
             jax.tree.unflatten(tdef, leaves))
-        return state.replace(
+        out = state.replace(
             vown=put(vown, vdef), vghost=put(vghost, vdef),
             edata=put(edata, edef), eghost=put(eghost, egdef),
             prio=jax.device_put(jnp.asarray(prio), engine._shard))
+        if self._wire is not None:
+            out = out.replace(wire={
+                k: put(lv, td) for k, (lv, td) in self._wire.items()})
+            self._wire = None
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -935,19 +1165,72 @@ def total_updates(engine, state) -> int:
     return int(state.total_updates)
 
 
+def _wire_pending_mask(engine, state) -> Optional[np.ndarray]:
+    """Global-vid mask of rows whose §3.14 mirrors still carry nonzero
+    pending residual (deltas owed to some cache: ``vown−vref``, ``cpend``,
+    ``alast−aref``, and the endpoints of edges with ``edata−eref``
+    pending).  A rebuild delivers the *data* exactly (init gathers owner
+    rows into every cache), but the scheduling signal of the unshipped
+    contribs would be silently lost — deferred top-k deltas must not be
+    orphaned by a regrow, so their scopes re-seed."""
+    if not isinstance(engine, ShardEngineBase) \
+            or getattr(state, "wire", None) is None:
+        return None
+    sg, lay = engine._stream_graph, engine.layout
+    w = jax.tree.map(np.asarray, state.wire)
+    wtol = engine.wire.resolve_tol(engine.tolerance)
+
+    def rows_gap(a, b):
+        out = None
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+            d = np.abs(np.asarray(x, np.float32)
+                       - np.asarray(y, np.float32))
+            d = d.reshape(len(d), -1).max(axis=1)
+            out = d if out is None else np.maximum(out, d)
+        return out
+
+    dirty = rows_gap(jax.tree.map(np.asarray, state.vown), w["vref"]) > wtol
+    dirty |= np.abs(w["cpend"]) > wtol
+    if "alast" in w:
+        dirty |= rows_gap(w["alast"], w["aref"]) > wtol
+    mask = np.zeros(sg.n_cap, bool)
+    sel = (lay.own_gid >= 0) & dirty
+    mask[lay.own_gid[sel]] = True
+    if "eref" in w:
+        epend = rows_gap(jax.tree.map(np.asarray, state.edata),
+                         w["eref"]) > wtol
+        slots = lay.erow_gid[np.nonzero(epend)[0]]
+        slots = slots[slots >= 0]
+        mask[sg.senders[slots]] = True
+        mask[sg.receivers[slots]] = True
+    return mask & sg.vertex_active
+
+
 def regrow_engine(engine, state, *, slack: Optional[SlackConfig] = None,
                   in_capacity: Optional[np.ndarray] = None,
                   n_cap: Optional[int] = None):
     """Compacts the live state and rebuilds the engine with fresh slack —
     re-partitioning through the existing atom path (``place_vertices``
     inside the dist engine constructor).  Converged priorities carry over,
-    so reconvergence stays incremental across the rebuild.
+    so reconvergence stays incremental across the rebuild; under a lossy
+    wire the scopes of rows with pending (unshipped) residual re-seed, so
+    deferred top-k deltas are never orphaned by the rebuild.
 
     Returns ``(engine, state)``; the old pair is dead.
     """
     cfg = dict(engine._stream_config)
     graph = readback(engine, state)
-    prio = stream_prio(engine, state)[: graph.structure.n_vertices]
+    prio_full = stream_prio(engine, state)
+    pend = _wire_pending_mask(engine, state)
+    if pend is not None and pend.any():
+        sg = engine._stream_graph
+        bumped, _ = reseed_scopes(
+            jnp.asarray(prio_full), pend, sg.senders, sg.receivers,
+            sg.edge_mask, sg.n_cap,
+            _masked_initial_prio(engine.program, sg))
+        prio_full = np.where(sg.vertex_active, np.asarray(bumped),
+                             0.0).astype(np.float32)
+    prio = prio_full[: graph.structure.n_vertices]
     slack = slack or cfg["slack"]
     if cfg["kind"] == "local":
         new_engine, new_state = make_local_engine(

@@ -72,7 +72,14 @@ def restore_cut(engine, cut):
     rows become the data graph and every active vertex reschedules
     (inactive capacity rows stay at zero priority — the plain
     ``restore_engine_state`` would reschedule them too and stall
-    convergence forever)."""
+    convergence forever).
+
+    Under a lossy wire this is also where the §3.14 error-feedback mirrors
+    reconstruct: ``init`` re-seeds them deterministically from the cut
+    rows (owner mirror and every cache gather identical values, nothing
+    pending), and the suffix replay patches them in lockstep with each
+    splice — encode/decode is deterministic, so crash ≡ uninterrupted
+    holds under a quantized wire exactly as it does for f32."""
     g = engine.graph.replace(
         vertex_data=jax.tree.map(lambda s, _: s, cut.saved_v,
                                  engine.graph.vertex_data),

@@ -246,11 +246,16 @@ class TestWireProtocol:
 
 
 @needs4
-def test_streaming_rejects_quantized_wire():
+def test_streaming_accepts_quantized_wire():
+    # the PR-8 construction gate is gone: stream/ingest.py patches the
+    # error-feedback mirrors in lockstep with every splice (DESIGN §3.14),
+    # so quantized wire on streaming engines is fully supported — deep
+    # equivalence coverage lives in tests/test_stream_wire.py
     from repro.dist.engine import DistributedEngine
     from repro.stream import make_dist_engine
     prog, g = _pagerank(60, 0)
-    with pytest.raises(ValueError, match="streaming"):
-        make_dist_engine(prog, g, _mesh(4), engine_cls=DistributedEngine,
-                         tolerance=1e-6,
-                         wire=WireConfig(codec="int8", top_k=4))
+    eng, sg = make_dist_engine(prog, g, _mesh(4), engine_cls=DistributedEngine,
+                               tolerance=1e-6,
+                               wire=WireConfig(codec="int8", top_k=4))
+    state, _ = eng.run(eng.init(), max_steps=500)
+    assert float(np.max(state.prio)) <= 1e-6
