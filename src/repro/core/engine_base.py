@@ -363,6 +363,7 @@ class Engine:
         gas_interpret: Optional[bool] = None,
         stream_tables: Optional[Dict[str, Any]] = None,
         residual_dtype=None,
+        obs=None,
     ):
         self.program = program
         self.structure = graph.structure
@@ -390,6 +391,13 @@ class Engine:
             self.set_stream_tables(stream_tables)
             if self.use_fused:
                 self._stream_fused_meta = self._build_stream_fused()
+        # Telemetry (DESIGN §3.15): pure host-side config — nothing below
+        # reads it while building ``_step``, so the jaxpr is byte-identical
+        # with obs on/off (tests/test_obs.py asserts it).
+        if obs is None:
+            from repro.obs.config import ObsConfig
+            obs = ObsConfig()
+        self.obs = obs
         self._trace_count = 0  # bumped at trace time; delta tests assert 0 new
         self._jit_step = jax.jit(self._step)
 
@@ -552,6 +560,10 @@ class Engine:
         state: EngineState,
         max_steps: int = 100,
         trace_fn: Optional[Callable[[EngineState], Dict[str, float]]] = None,
+        *,
+        trace_every: Optional[int] = None,
+        supervisor=None,
+        session=None,
     ) -> Tuple[EngineState, List[Dict[str, float]]]:
         """Host loop: step until the scheduler reports itself empty
         (default: max prio ≤ tol).
@@ -559,19 +571,47 @@ class Engine:
         Termination here is the bulk-synchronous collapse of the paper's
         distributed consensus algorithm [26]: "all schedulers empty" is a
         global reduction evaluated at the step barrier (DESIGN.md §3.7).
+
+        Trace rows follow the canonical schema (obs.metrics.METRICS_SCHEMA
+        — ``step``/``updates``/``edges_touched``/``residual_max``/
+        ``backlog`` plus structurally-zero traffic fields), with the old
+        ``total_updates`` key kept as a deprecated alias; ``trace_fn``
+        extras are merged on top.  Rows are recorded lazily as device
+        scalars and fetched with **one** host transfer every
+        ``trace_every`` steps (default: ``obs.trace_every``, i.e. 1 — the
+        pre-§3.15 behavior forced a blocking sync per step to ``int()``
+        each field).  A ``supervisor`` (obs.Supervisor) observes after
+        every step — for a ``WorkStealingScheduler`` it fires
+        ``steal_backlog`` when per-queue update counters skew; a
+        ``session`` (obs.ObsSession) additionally receives rows, events,
+        and timeline spans.
         """
-        trace: List[Dict[str, float]] = []
+        from repro.obs.metrics import RowCollector, lazy_local_row
+        every = int(trace_every) if trace_every is not None \
+            else self.obs.trace_every
+        want_rows = (trace_fn is not None or self.obs.enabled
+                     or session is not None)
+        col = RowCollector(every, session=session,
+                           legacy=self.obs.legacy_aliases)
+        tl = session.timeline if session is not None else None
         for _ in range(max_steps):
             if bool(self.scheduler.done(state.sched, state.prio)):
                 break
+            t0 = tl.now() if tl is not None else 0.0
             state = self.step(state)
-            if trace_fn is not None:
-                rec = dict(trace_fn(state))
-                rec.setdefault("step", int(state.step_index))
-                rec.setdefault("total_updates", int(state.total_updates))
-                rec.setdefault("edges_touched", int(state.edges_touched))
-                trace.append(rec)
-        return state, trace
+            if supervisor is not None:
+                _, state = supervisor.observe(self, state)
+            if tl is not None:
+                tl.span("step", t0, tl.now(), track="local", cat="step")
+            if want_rows:
+                row = lazy_local_row(state, self.tolerance,
+                                     self.obs.residual_quantiles)
+                row["backlog"] = self.scheduler.backlog(state.sched,
+                                                        state.prio)
+                col.push(row,
+                         extra=dict(trace_fn(state)) if trace_fn else None)
+        col.drain()
+        return state, col.rows
 
     def run_while(self, state: EngineState, max_steps: int = 100) -> EngineState:
         """Fully-jitted driver (used for lowering / production runs).

@@ -298,6 +298,12 @@ class Scheduler:
     def done(self, sched: Pytree, prio: jnp.ndarray) -> jnp.ndarray:
         return jnp.max(prio) <= self.tolerance
 
+    def backlog(self, sched: Pytree, prio: jnp.ndarray) -> jnp.ndarray:
+        """Scheduled-set size |T| (vertices with prio > tol) — the
+        ``backlog`` field of the telemetry schema (DESIGN §3.15); a lazy
+        device scalar, NaN-safe (poisoned priorities compare False)."""
+        return jnp.sum(scheduled_mask(prio, self.tolerance))
+
     # -- shared arbitration ----------------------------------------------------
     def _arbitrate(self, selected: jnp.ndarray, rank: jnp.ndarray
                    ) -> jnp.ndarray:

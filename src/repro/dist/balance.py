@@ -152,9 +152,14 @@ class StragglerMonitor:
     a pure host-side comparison — the same observation point as the
     ``Watchdog``, with a lower threshold and a milder remedy."""
 
-    def __init__(self, n_machines: int, *, skew: int = 4):
+    def __init__(self, n_machines: int, *, skew: int = 4,
+                 patience: int = 1):
         self.n_machines = int(n_machines)
         self.skew = int(skew)
+        self.patience = int(patience)
+        self._streak = np.zeros(self.n_machines, np.int64)
+        self._last: Optional[np.ndarray] = None
+        self.flagged: set = set()
 
     def laggards(self, beats) -> List[int]:
         beats = np.asarray(beats).reshape(-1)
@@ -165,3 +170,37 @@ class StragglerMonitor:
         lead = int(beats.max())
         return [m for m in range(self.n_machines)
                 if lead - int(beats[m]) >= self.skew]
+
+    def observe(self, beats, exclude: Sequence[int] = ()
+                ) -> List[Tuple[str, int]]:
+        """Stateful straggler detection for the control loop (obs §3.15):
+        flags machine m ("straggler", m) after ``patience`` consecutive
+        observations where m is ``skew`` beats behind the lead *and its
+        own counter froze* — beats are cumulative, so a recovered
+        machine stays behind in absolute skew forever; progress, not
+        absolute position, is what clears it ("recovered", m).  The
+        first observation only baselines.  ``exclude`` masks machines
+        another authority already owns (e.g. watchdog-declared dead)."""
+        beats = np.asarray(beats).reshape(-1).astype(np.int64)
+        lag = set(self.laggards(beats)) - set(exclude)
+        if self._last is None:
+            self._last = beats.copy()
+            return []
+        advanced = beats > self._last
+        self._last = beats.copy()
+        events: List[Tuple[str, int]] = []
+        for m in range(self.n_machines):
+            if m in self.flagged:
+                if advanced[m]:
+                    self.flagged.discard(m)
+                    self._streak[m] = 0
+                    events.append(("recovered", m))
+                continue
+            if m in lag and not advanced[m]:
+                self._streak[m] += 1
+                if self._streak[m] >= self.patience:
+                    self.flagged.add(m)
+                    events.append(("straggler", m))
+            else:
+                self._streak[m] = 0
+        return events

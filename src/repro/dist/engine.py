@@ -380,6 +380,7 @@ class ShardEngineBase:
         atom_of: Optional[np.ndarray] = None,
         atom_placement: Optional[np.ndarray] = None,
         machine_of: Optional[np.ndarray] = None,
+        obs=None,
     ):
         self.program = program
         self.graph = graph
@@ -431,6 +432,13 @@ class ShardEngineBase:
         # silent-failure model (dist/faults.py sets these).
         self.layout.tables["stall"] = np.zeros(S, bool)
         self._trace_count = 0  # bumped at trace time; delta tests assert 0
+        # Telemetry (DESIGN §3.15): host-side only — never read while
+        # building ``_make_step``, so the step jaxpr is byte-identical
+        # with obs on/off (tests/test_obs.py asserts the strings).
+        if obs is None:
+            from repro.obs.config import ObsConfig
+            obs = ObsConfig()
+        self.obs = obs
 
         # Quantized wire (DESIGN §3.14): codec + top-k residual shipping.
         # Streaming engines are fully supported: stream/ingest.py patches
@@ -536,7 +544,7 @@ class ShardEngineBase:
         return dict(tolerance=self.tolerance, sync_ops=self.sync_ops,
                     use_fused=self._use_fused,
                     gas_interpret=self._gas_interpret, wire=self.wire,
-                    overlap=self.overlap)
+                    overlap=self.overlap, obs=self.obs)
 
     def clone_for_placement(self, graph: DataGraph, mesh,
                             machine_of: np.ndarray, *,
@@ -1147,28 +1155,68 @@ class ShardEngineBase:
     def step(self, state: DistState) -> DistState:
         return self._jit_step(state, self._tables)
 
-    def run(self, state: DistState,
-            max_steps: int = 100) -> Tuple[DistState, "list[dict]"]:
-        trace = []
+    def run(self, state: DistState, max_steps: int = 100, *,
+            trace_every: Optional[int] = None,
+            supervisor=None,
+            session=None) -> Tuple[DistState, "list[dict]"]:
+        """Host driver loop.  Trace rows follow the canonical telemetry
+        schema (obs.metrics.METRICS_SCHEMA): ``step``/``updates``/
+        ``residual_max``/``backlog``/``wire_backlog``/
+        ``traffic_{rows,bytes}_{v,e,r}``; the pre-§3.15 keys
+        (``ghost_rows``, ``edge_bytes``, ``rank_rows``, ...) remain as
+        deprecated aliases for one release.  Rows are lazy device
+        scalars, fetched with one host transfer per ``trace_every``
+        steps (default ``obs.trace_every``); the per-step sync that
+        remains is the NaN-safe termination check, which the control
+        loop needs anyway.
+
+        A ``supervisor`` (obs.Supervisor) observes after every step and
+        may *rebuild* the engine (migrate_leave/join, shed_atoms) — the
+        loop continues on the returned engine, the final one is at
+        ``supervisor.engine``, and the loop keeps stepping a converged
+        state while ``supervisor.pending_work()`` (e.g. an offered
+        machine still to join).  A ``session`` (obs.ObsSession) receives
+        rows, supervisor events, and step/marker-wave timeline spans.
+        """
+        from repro.obs.metrics import RowCollector, lazy_dist_row
+        from repro.obs.timeline import step_spans
+        eng = self
+        every = int(trace_every) if trace_every is not None \
+            else self.obs.trace_every
+        col = RowCollector(every, session=session,
+                           legacy=self.obs.legacy_aliases)
+        tl = session.timeline if session is not None else None
+        quant = self.obs.residual_quantiles if self.obs.enabled else None
+        steps_done = 0
         for _ in range(max_steps):
             # under a quantized wire, converged priorities are not enough:
             # deferred/top-k deltas still owed to remote caches (the wire
-            # backlog) must drain first — deferral is never a drop
-            if (float(jnp.max(state.prio)) <= self.tolerance
-                    and self._wire_backlog(state) == 0):
+            # backlog) must drain first — deferral is never a drop.
+            # NaN residuals — a dead machine's poisoned shard — must hold
+            # the loop open for the supervisor to heal, and XLA's
+            # reduce_max does NOT reliably propagate NaN, so map them to
+            # +inf before reducing
+            if (float(jnp.max(jnp.where(jnp.isnan(state.prio), jnp.inf,
+                                        state.prio))) <= eng.tolerance
+                    and eng._wire_backlog(state) == 0
+                    and (supervisor is None
+                         or not supervisor.pending_work())):
                 break
-            state = self.step(state)
-            trace.append({
-                "step": int(state.step_index),
-                "updates": int(jnp.sum(state.update_count)),
-                "ghost_rows": int(jnp.sum(state.traffic_v)),
-                "ghost_bytes": int(jnp.sum(state.traffic_bytes_v)),
-                "edge_rows": int(jnp.sum(state.traffic_e)),
-                "edge_bytes": int(jnp.sum(state.traffic_bytes_e)),
-                "rank_rows": int(jnp.sum(state.traffic_r)),
-                "rank_bytes": int(jnp.sum(state.traffic_bytes_r)),
-            })
-        return state, trace
+            waving = state.snap is not None
+            t0 = tl.now() if tl is not None else 0.0
+            state = eng.step(state)
+            if supervisor is not None:
+                eng, state = supervisor.observe(eng, state)
+            if tl is not None:
+                step_spans(tl, t0, tl.now(), steps_done,
+                           colors=getattr(eng, "num_colors", 0),
+                           overlap=eng.overlap, marker_wave=waving,
+                           engine=type(eng).__name__)
+            col.push(lazy_dist_row(state, eng.tolerance, quant,
+                                   beats=eng.obs.enabled))
+            steps_done += 1
+        col.drain()
+        return state, col.rows
 
     def _wire_backlog(self, state: DistState) -> int:
         if state.wire is None:

@@ -69,7 +69,12 @@ class Watchdog:
             if self.state[m] == DEAD:
                 continue  # dead is sticky until mark_live
             b = int(beats[m])
-            if self._last[m] is None or b != self._last[m]:
+            # beats are monotone counters: only an *advance* is progress.
+            # A counter that went backwards (a kill zeroes the machine's
+            # state block) is corruption, not a heartbeat — fall through
+            # to the missed path, keeping the pre-reset baseline so the
+            # frozen counter keeps counting as missed
+            if self._last[m] is None or b > self._last[m]:
                 if self.state[m] == SUSPECT:
                     events.append(("reinstated", m))
                 self._last[m] = b
@@ -103,3 +108,9 @@ class Watchdog:
 
     def dead(self) -> List[int]:
         return [m for m in range(self.n_machines) if self.state[m] == DEAD]
+
+    def healthy(self) -> bool:
+        """Every machine LIVE — the gate the Supervisor (obs §3.15) uses
+        before starting marker waves or executing a queued join: both
+        need all machines forwarding."""
+        return all(s == LIVE for s in self.state)

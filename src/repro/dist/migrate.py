@@ -176,6 +176,11 @@ def _rebuild(engine: ShardEngineBase, mesh, placement_new: np.ndarray,
         graph2, mesh, placement_new[atom_of], atom_of=atom_of,
         atom_placement=placement_new)
     _carry_stall(engine, new_engine, keep_machines)
+    # telemetry rides the rebuild: the obs config travels via
+    # _clone_kwargs; an attached session (obs.attach_session) must move
+    # too or migration would silence the timeline mid-run
+    if getattr(engine, "_obs_session", None) is not None:
+        new_engine._obs_session = engine._obs_session
     state = new_engine.init(initial_prio=np.asarray(prio, np.float32))
     return new_engine, state
 

@@ -1,0 +1,37 @@
+"""Exporters: Chrome-trace/Perfetto JSON and a JSONL event log
+(DESIGN.md §3.15).  ``chrome_trace`` output loads directly in
+https://ui.perfetto.dev or chrome://tracing."""
+from __future__ import annotations
+
+import json
+from typing import Any, Dict, Iterable, List, Union
+
+from repro.obs.timeline import Timeline
+
+
+def chrome_trace(timeline: Timeline,
+                 metadata: Dict[str, Any] = None) -> Dict[str, Any]:
+    """The Chrome trace event container for a timeline (JSON object
+    format: traceEvents + displayTimeUnit + free-form metadata)."""
+    return {
+        "traceEvents": timeline.metadata_events() + list(timeline.events),
+        "displayTimeUnit": "ms",
+        "otherData": dict(metadata or {}),
+    }
+
+
+def write_chrome_trace(path: str, timeline: Timeline,
+                       metadata: Dict[str, Any] = None) -> str:
+    with open(path, "w") as f:
+        json.dump(chrome_trace(timeline, metadata), f)
+    return path
+
+
+def write_events_jsonl(path: str,
+                       events: Iterable[Dict[str, Any]]) -> str:
+    """One JSON object per line — the machine-grep'able event log
+    (supervisor actions, watchdog transitions, metric rows)."""
+    with open(path, "w") as f:
+        for ev in events:
+            f.write(json.dumps(ev) + "\n")
+    return path

@@ -1,0 +1,73 @@
+"""The per-run telemetry container (DESIGN.md §3.15).
+
+An ``ObsSession`` is what a driver (engine ``run``, the Supervisor, a
+benchmark) writes into: drained metric rows, a structured event log,
+and — when ``ObsConfig.timeline`` is on — a ``Timeline`` of host spans.
+It is deliberately dumb: no I/O, no device access; exporters
+(``obs/export.py``) serialize it after the run."""
+from __future__ import annotations
+
+from contextlib import nullcontext
+from typing import Any, Dict, List, Optional
+
+from repro.obs.config import ObsConfig
+from repro.obs.metrics import MetricsFrame
+from repro.obs.timeline import Timeline
+
+
+class ObsSession:
+    def __init__(self, config: Optional[ObsConfig] = None):
+        self.config = config if config is not None \
+            else ObsConfig(enabled=True)
+        self.rows: List[Dict[str, Any]] = []
+        self.events: List[Dict[str, Any]] = []
+        self.timeline: Optional[Timeline] = (
+            Timeline() if self.config.timeline else None)
+        self.drains = 0  # host-transfer batches (RowCollector drains)
+
+    # -- metrics ----------------------------------------------------------
+    def add_rows(self, rows: List[Dict[str, Any]]) -> None:
+        self.rows.extend(rows)
+        self.drains += 1
+
+    def frames(self) -> List[MetricsFrame]:
+        return [MetricsFrame.from_row(r) for r in self.rows]
+
+    # -- events -----------------------------------------------------------
+    def event(self, kind: str, **data: Any) -> Dict[str, Any]:
+        """Appends a structured event (JSONL-able) and mirrors it as a
+        timeline instant when tracing is on."""
+        ev = {"kind": kind, **data}
+        if self.timeline is not None:
+            ev.setdefault("t", self.timeline.now())
+            self.timeline.instant(kind, args=data)
+        self.events.append(ev)
+        return ev
+
+    def span(self, name: str, **kw):
+        """Timeline span context manager; a no-op when tracing is off —
+        instrumentation sites never need to branch."""
+        if self.timeline is None:
+            return nullcontext()
+        return self.timeline.spanning(name, **kw)
+
+
+def attach_session(engine, session: Optional[ObsSession]) -> None:
+    """Pins a session to an engine so out-of-loop instrumentation sites
+    (``apply_delta``/``regrow_engine`` splices, migration rebuilds) can
+    span into the same timeline the run loop writes.  Migration carries
+    the attachment to the rebuilt engine (dist/migrate.py)."""
+    engine._obs_session = session
+
+
+def engine_session(engine) -> Optional[ObsSession]:
+    return getattr(engine, "_obs_session", None)
+
+
+def engine_span(engine, name: str, **kw):
+    """``session.span`` through an engine attachment; no-op context
+    manager when nothing is attached."""
+    ses = engine_session(engine)
+    if ses is None:
+        return nullcontext()
+    return ses.span(name, **kw)

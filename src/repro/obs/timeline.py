@@ -1,0 +1,111 @@
+"""Host-side timeline tracing (DESIGN.md §3.15, layer 2).
+
+Spans are **host-observed** wall-clock intervals around the dispatch of
+jitted work — XLA executes asynchronously, so a ``step`` span measures
+the host loop's view (dispatch + whatever blocking readback the loop
+performs), not device occupancy.  That is the honest observable for a
+driver loop, and it is exactly what the Supervisor's remediation
+latency is measured against.  Sub-step structure the host cannot time
+directly (per-color phases inside one jitted step) is synthesized as
+equal slices of the measured step and flagged ``logical: True`` in the
+event args so a reader never mistakes it for a measurement.
+
+Export (``obs/export.py``) emits the Chrome trace event format, which
+Perfetto and chrome://tracing both load.
+"""
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+from typing import Any, Dict, List, Optional
+
+
+class Timeline:
+    """An append-only list of Chrome-trace events with a private epoch;
+    ``ts``/``dur`` are microseconds since construction."""
+
+    def __init__(self):
+        self.events: List[Dict[str, Any]] = []
+        self._t0 = time.perf_counter()
+        self._tracks: Dict[str, int] = {}
+
+    def now(self) -> float:
+        """Seconds since the timeline epoch."""
+        return time.perf_counter() - self._t0
+
+    def _tid(self, track: str) -> int:
+        if track not in self._tracks:
+            self._tracks[track] = len(self._tracks)
+        return self._tracks[track]
+
+    def span(self, name: str, t0: float, t1: float, *, track: str = "host",
+             cat: str = "step", args: Optional[Dict[str, Any]] = None
+             ) -> None:
+        """A complete ("X") event covering ``[t0, t1]`` (timeline
+        seconds, e.g. from ``now()``)."""
+        self.events.append({
+            "name": name, "cat": cat, "ph": "X",
+            "ts": t0 * 1e6, "dur": max(t1 - t0, 0.0) * 1e6,
+            "pid": 0, "tid": self._tid(track), "args": dict(args or {}),
+        })
+
+    @contextmanager
+    def spanning(self, name: str, *, track: str = "host", cat: str = "step",
+                 args: Optional[Dict[str, Any]] = None):
+        t0 = self.now()
+        try:
+            yield
+        finally:
+            self.span(name, t0, self.now(), track=track, cat=cat, args=args)
+
+    def instant(self, name: str, *, track: str = "events", cat: str = "event",
+                args: Optional[Dict[str, Any]] = None) -> None:
+        self.events.append({
+            "name": name, "cat": cat, "ph": "i", "s": "p",
+            "ts": self.now() * 1e6,
+            "pid": 0, "tid": self._tid(track), "args": dict(args or {}),
+        })
+
+    def counter(self, name: str, values: Dict[str, float], *,
+                track: str = "counters") -> None:
+        self.events.append({
+            "name": name, "cat": "counter", "ph": "C",
+            "ts": self.now() * 1e6,
+            "pid": 0, "tid": self._tid(track),
+            "args": {k: float(v) for k, v in values.items()},
+        })
+
+    def metadata_events(self) -> List[Dict[str, Any]]:
+        """Thread-name metadata rows so Perfetto labels the tracks."""
+        return [{"name": "thread_name", "ph": "M", "pid": 0, "tid": tid,
+                 "args": {"name": track}}
+                for track, tid in self._tracks.items()]
+
+
+def step_spans(tl: Timeline, t0: float, t1: float, step: int, *,
+               colors: int = 0, overlap: bool = False,
+               marker_wave: bool = False, engine: str = "dist") -> None:
+    """The per-step span family the engine run loops emit: the step
+    itself, an optional marker-wave child, and per-color phase slices
+    (``logical: True`` — synthesized, see module docstring) with the
+    ghost exchange of color c-1 marked in-flight during color c when
+    the double-buffered overlap is on."""
+    tl.span(f"step {step}", t0, t1, track=engine, cat="step",
+            args={"step": step})
+    if marker_wave:
+        tl.span("marker wave", t0, t1, track="snapshot", cat="snapshot",
+                args={"step": step, "logical": True})
+    if colors > 1:
+        w = (t1 - t0) / colors
+        for c in range(colors):
+            a, b = t0 + c * w, t0 + (c + 1) * w
+            tl.span(f"phase c{c}", a, b, track=f"{engine}/phases",
+                    cat="phase", args={"step": step, "color": c,
+                                       "logical": True})
+            if overlap and c > 0:
+                # color c-1's encoded packet is on the wire while color
+                # c computes — the §3.14 double-buffer
+                tl.span(f"ghost pkt c{c - 1} (in flight)", a, b,
+                        track=f"{engine}/wire", cat="exchange",
+                        args={"step": step, "color": c - 1,
+                              "deferred": True, "logical": True})

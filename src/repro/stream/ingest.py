@@ -1089,7 +1089,10 @@ def apply_delta(engine, state, batch: DeltaBatch, *, record: bool = True):
         engine._stream_patcher = (
             _DistPatcher(engine) if isinstance(engine, ShardEngineBase)
             else _LocalPatcher(engine))
-    new_state = engine._stream_patcher.apply(state, batch)
+    from repro.obs.session import engine_span
+    with engine_span(engine, "apply_delta", track="stream", cat="delta",
+                     args={"commands": len(batch)}):
+        new_state = engine._stream_patcher.apply(state, batch)
     journal = getattr(engine, "_stream_journal", None)
     if journal is not None and record:
         engine._stream_offset = journal.append(batch) + 1
@@ -1218,6 +1221,13 @@ def regrow_engine(engine, state, *, slack: Optional[SlackConfig] = None,
 
     Returns ``(engine, state)``; the old pair is dead.
     """
+    from repro.obs.session import engine_span
+    with engine_span(engine, "regrow", track="stream", cat="delta"):
+        return _regrow_engine(engine, state, slack=slack,
+                              in_capacity=in_capacity, n_cap=n_cap)
+
+
+def _regrow_engine(engine, state, *, slack, in_capacity, n_cap):
     cfg = dict(engine._stream_config)
     graph = readback(engine, state)
     prio_full = stream_prio(engine, state)
@@ -1245,8 +1255,9 @@ def regrow_engine(engine, state, *, slack: Optional[SlackConfig] = None,
             tolerance=cfg["tolerance"], slack=slack,
             sync_ops=cfg["sync_ops"], initial_prio=prio,
             in_capacity=in_capacity, n_cap=n_cap, **cfg["kwargs"])
-    # the journal outlives the layout: the event log is engine-agnostic
-    for attr in ("_stream_journal", "_stream_offset"):
+    # the journal outlives the layout: the event log is engine-agnostic;
+    # an attached telemetry session rides along the same way
+    for attr in ("_stream_journal", "_stream_offset", "_obs_session"):
         if hasattr(engine, attr):
             setattr(new_engine, attr, getattr(engine, attr))
     return new_engine, new_state

@@ -259,3 +259,70 @@ def test_streaming_accepts_quantized_wire():
                                wire=WireConfig(codec="int8", top_k=4))
     state, _ = eng.run(eng.init(), max_steps=500)
     assert float(np.max(state.prio)) <= 1e-6
+
+
+# ---------------------------------------------------------------------------
+# traffic accounting under overlap (obs satellite; DESIGN §3.14/§3.15)
+# ---------------------------------------------------------------------------
+
+def _cachers_per_row(eng):
+    """[S*n_loc] i64: how many remote caches each own row feeds — the
+    number of send-table slots sourcing it."""
+    lay = eng.layout
+    S, B, n_loc = lay.n_machines, lay.budget, lay.n_loc
+    sm = np.asarray(lay.tables["send_mask"]).astype(bool)
+    si = np.asarray(lay.tables["send_idx"])
+    ent = np.nonzero(sm)[0]
+    row = (ent // (S * B)) * n_loc + si[ent]
+    return np.bincount(row, minlength=S * n_loc)
+
+
+def _vertex_traffic_oracle(eng, state):
+    """Exact row count the f32 wire must report: every executed update
+    ships its row to each of its cachers exactly once — deferred packets
+    are counted at issue, the last color never defers (no trailing-flush
+    double count), and marker rows ride the snapshot channel, never
+    ``traffic_v``."""
+    uc = np.asarray(jax.device_get(state.update_count), np.int64)
+    return int((uc * _cachers_per_row(eng)).sum())
+
+
+@needs4
+class TestOverlapTrafficOracle:
+    @pytest.mark.parametrize("overlap", [False, True],
+                             ids=["in-phase", "overlap"])
+    def test_rows_counted_exactly_once(self, overlap):
+        from repro.dist.engine import DistributedEngine
+        prog, g = _pagerank(80, 3)
+        eng = DistributedEngine(prog, g, _mesh(4), tolerance=1e-8,
+                                method="bfs", overlap=overlap)
+        state, _ = eng.run(eng.init(), max_steps=600)
+        assert float(jnp.max(state.prio)) <= 1e-8
+        rows = int(np.asarray(state.traffic_v).sum())
+        assert rows == _vertex_traffic_oracle(eng, state)
+        # bytes are rows x the static payload size (PageRank f32 wire:
+        # rank + contrib = 8 bytes), so under-/over-counted rows would
+        # show up here too
+        assert int(np.asarray(state.traffic_bytes_v).sum()) == 8 * rows
+
+    def test_marker_wave_stand_down_keeps_count_exact(self):
+        """Overlap stands down while a snapshot is in flight (§3.10) —
+        those phases ship in-phase and must still be counted exactly
+        once, and the wave's marker rows must not leak into traffic_v."""
+        from repro.dist.engine import DistributedEngine
+        prog, g = _pagerank(80, 3)
+        eng = DistributedEngine(prog, g, _mesh(4), tolerance=1e-8,
+                                method="bfs", overlap=True)
+        state = eng.init()
+        for _ in range(3):
+            state = eng.step(state)
+        state = eng.start_snapshot(state, (0,))
+        while not eng.snapshot_complete(state):
+            state = eng.step(state)
+        assert eng.snapshot_violations(state) == 0
+        state = eng.clear_snapshot(state)
+        state, _ = eng.run(state, max_steps=600)
+        assert float(jnp.max(state.prio)) <= 1e-8
+        rows = int(np.asarray(state.traffic_v).sum())
+        assert rows == _vertex_traffic_oracle(eng, state)
+        assert int(np.asarray(state.traffic_bytes_v).sum()) == 8 * rows
